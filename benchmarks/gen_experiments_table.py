@@ -1,0 +1,49 @@
+"""Emit the EXPERIMENTS.md §Roofline markdown table from dry-run JSONL."""
+import json
+import sys
+
+from benchmarks.roofline_table import load_records
+
+
+def fused_adjust(r):
+    """fused-kernel (Pallas deployment) adjusted memory seconds."""
+    import dataclasses
+    import jax
+    from jax.sharding import AbstractMesh
+    from repro.analysis.variants import adjusted_memory_term
+    from repro.configs.base import SHAPES, get_config
+    from repro.sharding.plan import make_plan
+    if not r.get("traffic_by_tag"):
+        return None
+    shape = (2, 16, 16) if r["mesh"] == "2x16x16" else (16, 16)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    mesh = AbstractMesh(shape, axes,
+                        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    cfg = get_config(r["arch"])
+    plan = make_plan(cfg, mesh)
+    return adjusted_memory_term(r, plan, cfg, SHAPES[r["shape"]])
+
+
+def main(path="results/dryrun2.jsonl"):
+    recs = [r for r in load_records(path) if not r.get("overrides")]
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | peak GiB/dev | useful % | MFU-bound % |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+        if r["status"] == "skipped":
+            print(f"{name} — | — | — | SKIP (full attention @500k) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"{name} ERROR {r.get('error','')[:40]} |")
+            continue
+        t = r["roofline"]
+        peak = (r["memory_analysis"] or {}).get("peak_estimate_bytes", 0) / 2**30
+        print(f"{name} {t['compute_s']:.2f} | {t['memory_s']:.2f} | "
+              f"{t['collective_s']:.2f} | {t['dominant']} | {peak:.1f} | "
+              f"{t['useful_flops_fraction']*100:.0f} | "
+              f"{t['roofline_fraction']*100:.2f} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,88 @@
+"""Real-timing microbenchmarks of the substrate's hot layers (CPU host).
+
+These are the *actual* microbenchmark suite that ElastiBench accelerates for
+this framework: jnp reference vs optimized implementations, timed with the
+calibrated duet harness.  On this CPU host the absolute numbers are not
+TPU-representative; what matters is that the duet + bootstrap machinery
+detects relative differences between two real implementations.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rmit
+from repro.core.controller import ControllerConfig, ElasticController
+from repro.core.duet import DuetRunnable
+from repro.core.results import analyze
+from repro.core.timing import make_timed
+
+
+def _attention_duet(B=1, S=256, H=4, hd=64):
+    from repro.models.attention import attention_chunked, attention_dot
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, S, H, hd), jnp.float32)
+    dot = jax.jit(lambda q, k, v: attention_dot(q, k, v, causal=True))
+    chk = jax.jit(lambda q, k, v: attention_chunked(q, k, v, causal=True, chunk=64))
+    return DuetRunnable(
+        "attention_dot_vs_chunked",
+        make_timed(dot, q, k, v), make_timed(chk, q, k, v))
+
+
+def _ssd_duet(B=1, S=512, H=4, P=32, N=32):
+    from repro.kernels.ref import ssd_ref
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bi = jax.random.normal(ks[3], (B, S, 1, N), jnp.float32) * 0.5
+    Ci = jax.random.normal(ks[4], (B, S, 1, N), jnp.float32) * 0.5
+    xh = jnp.moveaxis(x, 1, 2)
+    recur = jax.jit(lambda: ssd_ref(xh, jnp.moveaxis(dt, 1, 2), A,
+                                    jnp.moveaxis(Bi, 1, 2), jnp.moveaxis(Ci, 1, 2))[0])
+    chunked = jax.jit(lambda: ssd_chunked(x, dt, A, Bi, Ci, chunk=64)[0])
+    return DuetRunnable("ssd_recurrence_vs_chunked",
+                        make_timed(recur), make_timed(chunked))
+
+
+def _rmsnorm_duet(T=4096, D=512):
+    from repro.models.layers import rms_norm
+    x = jax.random.normal(jax.random.PRNGKey(2), (T, D), jnp.float32)
+    w = jnp.zeros((D,), jnp.float32)
+    fused = jax.jit(lambda x, w: rms_norm(x, w, 1e-6))
+    unfused = jax.jit(lambda x, w: (x / jnp.sqrt(jnp.mean(x * x, -1,
+                                                          keepdims=True) + 1e-6))
+                      * (1 + w))
+    return DuetRunnable("rmsnorm_fused_vs_unfused",
+                        make_timed(unfused, x, w), make_timed(fused, x, w))
+
+
+def table_kernel_duets():
+    """Duet-benchmark real JAX implementations on this host via the elastic
+    controller (bounded parallelism=1 on one CPU: correctness of the
+    pipeline, not fleet timing)."""
+    t0 = time.perf_counter()
+    duets = {d.name: d for d in (_attention_duet(), _ssd_duet(), _rmsnorm_duet())}
+    plan = rmit.make_plan(sorted(duets), n_calls=12, repeats_per_call=1, seed=3)
+    ctl = ElasticController(duets, ControllerConfig(max_parallelism=1,
+                                                    benchmark_timeout_s=60.0,
+                                                    min_results=10))
+    report = ctl.run_suite(plan)
+    changes = analyze(report.pairs, min_results=10)
+    harness_us = (time.perf_counter() - t0) * 1e6
+    rows = {}
+    for name, c in sorted(changes.items()):
+        rows[name] = {
+            "median_diff_pct": round(c.median_diff_pct, 2),
+            "ci": [round(c.ci_low, 2), round(c.ci_high, 2)],
+            "changed": c.changed, "n": c.n_pairs,
+        }
+    rows["wall_s"] = round(report.wall_seconds, 1)
+    rows["invocations"] = report.invocations_done
+    return "kernel_duets_real", harness_us, rows

@@ -1,0 +1,66 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = compact JSON of the
+table's rows) followed by a human-readable summary block per table.
+
+    PYTHONPATH=src python -m benchmarks.run [--tables aa,baseline,...]
+                                            [--skip-real] [--roofline FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default=None,
+                    help="comma-separated subset of table names")
+    ap.add_argument("--skip-real", action="store_true",
+                    help="skip the real-timing kernel duets (slow on CPU)")
+    ap.add_argument("--roofline", default="results/dryrun.jsonl",
+                    help="dry-run JSONL to summarize (if present)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.paper_tables import ALL_TABLES
+    tables = list(ALL_TABLES)
+    if not args.skip_real:
+        from benchmarks.kernel_bench import table_kernel_duets
+        tables.append(table_kernel_duets)
+
+    from benchmarks.roofline_table import table_roofline
+    selected = None if args.tables is None else set(args.tables.split(","))
+
+    results = []
+    for fn in tables:
+        name = fn.__name__.replace("table_", "")
+        if selected and name not in selected:
+            continue
+        try:
+            name, us, rows = fn()
+            results.append((name, us, rows))
+            print(f"{name},{us:.0f},{json.dumps(rows, sort_keys=True)}")
+        except Exception as e:  # keep the harness running
+            print(f"{name},-1,{json.dumps({'error': str(e)})}")
+
+    if selected is None or "roofline" in selected:
+        try:
+            name, us, rows = table_roofline(args.roofline)
+            results.append((name, us, rows))
+            print(f"{name},{us:.0f},{json.dumps(rows, sort_keys=True)}")
+        except FileNotFoundError:
+            print("roofline,-1,{\"error\": \"no dry-run results yet; run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun --both-meshes "
+                  "--out results/dryrun.jsonl\"}")
+
+    print()
+    print("=" * 72)
+    for name, us, rows in results:
+        print(f"\n## {name}  (harness {us/1e6:.1f}s)")
+        for k, v in rows.items():
+            print(f"    {k:36s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Continuous benchmarking in CI (the paper's headline use case).
+
+Simulates the full ElastiBench flow for a code change: run the suite on the
+elastic FaaS platform against the previous release, analyze with bootstrap
+CIs, and fail the "pipeline" if a regression above the noise floor appears.
+Then prints the time/cost comparison against the VM-based baseline.
+
+    PYTHONPATH=src python examples/continuous_benchmarking.py
+"""
+from repro.core.experiment import (run_faas_experiment, run_vm_experiment,
+                                   victoriametrics_like_suite)
+from repro.core.stats import compare_experiments
+
+
+def main():
+    suite = victoriametrics_like_suite()
+
+    print("== simulating VM-based baseline (the old, slow way) ==")
+    vm = run_vm_experiment("vm_baseline", suite)
+    print(f"   wall {vm.report.wall_seconds/3600:.1f} h, "
+          f"${vm.report.cost_dollars:.2f}, "
+          f"{vm.n_changed} changes detected\n")
+
+    print("== ElastiBench run on the elastic FaaS platform ==")
+    fa = run_faas_experiment("ci_run", suite, n_calls=45, repeats_per_call=1,
+                             parallelism=150, seed=13)
+    print(f"   wall {fa.report.wall_seconds/60:.1f} min, "
+          f"${fa.report.cost_dollars:.2f}, "
+          f"{fa.n_changed} changes detected, "
+          f"{fa.report.cold_starts} cold starts\n")
+
+    cmp = compare_experiments(fa.changes, vm.changes)
+    print(f"agreement with the VM baseline: {cmp.agreement*100:.1f}% "
+          f"({cmp.n_common} comparable benchmarks)")
+    speedup = vm.report.wall_seconds / fa.report.wall_seconds
+    print(f"speedup {speedup:.0f}x, cost "
+          f"${fa.report.cost_dollars:.2f} vs ${vm.report.cost_dollars:.2f}\n")
+
+    regressions = [c for c in fa.changes.values()
+                   if c.changed and c.median_diff_pct > 7.0]
+    if regressions:
+        print("CI GATE: FAIL — regressions above the 7% reliability floor:")
+        for r in sorted(regressions, key=lambda c: -c.median_diff_pct)[:10]:
+            print(f"   {r.benchmark}: {r.median_diff_pct:+.1f}% "
+                  f"[{r.ci_low:+.1f}, {r.ci_high:+.1f}]")
+    else:
+        print("CI GATE: PASS — no regression above the reliability floor")
+
+
+if __name__ == "__main__":
+    main()

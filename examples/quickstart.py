@@ -1,0 +1,51 @@
+"""Quickstart: ElastiBench in 60 seconds.
+
+Duet-benchmark two implementations of the same layer (naive vs chunked
+attention) through the elastic controller, then run the bootstrap analysis —
+the paper's pipeline end to end on real JAX timings.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import rmit
+from repro.core.controller import ControllerConfig, ElasticController
+from repro.core.duet import DuetRunnable
+from repro.core.results import analyze
+from repro.core.timing import make_timed
+from repro.models.attention import attention_chunked, attention_dot
+
+
+def main():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 4, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 4, 64), jnp.float32)
+
+    # v1 = naive attention, v2 = online-softmax chunked attention
+    v1 = make_timed(jax.jit(lambda: attention_dot(q, k, v, causal=True)))
+    v2 = make_timed(jax.jit(lambda: attention_chunked(q, k, v, causal=True,
+                                                      chunk=64)))
+    duet = DuetRunnable("attention_dot_vs_chunked", v1, v2)
+
+    # RMIT plan: 15 calls x 1 duet pair, randomized order (paper §4)
+    plan = rmit.make_plan([duet.name], n_calls=15, repeats_per_call=1, seed=0)
+    controller = ElasticController(
+        {duet.name: duet},
+        ControllerConfig(max_parallelism=4, benchmark_timeout_s=30.0))
+    report = controller.run_suite(plan)
+
+    # bootstrap CI of the median relative difference (paper §2)
+    for name, res in analyze(report.pairs).items():
+        verdict = ("PERFORMANCE CHANGE" if res.changed else "no change")
+        print(f"{name}: median diff {res.median_diff_pct:+.1f}% "
+              f"(99% CI [{res.ci_low:+.1f}%, {res.ci_high:+.1f}%]) "
+              f"over {res.n_pairs} duet pairs -> {verdict}")
+    print(f"wall {report.wall_seconds:.1f}s, "
+          f"{report.invocations_done} invocations, "
+          f"{report.retries} retries, {report.hedged} hedged")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example: prefill + decode with int8 KV cache.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch mamba2-1.3b]
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_mod.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "32", "--gen", str(args.gen),
+                    "--kv-dtype", "int8" if args.arch != "mamba2-1.3b"
+                    else "bfloat16"])
+
+
+if __name__ == "__main__":
+    main()

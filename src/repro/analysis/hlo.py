@@ -1,0 +1,253 @@
+"""Trip-count-aware accounting over post-optimization (SPMD-partitioned) HLO.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each computation once —
+it does NOT multiply while-loop bodies by their trip counts, so a
+scan-over-layers model under-reports FLOPs by ~num_layers x.  This module
+parses ``compiled.as_text()`` into a computation call graph, propagates
+multipliers through ``while`` bodies via the ``known_trip_count`` backend
+config, and accumulates:
+
+    * dot FLOPs           (2 * result_elems * contraction_size)
+    * collective bytes    (per collective kind; per-device payloads — the
+                           module is already the per-partition program)
+    * op result/operand bytes (a read+write HBM-traffic estimate)
+
+The parser is deliberately tolerant: anything it cannot parse contributes
+nothing rather than failing (the numbers are roofline inputs, not ground
+truth; EXPERIMENTS.md reports raw cost_analysis alongside).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\\":{]+n[\\\":]+(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|condition|to_apply)=%([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dtype, dims = m.group(1), m.group(2)
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str                     # operands + attributes (raw tail)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # %name -> type
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and "{" in line and stripped.endswith("{"):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if stripped == "}":
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(name=m.group(1), result_type=m.group(2).strip(),
+                    opcode=m.group(3), rest=m.group(4))
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.result_type
+        # parameters also define symbols:  %p = f32[..] parameter(0) handled above
+    return comps
+
+
+def _entry_name(text: str) -> Optional[str]:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line[len("ENTRY"):].strip() if not
+                                   line.strip().startswith("ENTRY %") else
+                                   line.strip()[len("ENTRY "):])
+            m = re.search(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """computation -> execution-count multiplier (product of trip counts)."""
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] += m
+        for op in comps[name].ops:
+            trip = 1.0
+            if op.opcode == "while":
+                t = _TRIP_RE.search(op.rest)
+                trip = float(t.group(1)) if t else 1.0
+            for callee in _CALL_RE.findall(op.rest):
+                # while: body & condition get trip x; others 1 x
+                visit(callee, m * (trip if op.opcode == "while" else 1.0))
+            b = _BRANCH_RE.search(op.rest)
+            if b:
+                for callee in b.group(1).split(","):
+                    visit(callee.strip().lstrip("%"), m)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    dims = _shape_dims(op.result_type)
+    if dims is None:
+        return 0.0
+    _, rdims = dims
+    result_elems = 1
+    for d in rdims:
+        result_elems *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    if not m or not operands:
+        return 2.0 * result_elems          # degenerate fallback
+    lhs_type = comp.symbols.get(operands[0])
+    if lhs_type is None:
+        return 2.0 * result_elems
+    ld = _shape_dims(lhs_type)
+    if ld is None:
+        return 2.0 * result_elems
+    _, lshape = ld
+    contraction = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(lshape):
+            contraction *= lshape[int(idx)]
+    return 2.0 * result_elems * contraction
+
+
+@dataclass
+class HloAccount:
+    flops: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    traffic_bytes: float = 0.0             # result+operand bytes estimate
+    collective_ops: Dict[str, int] = field(default_factory=dict)
+    # HBM-traffic attribution by jax.named_scope tag (e.g. the bytes written
+    # inside attention_core / ssd_core — exactly what a fused Pallas kernel
+    # keeps VMEM-resident)
+    traffic_by_tag: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+TRAFFIC_TAGS = ("attention_core", "ssd_core")
+
+
+def _op_tag(op: Op) -> Optional[str]:
+    m = _OPNAME_RE.search(op.rest)
+    if not m:
+        return None
+    path = m.group(1)
+    for tag in TRAFFIC_TAGS:
+        if f"/{tag}/" in path or path.endswith(tag):
+            return tag
+    return None
+
+
+def account(text: str) -> HloAccount:
+    comps = parse_hlo(text)
+    entry = _entry_name(text)
+    if entry is None or entry not in comps:
+        return HloAccount()
+    mult = _multipliers(comps, entry)
+    acc = HloAccount()
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_ops: Dict[str, int] = defaultdict(int)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if op.opcode in ("dot", "dot-general"):
+                acc.flops += m * _dot_flops(op, comp)
+            if base in COLLECTIVES:
+                rb = _shape_bytes(op.result_type)
+                # operands (named refs) for reduce-scatter style ops
+                ob = 0
+                for ref in re.findall(r"%([\w.\-]+)", op.rest.split("),")[0]):
+                    t = comp.symbols.get(ref)
+                    if t:
+                        ob += _shape_bytes(t)
+                coll_bytes[base] += m * max(rb, ob)
+                coll_ops[base] += int(m)
+            if op.opcode not in ("parameter", "get-tuple-element", "tuple",
+                                 "bitcast", "constant", "after-all",
+                                 "partition-id", "replica-id"):
+                if op.opcode == "dynamic-update-slice":
+                    # executed in place: traffic = the written slice (the
+                    # update operand), not the whole aliased buffer
+                    rb = _shape_bytes(op.result_type)
+                    ops_ = re.findall(r"%([\w.\-]+)", op.rest)
+                    if len(ops_) >= 2:
+                        t2 = comp.symbols.get(ops_[1])
+                        if t2:
+                            rb = min(rb, _shape_bytes(t2))
+                else:
+                    rb = _shape_bytes(op.result_type)
+                acc.traffic_bytes += m * rb
+                tag = _op_tag(op)
+                if tag is not None:
+                    acc.traffic_by_tag[tag] = acc.traffic_by_tag.get(tag, 0.0) \
+                        + m * rb
+    acc.collective_bytes = dict(coll_bytes)
+    acc.collective_ops = dict(coll_ops)
+    return acc

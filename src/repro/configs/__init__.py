@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    shape_applicable,
+)

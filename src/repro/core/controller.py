@@ -1,0 +1,142 @@
+"""Elastic benchmarking controller (paper §4, Figure 2).
+
+Fans a SuitePlan out over a worker fleet with bounded instance parallelism,
+enforcing per-invocation timeouts, retrying platform failures, and hedging
+stragglers (re-issuing an invocation that runs far beyond the fleet median —
+the FaaS-era version of the paper's observation that outlier instances
+matter less when parallelism is high).
+
+This controller drives *real* execution (JAX micro-timings on this host, or
+a TPU fleet in deployment); the simulated-platform path (faas/platform.py)
+has its own virtual-time event loop but shares the plan/result types.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.duet import DuetPair, DuetRunnable
+from repro.core.rmit import Invocation, SuitePlan
+
+
+@dataclass
+class ControllerConfig:
+    max_parallelism: int = 150          # paper §6.1
+    invocation_timeout_s: float = 900.0  # FaaS platform cap (15 min)
+    benchmark_timeout_s: float = 20.0    # per-microbenchmark cap (paper §6.1)
+    max_retries: int = 1                 # platform failures
+    hedge_after_factor: float = 4.0      # straggler: > factor x median runtime
+    hedge_min_samples: int = 8
+    hedge_min_s: float = 5.0             # never hedge before this elapsed time
+    min_results: int = 10                # paper §6.1 filter
+
+
+@dataclass
+class RunReport:
+    pairs: List[DuetPair]
+    wall_seconds: float
+    invocations_done: int
+    invocations_failed: int
+    retries: int
+    hedged: int
+    failed_benchmarks: List[str] = field(default_factory=list)
+
+
+class ElasticController:
+    def __init__(self, duets: Dict[str, DuetRunnable],
+                 cfg: Optional[ControllerConfig] = None):
+        self.duets = duets
+        self.cfg = cfg or ControllerConfig()
+        self._lock = threading.Lock()
+        self._durations: List[float] = []
+
+    # ------------------------------------------------------------- worker
+    def _run_invocation(self, inv: Invocation) -> List[DuetPair]:
+        duet = self.duets[inv.benchmark]
+        pairs = []
+        deadline = time.monotonic() + min(self.cfg.invocation_timeout_s,
+                                          inv.timeout_s * inv.repeats * 4)
+        for r, order in enumerate(inv.version_order):
+            t0 = time.monotonic()
+            v1s, v2s = duet.run_pair(order)
+            if max(v1s, v2s) > self.cfg.benchmark_timeout_s:
+                raise TimeoutError(
+                    f"{inv.benchmark} exceeded {self.cfg.benchmark_timeout_s}s")
+            pairs.append(DuetPair(benchmark=inv.benchmark, v1_seconds=v1s,
+                                  v2_seconds=v2s, call_index=inv.call_index,
+                                  cold_start=(r == 0)))
+            if time.monotonic() > deadline:
+                break
+        return pairs
+
+    def _median_duration(self) -> Optional[float]:
+        with self._lock:
+            if len(self._durations) < self.cfg.hedge_min_samples:
+                return None
+            s = sorted(self._durations)
+            return s[len(s) // 2]
+
+    # ---------------------------------------------------------------- run
+    def run_suite(self, plan: SuitePlan) -> RunReport:
+        cfg = self.cfg
+        t_start = time.monotonic()
+        pairs: List[DuetPair] = []
+        done = failed = retries = hedged = 0
+        failed_benchmarks: set = set()
+
+        def attempt(inv: Invocation, tries_left: int):
+            nonlocal done, failed, retries
+            t0 = time.monotonic()
+            try:
+                res = self._run_invocation(inv)
+            except Exception:
+                if tries_left > 0:
+                    retries += 1
+                    return attempt(inv, tries_left - 1)
+                failed += 1
+                failed_benchmarks.add(inv.benchmark)
+                return []
+            with self._lock:
+                self._durations.append(time.monotonic() - t0)
+            done += 1
+            return res
+
+        with cf.ThreadPoolExecutor(max_workers=cfg.max_parallelism) as pool:
+            futs = {pool.submit(attempt, inv, cfg.max_retries): i
+                    for i, inv in enumerate(plan.invocations)}
+            completed_idx: set = set()    # first result per invocation wins
+            pending = set(futs)
+            while pending:
+                fin, pending = cf.wait(pending, timeout=0.5,
+                                       return_when=cf.FIRST_COMPLETED)
+                for f in fin:
+                    idx = futs[f]
+                    if idx not in completed_idx:
+                        completed_idx.add(idx)
+                        pairs.extend(f.result())
+                # straggler hedging: re-issue long-running invocations
+                med = self._median_duration()
+                if med is not None:
+                    now = time.monotonic()
+                    threshold = max(cfg.hedge_after_factor * med,
+                                    cfg.hedge_min_s)
+                    for f in list(pending):
+                        idx = futs[f]
+                        if getattr(f, "_repro_t0", None) is None:
+                            f._repro_t0 = now  # first seen pending
+                        elif (now - f._repro_t0 > threshold
+                              and not getattr(f, "_repro_hedged", False)):
+                            f._repro_hedged = True
+                            hedged += 1
+                            nf = pool.submit(attempt, plan.invocations[idx], 0)
+                            futs[nf] = idx
+                            pending.add(nf)
+
+        return RunReport(pairs=pairs,
+                         wall_seconds=time.monotonic() - t_start,
+                         invocations_done=done, invocations_failed=failed,
+                         retries=retries, hedged=hedged,
+                         failed_benchmarks=sorted(failed_benchmarks))

@@ -1,0 +1,114 @@
+"""Paper §6 experiment definitions.
+
+The SUT of the paper's evaluation is VictoriaMetrics' microbenchmark suite
+(106 benchmarks, two commits).  We reproduce the evaluation *mechanism* with
+a deterministic synthetic suite whose ground-truth effect distribution
+matches the paper's reported statistics (§6.2.2: median detected change
+4.71%, max 116%; §6.2.1: 90/106 executable on FaaS; a known-unreliable
+benchmark family like BenchmarkAddMulti), then run the same six experiments:
+
+  A/A, baseline, replication, lower-memory, single-repeat,
+  repeats-for-consistent-CI-size  (+ time/cost accounting).
+
+The FaaS runs must *agree* with the VM-simulated "original dataset" the way
+the paper's runs agreed with [23] — that is the reproduction claim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import rmit, stats
+from repro.core.duet import DuetPair
+from repro.core.results import analyze
+from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimulatedFaaS,
+                                 SimulatedVM, SimWorkload, VMPlatformConfig)
+
+N_BENCHMARKS = 106
+
+
+def victoriametrics_like_suite(seed: int = 42) -> Dict[str, SimWorkload]:
+    """106 synthetic microbenchmarks with a paper-shaped ground truth:
+    16 fail on FaaS (restricted FS / >20 s runs) -> 90 executed (§6.2.1);
+    effect CDF giving a median detected change of ~4-5% and max ~116%
+    (§6.2.2); three BenchmarkAddMulti-like unstable configurations."""
+    rng = np.random.default_rng(seed)
+    suite: Dict[str, SimWorkload] = {}
+    for i in range(N_BENCHMARKS):
+        base = float(np.exp(rng.uniform(np.log(0.3), np.log(6.0))))
+        r = rng.random()
+        if r < 0.45:
+            effect = 0.0                                   # unchanged code path
+        elif r < 0.57:
+            effect = float(rng.choice([-1, 1])) * float(rng.uniform(0.1, 0.6))
+        elif r < 0.96:
+            effect = float(rng.choice([-1, 1]) * np.exp(
+                rng.uniform(np.log(3), np.log(20))))       # solid changes
+        else:
+            effect = float(rng.uniform(60, 116))           # big regressions
+        fs_write = i % 7 == 3                              # 15 restricted-FS
+        if i == 99:
+            base = 30.0                                    # always beyond 20s
+        # magnitude depends on environment/toolchain (paper §6.2.2 explains
+        # the low two-sided coverage this way)
+        vm_scale = float(rng.uniform(0.8, 1.25))
+        unstable = 6.0 if i in (17, 18, 19) else 0.0      # BenchmarkAddMulti-like
+        if unstable:
+            # the benchmark itself changed between commits (eb103e15): the
+            # two environments see opposite-direction "changes"
+            effect, vm_scale = 6.0, -1.7
+        suite[f"Benchmark{i:03d}"] = SimWorkload(
+            name=f"Benchmark{i:03d}", base_seconds=base, effect_pct=effect,
+            run_sigma=float(rng.uniform(0.02, 0.05)), fs_write=fs_write,
+            setup_seconds=float(rng.uniform(8.0, 16.0)), unstable_pct=unstable,
+            vm_effect_scale=vm_scale)
+    return suite
+
+
+def aa_suite(suite: Dict[str, SimWorkload]) -> Dict[str, SimWorkload]:
+    """A/A: both versions are v1 (effect 0 everywhere)."""
+    return {k: replace(w, effect_pct=0.0) for k, w in suite.items()}
+
+
+@dataclass
+class ExperimentResult:
+    name: str
+    report: SimReport
+    changes: Dict[str, stats.ChangeResult]
+
+    @property
+    def n_executed(self) -> int:
+        return len(self.report.executed_benchmarks)
+
+    @property
+    def n_changed(self) -> int:
+        return sum(1 for c in self.changes.values() if c.changed)
+
+
+def run_faas_experiment(name: str, suite: Dict[str, SimWorkload], *,
+                        n_calls: int = 15, repeats_per_call: int = 3,
+                        parallelism: int = 150, memory_mb: int = 2048,
+                        seed: int = 0, start_time_s: float = 0.0,
+                        min_results: int = 10) -> ExperimentResult:
+    plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
+                          repeats_per_call=repeats_per_call, seed=seed)
+    platform = SimulatedFaaS(
+        suite, FaaSPlatformConfig(memory_mb=memory_mb), seed=seed,
+        start_time_s=start_time_s)
+    report = platform.run_suite(plan, parallelism=parallelism)
+    changes = analyze(report.pairs, seed=seed, min_results=min_results)
+    return ExperimentResult(name=name, report=report, changes=changes)
+
+
+def run_vm_experiment(name: str, suite: Dict[str, SimWorkload], *,
+                      n_trials: int = 45, seed: int = 1,
+                      min_results: int = 10) -> ExperimentResult:
+    """The 'original dataset': sequential VM-based RMIT (paper [23])."""
+    plan = rmit.make_plan(sorted(suite), n_calls=n_trials, repeats_per_call=1,
+                          seed=seed)
+    platform = SimulatedVM(suite, VMPlatformConfig(), seed=seed)
+    report = platform.run_suite(plan)
+    changes = analyze(report.pairs, seed=seed, min_results=min_results)
+    return ExperimentResult(name=name, report=report, changes=changes)

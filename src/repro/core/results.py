@@ -1,0 +1,58 @@
+"""Result store: JSONL persistence + per-experiment aggregation.
+
+Every duet pair is one JSONL record — append-only, crash-tolerant (a torn
+final line is ignored on load), mergeable across workers.  An experiment's
+analysis (core/stats) reads pair-aligned v1/v2 timings per benchmark.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.duet import DuetPair
+from repro.core.stats import ChangeResult, detect_change
+
+
+def append_pairs(path: str, pairs: Iterable[DuetPair]):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "a") as f:
+        for p in pairs:
+            f.write(json.dumps(asdict(p)) + "\n")
+
+
+def load_pairs(path: str) -> List[DuetPair]:
+    out: List[DuetPair] = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(DuetPair(**json.loads(line)))
+            except (json.JSONDecodeError, TypeError):
+                continue    # torn tail line after a crash
+    return out
+
+
+def analyze(pairs: Iterable[DuetPair], *, confidence: float = 0.99,
+            n_boot: int = 1000, seed: int = 0,
+            min_results: int = 10) -> Dict[str, ChangeResult]:
+    """Per-benchmark change detection over pair-aligned duet results."""
+    grouped: Dict[str, list] = {}
+    for p in pairs:
+        grouped.setdefault(p.benchmark, []).append(p)
+    out: Dict[str, ChangeResult] = {}
+    for name, ps in grouped.items():
+        v1 = np.array([p.v1_seconds for p in ps])
+        v2 = np.array([p.v2_seconds for p in ps])
+        res = detect_change(name, v1, v2, confidence=confidence,
+                            n_boot=n_boot, seed=seed, min_results=min_results)
+        if res is not None:
+            out[name] = res
+    return out

@@ -1,0 +1,57 @@
+"""Randomized Multiple Interleaved Trials (RMIT, paper §2/§4) scheduling.
+
+Builds the randomized invocation plan for a benchmark suite: every
+microbenchmark is invoked ``n_calls`` times; each invocation runs
+``repeats_per_call`` duet pairs; the order of invocations across the suite
+is shuffled so the platform's opaque call->instance assignment randomizes
+instance/order effects; within a call the v1/v2 execution order of each
+duet pair is randomized as well.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+
+@dataclass(frozen=True)
+class Invocation:
+    """One FaaS function call: run `repeats` duet pairs of one benchmark."""
+    benchmark: str
+    call_index: int                 # which of the n_calls for this benchmark
+    repeats: int                    # duet pairs inside this call
+    version_order: tuple            # per-repeat: ("v1","v2") or ("v2","v1")
+    timeout_s: float = 20.0         # per-microbenchmark timeout (paper §6.1)
+
+
+@dataclass(frozen=True)
+class SuitePlan:
+    invocations: tuple
+    n_calls: int
+    repeats_per_call: int
+
+    @property
+    def total_results_per_benchmark(self) -> int:
+        return self.n_calls * self.repeats_per_call
+
+
+def make_plan(benchmarks: Sequence[str], *, n_calls: int = 15,
+              repeats_per_call: int = 3, randomize_order: bool = True,
+              randomize_versions: bool = True, seed: int = 0,
+              timeout_s: float = 20.0) -> SuitePlan:
+    rng = random.Random(seed)
+    inv: List[Invocation] = []
+    for b in benchmarks:
+        for c in range(n_calls):
+            if randomize_versions:
+                order = tuple(tuple(rng.sample(("v1", "v2"), 2))
+                              for _ in range(repeats_per_call))
+            else:
+                order = tuple(("v1", "v2") for _ in range(repeats_per_call))
+            inv.append(Invocation(benchmark=b, call_index=c,
+                                  repeats=repeats_per_call,
+                                  version_order=order, timeout_s=timeout_s))
+    if randomize_order:
+        rng.shuffle(inv)
+    return SuitePlan(invocations=tuple(inv), n_calls=n_calls,
+                     repeats_per_call=repeats_per_call)

@@ -1,0 +1,162 @@
+"""Statistical layer of ElastiBench (paper §2, §6.1).
+
+Bootstrap confidence intervals of the *median relative performance
+difference* between two SUT versions, change detection (99% CI excluding 0),
+and the inter-experiment comparison measures from the paper: *agreement*
+(same sign of detected change, or both no-change), *one-sided* and
+*two-sided coverage* (CI containment of the other experiment's median).
+
+All pure NumPy, deterministic given a seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+DEFAULT_CONFIDENCE = 0.99
+DEFAULT_BOOTSTRAP = 1000
+
+
+@dataclass(frozen=True)
+class ChangeResult:
+    """Outcome of comparing v1/v2 timings of one microbenchmark."""
+    benchmark: str
+    n_pairs: int
+    median_diff_pct: float          # median of per-pair relative diff, in %
+    ci_low: float                   # CI of the median diff (pct)
+    ci_high: float
+    changed: bool                   # CI excludes 0
+    direction: int                  # -1 faster, +1 slower, 0 no change
+
+    @property
+    def ci_size(self) -> float:
+        return self.ci_high - self.ci_low
+
+
+def relative_diffs(v1: np.ndarray, v2: np.ndarray) -> np.ndarray:
+    """Per-pair relative difference in % ((v2-v1)/v1*100).
+
+    v1/v2 are paired duet timings from the same instance (paper §4): only
+    the relative change within an instance is meaningful."""
+    v1 = np.asarray(v1, dtype=np.float64)
+    v2 = np.asarray(v2, dtype=np.float64)
+    return (v2 - v1) / v1 * 100.0
+
+
+def bootstrap_median_ci(x: np.ndarray, *, confidence: float = DEFAULT_CONFIDENCE,
+                        n_boot: int = DEFAULT_BOOTSTRAP,
+                        seed: int = 0) -> tuple:
+    """Percentile-bootstrap CI for the median of x."""
+    x = np.asarray(x, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(x), size=(n_boot, len(x)))
+    medians = np.median(x[idx], axis=1)
+    alpha = (1.0 - confidence) / 2.0
+    # conservative (outward) quantile interpolation: guarantees >= nominal
+    # coverage on the discrete bootstrap distribution
+    lo = np.quantile(medians, alpha, method="lower")
+    hi = np.quantile(medians, 1.0 - alpha, method="higher")
+    return float(np.median(x)), float(lo), float(hi)
+
+
+def detect_change(benchmark: str, v1: np.ndarray, v2: np.ndarray, *,
+                  confidence: float = DEFAULT_CONFIDENCE,
+                  n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
+                  min_results: int = 10) -> Optional[ChangeResult]:
+    """Paper §6.1: benchmarks with fewer than `min_results` pairs are
+    ignored (returns None)."""
+    v1, v2 = np.asarray(v1), np.asarray(v2)
+    n = min(len(v1), len(v2))
+    if n < min_results:
+        return None
+    diffs = relative_diffs(v1[:n], v2[:n])
+    med, lo, hi = bootstrap_median_ci(diffs, confidence=confidence,
+                                      n_boot=n_boot, seed=seed)
+    changed = lo > 0 or hi < 0
+    direction = 0 if not changed else (1 if med > 0 else -1)
+    return ChangeResult(benchmark=benchmark, n_pairs=n, median_diff_pct=med,
+                        ci_low=lo, ci_high=hi, changed=changed,
+                        direction=direction)
+
+
+# ------------------------------------------------------------------ paper §6.1
+def agree(a: ChangeResult, b: ChangeResult) -> bool:
+    """Two experiments agree iff both detect a change in the same direction
+    or both detect no change."""
+    if a.changed != b.changed:
+        return False
+    return (not a.changed) or (a.direction == b.direction)
+
+
+def one_sided_coverage(a: ChangeResult, b: ChangeResult) -> bool:
+    """a's median inside b's CI."""
+    return b.ci_low <= a.median_diff_pct <= b.ci_high
+
+
+def two_sided_coverage(a: ChangeResult, b: ChangeResult) -> bool:
+    return one_sided_coverage(a, b) and one_sided_coverage(b, a)
+
+
+def cis_overlap(a: ChangeResult, b: ChangeResult) -> bool:
+    return a.ci_low <= b.ci_high and b.ci_low <= a.ci_high
+
+
+@dataclass
+class ExperimentComparison:
+    n_common: int
+    agreement: float                    # fraction agreeing
+    disagreements: list                 # benchmark names
+    opposite_direction: list            # both changed, different sign
+    one_sided_a_in_b: float
+    one_sided_b_in_a: float
+    two_sided: float
+    possible_changes: list              # (name, max |median|) on disagreement
+
+
+def compare_experiments(res_a: dict, res_b: dict) -> ExperimentComparison:
+    """res_*: {benchmark: ChangeResult}; only common benchmarks compared
+    (paper §6.2.2: 'after removing microbenchmarks for which only one
+    experiment contains results')."""
+    common = sorted(set(res_a) & set(res_b))
+    if not common:
+        return ExperimentComparison(0, float("nan"), [], [], float("nan"),
+                                    float("nan"), float("nan"), [])
+    agrees, dis, opp, osa, osb, ts, poss = 0, [], [], 0, 0, 0, []
+    changed_pairs = 0
+    for name in common:
+        a, b = res_a[name], res_b[name]
+        if agree(a, b):
+            agrees += 1
+        else:
+            dis.append(name)
+            poss.append((name, max(abs(a.median_diff_pct), abs(b.median_diff_pct))))
+            if a.changed and b.changed and a.direction != b.direction:
+                opp.append(name)
+        if a.changed and b.changed:
+            changed_pairs += 1
+            osa += one_sided_coverage(a, b)
+            osb += one_sided_coverage(b, a)
+            ts += two_sided_coverage(a, b)
+    cp = max(changed_pairs, 1)
+    return ExperimentComparison(
+        n_common=len(common), agreement=agrees / len(common),
+        disagreements=dis, opposite_direction=opp,
+        one_sided_a_in_b=osa / cp, one_sided_b_in_a=osb / cp,
+        two_sided=ts / cp, possible_changes=poss)
+
+
+def repeats_for_ci_parity(diffs: np.ndarray, target_ci_size: float, *,
+                          steps: Sequence[int], confidence=DEFAULT_CONFIDENCE,
+                          n_boot=DEFAULT_BOOTSTRAP, seed=0) -> Optional[int]:
+    """Paper §6.2.7: smallest prefix length in `steps` whose bootstrap CI of
+    the median is <= target_ci_size.  None if never reached."""
+    for n in steps:
+        if n > len(diffs):
+            break
+        _, lo, hi = bootstrap_median_ci(diffs[:n], confidence=confidence,
+                                        n_boot=n_boot, seed=seed)
+        if hi - lo <= target_ci_size:
+            return n
+    return None

@@ -1,0 +1,137 @@
+"""Flash attention Pallas TPU kernel (online softmax, tiled for VMEM/MXU).
+
+Layout: q [B, H, Sq, hd]; k, v [B, K, Skv, hd]; out [B, H, Sq, hd].
+Grid (B, H, n_q_blocks, n_kv_blocks) — the kv dimension is innermost, so the
+fp32 accumulator / running max / running sum live in VMEM scratch and persist
+across kv steps (TPU grids execute sequentially; same in interpret mode).
+
+GQA is handled in the K/V BlockSpec index maps (q-head h reads kv-head
+h * K // H), so no head replication ever materializes.  Causal and
+sliding-window masks are fused; fully-masked kv blocks are skipped with
+``pl.when`` (predication — no MXU work issued on TPU).
+
+Block sizes default to (128, 128): multiples of the MXU tile, and the
+working set  q(128 x hd) + k,v(128 x hd) + acc(128 x hd) fp32  stays well
+under ~1 MB VMEM even at hd=256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, kv_valid: int,
+            block_q: int, block_kv: int, n_kv: int):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = iq * block_q
+    k_lo = ikv * block_kv
+    # block-level skip conditions (predicated out on TPU)
+    needed = k_lo < kv_valid
+    if causal:
+        needed &= k_lo <= q_lo + block_q - 1
+    if window > 0:
+        # newest q position in block must still see the oldest k position
+        needed &= (q_lo - (k_lo + block_kv - 1)) < window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                 # [bkv, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = k_pos < kv_valid
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ikv == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_hmajor(q, k, v, *, causal=True, window=0, kv_valid=None,
+                           softmax_scale=None, block_q=DEFAULT_BLOCK_Q,
+                           block_kv=DEFAULT_BLOCK_KV, interpret=False):
+    """q [B,H,Sq,hd]; k,v [B,K,Skv,hd] -> [B,H,Sq,hd].
+
+    window: 0/negative = global.  kv_valid: #valid kv positions (default Skv).
+    Sq/Skv are padded to block multiples internally.
+    """
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    kv_valid = Skv if kv_valid is None else kv_valid
+    window = int(window) if window and window > 0 else 0
+
+    block_q = min(block_q, _round_up(Sq, 8))
+    block_kv = min(block_kv, _round_up(Skv, 8))
+    Sq_p, Skv_p = _round_up(Sq, block_q), _round_up(Skv, block_kv)
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+    n_q, n_kv = Sq_p // block_q, Skv_p // block_kv
+    group = H // K
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        kv_valid=min(kv_valid, Skv), block_q=block_q, block_kv=block_kv,
+        n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (Python
+execution of the kernel body — bit-accurate, slow); on TPU they compile to
+Mosaic.  The wrappers accept the model's [B, S, H, hd] layout and convert to
+the kernels' head-major layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softmax_scale",
+                                             "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, softmax_scale=None,
+                    block_q=_fa.DEFAULT_BLOCK_Q, block_kv=_fa.DEFAULT_BLOCK_KV,
+                    interpret=None):
+    """q [B,Sq,H,hd]; k,v [B,Skv,K,hd] -> [B,Sq,H,hd]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    w = 0 if window is None else int(window)
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention_hmajor(
+        qh, kh, vh, causal=causal, window=w, softmax_scale=softmax_scale,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B_in, C_in, *, chunk=_ssd.DEFAULT_CHUNK, interpret=None):
+    """Model layout: x [B,S,H,P]; dt [B,S,H]; B_in/C_in [B,S,G,N].
+
+    Returns (y [B,S,H,P], state [B,H,P,N])."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xh = jnp.moveaxis(x, 1, 2)            # [B,H,S,P]
+    dth = jnp.moveaxis(dt, 1, 2)          # [B,H,S]
+    Bh = jnp.moveaxis(B_in, 1, 2)         # [B,G,S,N]
+    Ch = jnp.moveaxis(C_in, 1, 2)
+    y, state = _ssd.ssd_scan_hmajor(xh, dth, A, Bh, Ch, chunk=chunk,
+                                    interpret=interpret)
+    return jnp.moveaxis(y, 1, 2), state

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth in kernel tests (shape/dtype sweeps assert
+allclose between kernel-in-interpret-mode and these references).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None,
+                  softmax_scale=None):
+    """Naive attention oracle.  q [B,H,Sq,hd]; k,v [B,K,Skv,hd]."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    g = H // K
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    kf = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= (q_pos - k_pos) < window
+    if kv_valid is not None:
+        mask &= k_pos < kv_valid
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B_in, C_in, h0=None):
+    """Exact SSD recurrence oracle (fp32, step by step).
+
+    x [B,H,S,P]; dt [B,H,S]; A [H]; B_in/C_in [B,G,S,N].
+    Returns (y [B,H,S,P], final state [B,H,P,N]).
+
+        h_t = h_{t-1} * exp(A dt_t) + dt_t * (B_t outer x_t)
+        y_t = C_t . h_t
+    """
+    Bz, H, S, P = x.shape
+    G, N = B_in.shape[1], B_in.shape[3]
+    hg = H // G
+    Bh = jnp.repeat(B_in, hg, axis=1).astype(jnp.float32)   # [B,H,S,N]
+    Ch = jnp.repeat(C_in, hg, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        xt = xf[:, :, t]                                    # [B,H,P]
+        dtt = dtf[:, :, t]                                  # [B,H]
+        Bt, Ct = Bh[:, :, t], Ch[:, :, t]                   # [B,H,N]
+        decay = jnp.exp(dtt * Af[None, :])                  # [B,H]
+        h = h * decay[..., None, None] + (dtt[..., None] * xt)[..., None] * Bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+    h_f, ys = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 2)                              # [B,H,S,P]
+    return y.astype(x.dtype), h_f

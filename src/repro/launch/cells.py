@@ -1,0 +1,193 @@
+"""Cell builder: (architecture x input-shape x mesh) -> lowerable program.
+
+A *cell* bundles the jitted entry point (train_step / prefill / serve_step),
+its abstract input ShapeDtypeStructs (with shardings — no allocation), and
+bookkeeping for the roofline analysis.  launch/dryrun.py, benchmarks/ and
+the smoke tests all build cells through this module, so the dry-run exercises
+exactly the code that trains/serves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
+                                shape_applicable)
+from repro.models.lm import LM
+from repro.sharding.plan import ShardingPlan, make_plan
+from repro.train import optimizer as opt_mod
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import make_train_step, train_state_specs
+from repro.models.layers import abstract_tree
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    lm: LM
+    plan: ShardingPlan
+    fn: Callable                 # unjitted
+    jit_fn: Any                  # jitted (donation set)
+    abstract_args: tuple         # SDS pytrees for .lower()
+    kind: str                    # train | prefill | decode
+    accum_steps: int = 1
+
+    def lower(self):
+        return self.jit_fn.lower(*self.abstract_args)
+
+
+def _default_accum(shape: ShapeConfig, plan: ShardingPlan) -> int:
+    if not shape.is_training:
+        return 1
+    if shape.microbatch:
+        return max(1, shape.global_batch // shape.microbatch)
+    dsz = max(plan.info.data_size, 1)
+    # target <= 2 sequences per device per microbatch
+    accum = max(1, shape.global_batch // (2 * dsz))
+    while shape.global_batch % accum or (shape.global_batch // accum) % dsz:
+        accum -= 1
+    return max(accum, 1)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype),
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, plan: ShardingPlan,
+                 accum: int):
+    """Abstract train batch [accum, mb, ...]."""
+    mesh = plan.info.mesh
+    mb = shape.global_batch // accum
+    d = plan.spec("batch")[0]
+    if d is not None and mb % plan.info.data_size != 0:
+        d = None                      # tiny smoke batches: replicate
+    S = shape.seq_len
+    n_img = cfg.num_image_tokens
+    S_tok = S - n_img if n_img else S
+    out = {
+        "tokens": _sds((accum, mb, S_tok), "int32", mesh, P(None, d, None)),
+        "labels": _sds((accum, mb, S_tok), "int32", mesh, P(None, d, None)),
+    }
+    if cfg.encoder is not None:
+        out["enc_embeds"] = _sds((accum, mb, cfg.encoder.source_len, cfg.d_model),
+                                 "float32", mesh, P(None, d, None, None))
+    if n_img:
+        out["embeds_prefix"] = _sds((accum, mb, n_img, cfg.d_model),
+                                    "float32", mesh, P(None, d, None, None))
+    return out
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, reduced: bool = False,
+                accum: Optional[int] = None, ocfg: Optional[OptimizerConfig] = None,
+                overrides: Optional[dict] = None):
+    """Public helper: the abstract inputs for a cell (no allocation)."""
+    cell = build_cell(arch, shape_name, mesh, reduced=reduced, accum=accum,
+                      ocfg=ocfg, overrides=overrides)
+    return cell.abstract_args
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, reduced: bool = False,
+               accum: Optional[int] = None, ocfg: Optional[OptimizerConfig] = None,
+               overrides: Optional[dict] = None) -> Cell:
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if overrides:
+        cfg = replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if reduced:
+        shape = replace(shape, seq_len=64 if shape.kind != "decode" else 64,
+                        global_batch=4, kv_cache_dtype=shape.kv_cache_dtype)
+    if not shape_applicable(cfg, shape):
+        raise ValueError(f"{arch} x {shape_name}: inapplicable "
+                         f"(sub-quadratic shape on full-attention arch)")
+    plan = make_plan(cfg, mesh)
+    lm = LM(cfg, plan)
+    ocfg = ocfg or OptimizerConfig()
+
+    if shape.kind == "train":
+        return _build_train(arch, cfg, shape, lm, plan, mesh, accum, ocfg)
+    if shape.kind == "prefill":
+        return _build_prefill(arch, cfg, shape, lm, plan, mesh)
+    return _build_decode(arch, cfg, shape, lm, plan, mesh)
+
+
+def _build_train(arch, cfg, shape, lm, plan, mesh, accum, ocfg) -> Cell:
+    accum = accum or _default_accum(shape, plan)
+    state_specs = train_state_specs(lm, ocfg)
+    state_sds = abstract_tree(state_specs, plan)
+    batch_sds = _batch_specs(cfg, shape, plan, accum)
+    step_fn = make_train_step(lm, ocfg)
+    jit_fn = jax.jit(step_fn, donate_argnums=(0,))
+    return Cell(arch=arch, shape=shape, lm=lm, plan=plan, fn=step_fn,
+                jit_fn=jit_fn, abstract_args=(state_sds, batch_sds),
+                kind="train", accum_steps=accum)
+
+
+def _build_prefill(arch, cfg, shape, lm, plan, mesh) -> Cell:
+    d = plan.spec("batch")[0]
+    B, S = shape.global_batch, shape.seq_len
+    if d is not None and B % plan.info.data_size != 0:
+        d = None
+    n_img = cfg.num_image_tokens
+    S_tok = S - n_img if n_img else S
+    params_sds = lm.abstract_params()
+    kw_sds = {}
+    if cfg.encoder is not None:
+        kw_sds["enc_embeds"] = _sds((B, cfg.encoder.source_len, cfg.d_model),
+                                    "float32", mesh, P(d, None, None))
+    if n_img:
+        kw_sds["embeds_prefix"] = _sds((B, n_img, cfg.d_model), "float32",
+                                       mesh, P(d, None, None))
+    tokens_sds = _sds((B, S_tok), "int32", mesh, P(d, None))
+
+    kv_dtype = shape.kv_cache_dtype if shape.kv_cache_dtype else "bfloat16"
+
+    def prefill_fn(params, tokens, extras):
+        return lm.forward(params, tokens, mode="prefill", kv_dtype=kv_dtype,
+                          **extras)
+
+    jit_fn = jax.jit(prefill_fn)
+    return Cell(arch=arch, shape=shape, lm=lm, plan=plan, fn=prefill_fn,
+                jit_fn=jit_fn, abstract_args=(params_sds, tokens_sds, kw_sds),
+                kind="prefill")
+
+
+def _build_decode(arch, cfg, shape, lm, plan, mesh) -> Cell:
+    d = plan.spec("batch")[0]
+    B, S = shape.global_batch, shape.seq_len
+    params_sds = lm.abstract_params()
+    cache_sds = lm.cache_struct(B, S, shape.kv_cache_dtype)
+    batch_ax = d if (plan.info.data_axes and
+                     B % plan.info.data_size == 0) else None
+    token_sds = _sds((B, 1), "int32", mesh, P(batch_ax, None))
+    pos_sds = _sds((), "int32", mesh, P())
+
+    def decode_fn(params, cache, token, pos):
+        return lm.decode(params, cache, token, pos)
+
+    jit_fn = jax.jit(decode_fn, donate_argnums=(1,))
+    return Cell(arch=arch, shape=shape, lm=lm, plan=plan, fn=decode_fn,
+                jit_fn=jit_fn,
+                abstract_args=(params_sds, cache_sds, token_sds, pos_sds),
+                kind="decode")
+
+
+def all_cells(include_inapplicable: bool = False):
+    """The assigned 10 x 4 matrix minus documented skips (DESIGN.md §6)."""
+    from repro.configs.all_configs import ARCH_IDS
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            ok = shape_applicable(cfg, SHAPES[sname])
+            if ok or include_inapplicable:
+                out.append((arch, sname, ok))
+    return out

@@ -1,0 +1,149 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  This module is the ONLY place the 512 placeholder
+# host devices are configured — tests and benches see the real device count.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo import account
+from repro.analysis.roofline import build_terms
+from repro.configs.base import SHAPES, get_config, shape_applicable
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             accum=None, overrides=None, verbose: bool = True) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    overrides = dict(overrides) if overrides else None
+    # nested-config override shorthands (hillclimb knobs)
+    nested = {}
+    for key in ("capacity_factor", "ssm_chunk", "state_bits"):
+        if overrides and key in overrides:
+            nested[key] = overrides.pop(key)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "multi_pod": multi_pod,
+           "overrides": {**(overrides or {}), **nested}}
+    if not shape_applicable(cfg, shape):
+        rec.update(status="skipped",
+                   reason="sub-quadratic shape on full-attention arch "
+                          "(DESIGN.md §6)")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        if nested:
+            import dataclasses
+            overrides = dict(overrides or {})
+            if "capacity_factor" in nested:
+                overrides["moe"] = dataclasses.replace(
+                    cfg.moe, capacity_factor=nested["capacity_factor"])
+            if "ssm_chunk" in nested:
+                overrides["ssm"] = dataclasses.replace(
+                    cfg.ssm, chunk_size=nested["ssm_chunk"])
+        ocfg = None
+        if "state_bits" in nested:
+            from repro.train.optimizer import OptimizerConfig
+            ocfg = OptimizerConfig(state_bits=nested["state_bits"])
+        with mesh:
+            cell = build_cell(arch, shape_name, mesh, accum=accum,
+                              overrides=overrides, ocfg=ocfg)
+            lowered = cell.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            cost = compiled.cost_analysis() or {}
+            try:
+                mem = compiled.memory_analysis()
+            except Exception:
+                mem = None
+            acct = account(compiled.as_text())
+            terms = build_terms(arch, cell.lm.cfg, shape, mesh_name,
+                                mesh.size, acct, cost, mem)
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            accum_steps=cell.accum_steps,
+            plan={"H": cell.plan.H, "K": cell.plan.K, "V": cell.plan.V,
+                  "kv_sharded": cell.plan.kv_sharded,
+                  "head_pad_overhead": cell.plan.head_pad_overhead},
+            memory_analysis=None if mem is None else {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                        + mem.output_size_in_bytes
+                                        - mem.alias_size_in_bytes
+                                        + mem.temp_size_in_bytes),
+            },
+            cost_analysis={k: v for k, v in cost.items()
+                           if k in ("flops", "bytes accessed",
+                                    "optimal_seconds", "transcendentals")},
+            roofline=terms.to_dict(),
+            traffic_by_tag=dict(acct.traffic_by_tag),
+        )
+        if verbose:
+            ma = rec["memory_analysis"]
+            peak = (ma or {}).get("peak_estimate_bytes", 0) / 2**30
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+                  f"compile {t_compile:.0f}s peak/dev {peak:.2f} GiB "
+                  f"dominant={terms.dominant} "
+                  f"(c={terms.compute_s*1e3:.1f}ms m={terms.memory_s*1e3:.1f}ms "
+                  f"x={terms.collective_s*1e3:.1f}ms)", flush=True)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                  f"FAILED {type(e).__name__}: {e}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every "
+                    "(arch x shape x mesh) cell on placeholder devices.")
+    ap.add_argument("--arch", default=None, help="single arch (default: all)")
+    ap.add_argument("--shape", default=None, help="single shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--accum", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs.all_configs import ARCH_IDS
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=multi_pod,
+                               accum=args.accum)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

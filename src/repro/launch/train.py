@@ -1,0 +1,120 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 100 --ckpt-dir /tmp/ckpt --ckpt-every 50
+
+Fault tolerance: checkpoints carry the data-pipeline step; on restart the
+driver resumes from the latest checkpoint (bit-deterministic continuation —
+see tests/test_system.py).  The mesh is chosen from the actual device count
+(elastic: a restore onto a different mesh reshards on load).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.cells import build_cell
+from repro.sharding.plan import make_plan
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, SyntheticDataset, shard_batch
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import init_train_state
+
+
+def pick_mesh():
+    n = len(jax.devices())
+    if n == 1:
+        from repro.sharding.plan import single_device_mesh
+        return single_device_mesh()
+    model = 1
+    for m in (16, 8, 4, 2):
+        if n % m == 0:
+            model = m
+            break
+    from repro.launch.mesh import make_mesh
+    return make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mesh = pick_mesh()
+    with mesh:
+        cell = build_cell(args.arch, "train_4k", mesh, reduced=args.reduced,
+                          accum=args.accum or (2 if args.reduced else None))
+        cfg = cell.lm.cfg
+        shape = cell.shape
+        seq = args.seq_len or (64 if args.reduced else shape.seq_len)
+        gb = args.global_batch or (4 if args.reduced else shape.global_batch)
+        accum = cell.accum_steps if args.accum is None else args.accum
+        if args.reduced:
+            accum = min(accum, gb)
+
+        # rebuild the step for the requested shapes (the cell's jit_fn is
+        # shape-polymorphic: jit re-specializes on the first call)
+        ocfg = OptimizerConfig(learning_rate=args.lr,
+                               warmup_steps=min(100, args.steps // 10 + 1),
+                               total_steps=args.steps)
+        from repro.train.train_step import make_train_step
+        step_fn = jax.jit(make_train_step(cell.lm, ocfg), donate_argnums=(0,))
+
+        ds = SyntheticDataset(
+            DataConfig(vocab_size=cfg.vocab_size,
+                       seq_len=seq - cfg.num_image_tokens
+                       if cfg.num_image_tokens else seq,
+                       global_batch=gb, accum_steps=accum, seed=args.seed),
+            cfg)
+
+        start_step = 0
+        state = init_train_state(cell.lm, ocfg, jax.random.PRNGKey(args.seed))
+        saver = None
+        if args.ckpt_dir:
+            latest = ckpt.latest_step(args.ckpt_dir)
+            if latest is not None:
+                state, man = ckpt.restore(args.ckpt_dir, latest, state)
+                start_step = man["metadata"]["data_step"]
+                print(f"[train] resumed from step {start_step}")
+            saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+
+        tokens_per_step = gb * seq
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            batch = shard_batch(ds.batch(step), cell.plan)
+            state, metrics = step_fn(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                tps = tokens_per_step * (step - start_step + 1) / max(dt, 1e-9)
+                print(f"[train] step {step:5d} loss {loss:7.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):8.2f} "
+                      f"tok/s {tps:,.0f}", flush=True)
+            if saver and (step + 1) % args.ckpt_every == 0:
+                saver.save(step + 1, state, metadata={"data_step": step + 1})
+        if saver:
+            saver.save(args.steps, state, metadata={"data_step": args.steps})
+            saver.close()
+        print(f"[train] done in {time.time()-t0:.1f}s")
+        return state
+
+
+if __name__ == "__main__":
+    main()

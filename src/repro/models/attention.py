@@ -1,0 +1,170 @@
+"""Attention: GQA, causal / sliding-window / cross, three implementations.
+
+    dot      -- materialize scores (small seq; also the decode path)
+    chunked  -- lax.scan over KV chunks with online softmax (flash-style
+                memory behaviour in pure jnp; the XLA path used at scale
+                and the oracle-equivalent of the Pallas kernel)
+    flash    -- Pallas TPU kernel (kernels/flash_attention.py); interpret
+                mode on CPU, real on TPU
+
+Shapes: q [B, Sq, H, hd]; k, v [B, Skv, K, hd]; H % K == 0 (GQA groups).
+``window`` may be a traced scalar (per-layer local/global selection inside a
+scanned stack): window <= 0 means global.  KV may be int8 with per-(b,s,k)
+scales (quantized decode cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window, kv_valid_len=None):
+    """q_pos [Sq], k_pos [Sk] (int32) -> bool [Sq, Sk]."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        local = (q_pos[:, None] - k_pos[None, :]) < w
+        m &= jnp.where(w > 0, local, True)
+    if kv_valid_len is not None:
+        m &= k_pos[None, :] < kv_valid_len
+    return m
+
+
+def _dequant(x, scale):
+    if scale is None:
+        return x
+    # x [B,S,K,hd] int8, scale [B,S,K] f32
+    return x.astype(jnp.float32) * scale[..., None]
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,K,G,hd], k [B,Sk,K,hd] -> [B,K,G,Sq,Sk] (f32)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention_dot(q, k, v, *, causal=True, window=None, q_offset=0,
+                  kv_valid_len=None, k_scale=None, v_scale=None,
+                  softmax_scale=None):
+    with jax.named_scope("attention_core"):
+        return _attention_dot(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, kv_valid_len=kv_valid_len,
+                              k_scale=k_scale, v_scale=v_scale,
+                              softmax_scale=softmax_scale)
+
+
+def _attention_dot(q, k, v, *, causal=True, window=None, q_offset=0,
+                   kv_valid_len=None, k_scale=None, v_scale=None,
+                   softmax_scale=None):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    k = _dequant(k, k_scale).astype(q.dtype)
+    v = _dequant(v, v_scale).astype(q.dtype)
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = _gqa_scores(qg, k) * scale                      # [B,K,G,Sq,Sk]
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    m = _mask(q_pos, k_pos, causal=causal, window=window, kv_valid_len=kv_valid_len)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=None, q_offset=0,
+                      kv_valid_len=None, k_scale=None, v_scale=None,
+                      chunk=1024, softmax_scale=None):
+    with jax.named_scope("attention_core"):
+        return _attention_chunked(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, kv_valid_len=kv_valid_len,
+                                  k_scale=k_scale, v_scale=v_scale,
+                                  chunk=chunk, softmax_scale=softmax_scale)
+
+
+def _attention_chunked(q, k, v, *, causal=True, window=None, q_offset=0,
+                       kv_valid_len=None, k_scale=None, v_scale=None,
+                       chunk=1024, softmax_scale=None):
+    """Online-softmax over KV chunks; peak memory O(Sq * chunk)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    chunk = min(chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        padz = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        k, v = padz(k), padz(v)
+        if k_scale is not None:
+            k_scale, v_scale = padz(k_scale), padz(v_scale)
+        kv_valid_len = jnp.minimum(
+            Sk if kv_valid_len is None else kv_valid_len, Sk)
+
+    qg = (q.reshape(B, Sq, K, G, hd) * scale).astype(q.dtype)
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    # chunk-major layout for scan
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    if k_scale is not None:
+        ksc = k_scale.reshape(B, n_chunks, chunk, K).transpose(1, 0, 2, 3)
+        vsc = v_scale.reshape(B, n_chunks, chunk, K).transpose(1, 0, 2, 3)
+    else:
+        ksc = vsc = jnp.zeros((n_chunks, 0))
+
+    def body(carry, xs):
+        m_i, l_i, acc = carry
+        ci, k_c, v_c, ks_c, vs_c = xs
+        if k_scale is not None:
+            k_c = _dequant(k_c, ks_c).astype(q.dtype)
+            v_c = _dequant(v_c, vs_c).astype(q.dtype)
+        s = _gqa_scores(qg, k_c)                             # [B,K,G,Sq,C]
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        msk = _mask(q_pos, k_pos, causal=causal, window=window,
+                    kv_valid_len=kv_valid_len)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), v_c,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    idx = jnp.arange(n_chunks, dtype=jnp.int32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (idx, kc, vc, ksc, vsc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="auto", causal=True, window=None, q_offset=0,
+              kv_valid_len=None, k_scale=None, v_scale=None, chunk=1024,
+              softmax_scale=None):
+    kw = dict(causal=causal, window=window, q_offset=q_offset,
+              kv_valid_len=kv_valid_len, k_scale=k_scale, v_scale=v_scale,
+              softmax_scale=softmax_scale)
+    if impl == "auto":
+        impl = "chunked" if (q.shape[1] > 2048 or k.shape[1] > 4096) else "dot"
+    if impl == "dot":
+        return attention_dot(q, k, v, **kw)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, chunk=chunk, **kw)
+    if impl == "flash":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    softmax_scale=softmax_scale)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,127 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU MLP, parameter specs.
+
+Parameters are plain pytrees of jnp arrays.  Every parameter is described by
+a :class:`ParamSpec` carrying its *logical axes*, from which the sharding
+plan derives a PartitionSpec; the same specs drive abstract (dry-run) and
+concrete (smoke/train) initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple              # logical axis names, len == len(shape)
+    dtype: str = "bfloat16"
+    init: str = "normal"        # normal | zeros | ones | ssm_a | ssm_dt
+
+    def fan_in(self) -> int:
+        # first axis is fan-in by convention for matmul params
+        return int(np.prod(self.shape[:-1])) if len(self.shape) > 1 else self.shape[0]
+
+
+def init_param(key, spec: ParamSpec):
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A in [-1, -...]: log-spaced negative decay rates per head
+        lo, hi = 1.0, 16.0
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        return jnp.asarray(-(lo + (hi - lo) * u), dtype)
+    if spec.init == "ssm_dt":
+        # dt_bias ~ softplus^-1(uniform(1e-3, 1e-1))
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               minval=math.log(1e-3), maxval=math.log(1e-1))
+        dt = jnp.exp(u)
+        return jnp.asarray(dt + jnp.log(-jnp.expm1(-dt)), dtype)
+    # fan-in normal init; good enough for a synthetic-data repro
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jnp.asarray(jax.random.normal(key, spec.shape, jnp.float32) * scale, dtype)
+
+
+def init_tree(key, specs):
+    """Initialize a pytree of ParamSpec into concrete arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs, plan):
+    """ShapeDtypeStruct pytree (with shardings) for dry-run lowering."""
+    def mk(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype),
+                                    sharding=plan.sharding(*s.logical))
+    return jax.tree.map(mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_partition(specs, plan):
+    """PartitionSpec pytree matching a ParamSpec pytree."""
+    return jax.tree.map(lambda s: plan.spec(*s.logical), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------- numerics
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., seq, hd/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, plan=None):
+    """SwiGLU MLP with Megatron TP (mlp dim sharded -> XLA all-reduces after
+    w_down).  x: [..., D]."""
+    h_g = jnp.einsum("...d,df->...f", x, w_gate)
+    h_u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def cross_entropy_loss(logits, labels, real_vocab: int, mask=None):
+    """Vocab-sharding-friendly CE.
+
+    logits: [..., V_pad] (vocab possibly padded & model-sharded);
+    labels: [...] int32.  logsumexp/one-hot contractions stay fused per
+    shard; XLA inserts the (tiny) cross-shard reductions.
+    """
+    v_pad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    logits = jnp.where(iota < real_vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,586 @@
+"""Unified LM wrapper covering every assigned architecture family.
+
+One :class:`LM` object = (ModelConfig, ShardingPlan).  It exposes:
+
+    param_specs() / init(rng) / abstract_params()
+    forward(params, tokens, ...)            train / prefill
+    cache_struct()/init_cache()             decode caches (KV / SSM / conv)
+    decode(params, cache, token, pos)       one-token serve step
+
+Design notes
+------------
+* scan-over-layers keeps HLO depth-independent; hybrid (Jamba) scans over
+  period-8 *groups* (1 attention + 7 mamba sub-layers, FFN alternating
+  dense/MoE) so the stacked params stay homogeneous.
+* gemma3's 5:1 local:global pattern is a per-layer ``window`` / ``theta``
+  array fed through the scan — local and global layers share weight shapes,
+  so no branching is needed.
+* Heads / vocab are padded per the sharding plan (Megatron-style); configs
+  on a 1-wide model axis are exactly the assigned architecture.
+* KV caches may be int8 (per-(token,head) absmax scales).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamSpec, abstract_tree, cross_entropy_loss,
+                                 init_tree, rms_norm, apply_rope, swiglu,
+                                 spec_tree_partition)
+from repro.sharding.plan import ShardingPlan
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+def _ln(lead, D, axes):
+    return ParamSpec((*lead, D), (*axes, "embed"), init="zeros")
+
+
+def _attn_specs(cfg: ModelConfig, plan: ShardingPlan, lead, axes,
+                cross: bool = False) -> Dict[str, ParamSpec]:
+    D, hd = cfg.d_model, cfg.head_dim
+    s = {
+        "wq": ParamSpec((*lead, D, plan.H, hd), (*axes, "embed", "q_heads", "head_dim")),
+        "wk": ParamSpec((*lead, D, plan.K, hd), (*axes, "embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((*lead, D, plan.K, hd), (*axes, "embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((*lead, plan.H, hd, D), (*axes, "q_heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = ParamSpec((*lead, plan.H, hd), (*axes, "q_heads", "head_dim"), init="zeros")
+        s["bk"] = ParamSpec((*lead, plan.K, hd), (*axes, "kv_heads", "head_dim"), init="zeros")
+        s["bv"] = ParamSpec((*lead, plan.K, hd), (*axes, "kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _mlp_specs(cfg, lead, axes):
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((*lead, D, F), (*axes, "embed", "mlp")),
+        "w_up": ParamSpec((*lead, D, F), (*axes, "embed", "mlp")),
+        "w_down": ParamSpec((*lead, F, D), (*axes, "mlp", "embed")),
+    }
+
+
+def _moe_specs(cfg, lead, axes):
+    D, m = cfg.d_model, cfg.moe
+    E, F = m.num_experts, m.d_ff_expert
+    return {
+        "router": ParamSpec((*lead, D, E), (*axes, "embed", "experts")),
+        "w_gate": ParamSpec((*lead, E, D, F), (*axes, "experts", "embed", "expert_mlp")),
+        "w_up": ParamSpec((*lead, E, D, F), (*axes, "experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((*lead, E, F, D), (*axes, "experts", "expert_mlp", "embed")),
+    }
+
+
+def _ssm_specs(cfg, lead, axes):
+    s, D = cfg.ssm, cfg.d_model
+    di, nh = s.d_inner(D), s.n_heads(D)
+    GN = s.n_groups * s.d_state
+    W = s.conv_width
+    return {
+        "w_z": ParamSpec((*lead, D, di), (*axes, "embed", "d_inner")),
+        "w_x": ParamSpec((*lead, D, di), (*axes, "embed", "d_inner")),
+        "w_B": ParamSpec((*lead, D, GN), (*axes, "embed", "state")),
+        "w_C": ParamSpec((*lead, D, GN), (*axes, "embed", "state")),
+        "w_dt": ParamSpec((*lead, D, nh), (*axes, "embed", "ssm_heads")),
+        "dt_bias": ParamSpec((*lead, nh), (*axes, "ssm_heads"), init="ssm_dt"),
+        "a_log": ParamSpec((*lead, nh), (*axes, "ssm_heads"), init="zeros"),
+        "d_skip": ParamSpec((*lead, nh), (*axes, "ssm_heads"), init="ones"),
+        "conv_w": ParamSpec((*lead, W, di), (*axes, "conv", "d_inner")),
+        "conv_b": ParamSpec((*lead, di), (*axes, "d_inner"), init="zeros"),
+        "conv_wB": ParamSpec((*lead, W, GN), (*axes, "conv", "state")),
+        "conv_bB": ParamSpec((*lead, GN), (*axes, "state"), init="zeros"),
+        "conv_wC": ParamSpec((*lead, W, GN), (*axes, "conv", "state")),
+        "conv_bC": ParamSpec((*lead, GN), (*axes, "state"), init="zeros"),
+        "norm": ParamSpec((*lead, di), (*axes, "d_inner"), init="zeros"),
+        "w_out": ParamSpec((*lead, di, D), (*axes, "d_inner", "embed")),
+    }
+
+
+def _quantize_kv(x):
+    """x [...,hd] -> (int8, scale[...])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, plan: ShardingPlan):
+        self.cfg = cfg
+        self.plan = plan
+        if cfg.hybrid is not None:
+            assert cfg.num_layers % cfg.hybrid.attn_period == 0
+            self.n_groups = cfg.num_layers // cfg.hybrid.attn_period
+        else:
+            self.n_groups = 0
+
+    # ------------------------------------------------------------- params
+    def param_specs(self):
+        cfg, plan = self.cfg, self.plan
+        D, L = cfg.d_model, cfg.num_layers
+        p: Dict[str, Any] = {
+            "embed": ParamSpec((plan.V, D), ("vocab", "embed")),
+            "final_norm": ParamSpec((D,), ("embed",), init="zeros"),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = ParamSpec((D, plan.V), ("embed", "vocab"))
+
+        if cfg.family == "hybrid":
+            g, per = self.n_groups, cfg.hybrid.attn_period
+            n_moe = sum(1 for i in range(per) if cfg.is_moe_layer(i))
+            n_dense = per - n_moe
+            p["groups"] = {
+                "ln_mix": _ln((g, per), D, ("groups", "layers")),
+                "ln_ffn": _ln((g, per), D, ("groups", "layers")),
+                "attn": _attn_specs(cfg, plan, (g,), ("groups",)),
+                "mamba": _ssm_specs(cfg, (g, per - 1), ("groups", "layers")),
+                "dense_ffn": _mlp_specs(cfg, (g, n_dense), ("groups", "layers")),
+                "moe": _moe_specs(cfg, (g, n_moe), ("groups", "layers")),
+            }
+        elif cfg.family == "ssm":
+            p["blocks"] = {
+                "ln": _ln((L,), D, ("layers",)),
+                "mamba": _ssm_specs(cfg, (L,), ("layers",)),
+            }
+        else:
+            blocks: Dict[str, Any] = {
+                "ln1": _ln((L,), D, ("layers",)),
+                "ln2": _ln((L,), D, ("layers",)),
+                "attn": _attn_specs(cfg, plan, (L,), ("layers",)),
+            }
+            if cfg.moe is not None:
+                blocks["moe"] = _moe_specs(cfg, (L,), ("layers",))
+            else:
+                blocks["mlp"] = _mlp_specs(cfg, (L,), ("layers",))
+            p["blocks"] = blocks
+
+        if cfg.encoder is not None:
+            Le = cfg.encoder.num_layers
+            p["encoder"] = {
+                "ln1": _ln((Le,), D, ("layers",)),
+                "ln2": _ln((Le,), D, ("layers",)),
+                "attn": _attn_specs(cfg, plan, (Le,), ("layers",)),
+                "mlp": _mlp_specs(cfg, (Le,), ("layers",)),
+                "final_norm": ParamSpec((D,), ("embed",), init="zeros"),
+            }
+            p["cross"] = {
+                "ln": _ln((L,), D, ("layers",)),
+                "attn": _attn_specs(cfg, plan, (L,), ("layers",), cross=True),
+            }
+        return p
+
+    def init(self, rng):
+        return init_tree(rng, self.param_specs())
+
+    def abstract_params(self):
+        return abstract_tree(self.param_specs(), self.plan)
+
+    def param_partition_specs(self):
+        return spec_tree_partition(self.param_specs(), self.plan)
+
+    # ------------------------------------------------------------ helpers
+    def _layer_windows(self):
+        cfg = self.cfg
+        win, theta = [], []
+        for i in range(cfg.num_layers):
+            if cfg.is_global_attn_layer(i):
+                win.append(-1)
+                theta.append(cfg.rope_theta)
+            else:
+                win.append(cfg.sliding_window)
+                theta.append(10_000.0)   # gemma3: local layers use 10k rope
+        return (jnp.asarray(win, jnp.int32), jnp.asarray(theta, jnp.float32))
+
+    def _attn(self, x, p, *, window, theta, causal=True, q_offset=0,
+              cache=None, pos=None, cross_kv=None, prefill_kv_dtype=None,
+              impl=None):
+        """Attention sub-layer.  Exactly one cache mode:
+          cache+pos      -> decode (write at pos, read whole cache)
+          prefill_kv_dtype -> prefill (emit fresh cache of the seq length)
+          neither        -> plain training attention
+        Returns (out [B,S,D], new_cache_entry_or_None).
+        """
+        cfg, plan = self.cfg, self.plan
+        B, S, D = x.shape
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"]
+        if cross_kv is not None:
+            q = plan.act(q, "batch", "seq", "q_heads", "head_dim")
+            out = attn_mod.attention(
+                q, cross_kv["k"], cross_kv["v"], impl=impl or "dot",
+                causal=False, window=None, chunk=cfg.attention_chunk)
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        if pos is None:
+            positions = q_offset + jnp.arange(S, dtype=jnp.int32)[None, :]
+        else:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+        q = plan.act(q, "batch", "seq", "q_heads", "head_dim")
+
+        new_cache = None
+        if cache is not None:
+            assert pos is not None
+            new_cache = dict(cache)
+            if "k_scale" in cache:
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+                new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+                new_cache["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, pos, 0))
+                new_cache["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, pos, 0))
+                k_all, v_all = new_cache["k"], new_cache["v"]
+                k_scale, v_scale = new_cache["k_scale"], new_cache["v_scale"]
+            else:
+                new_cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+                new_cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+                k_all, v_all = new_cache["k"], new_cache["v"]
+                k_scale = v_scale = None
+            out = attn_mod.attention(
+                q, k_all, v_all, impl=impl or "dot", causal=False,
+                window=window, q_offset=pos, kv_valid_len=pos + 1,
+                k_scale=k_scale, v_scale=v_scale, chunk=cfg.attention_chunk)
+        else:
+            impl_eff = impl or cfg.attention_impl
+            out = attn_mod.attention(
+                q, k, v, impl=impl_eff, causal=causal, window=window,
+                q_offset=q_offset, chunk=cfg.attention_chunk)
+            if prefill_kv_dtype is not None:
+                if prefill_kv_dtype == "int8":
+                    kq, ks = _quantize_kv(k)
+                    vq, vs = _quantize_kv(v)
+                    new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+                else:
+                    dt = jnp.dtype(prefill_kv_dtype)
+                    new_cache = {"k": k.astype(dt), "v": v.astype(dt)}
+        out = plan.act(out, "batch", "seq", "q_heads", "head_dim")
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    def _ffn(self, x, is_moe: bool, moe_p=None, mlp_p=None):
+        cfg, plan = self.cfg, self.plan
+        if is_moe:
+            return moe_mod.moe_ffn(x, moe_p, cfg.moe, plan, impl=cfg.moe_impl,
+                                   gather_mode=cfg.moe_gather)
+        return swiglu(x, mlp_p["w_gate"], mlp_p["w_up"], mlp_p["w_down"]), jnp.float32(0)
+
+    def _maybe_remat(self, fn):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return fn
+        if cfg.remat == "full":
+            return jax.checkpoint(fn, prevent_cse=False)
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, tokens, *, embeds_prefix=None, enc_embeds=None,
+                labels=None, mode="train", kv_dtype="bfloat16"):
+        """mode 'train': returns {'loss', 'aux_loss'} (labels required) or
+        {'logits'}.  mode 'prefill': returns {'logits' [B,1,V], 'cache'}."""
+        cfg, plan = self.cfg, self.plan
+        x = self._embed_inputs(params, tokens, embeds_prefix)
+
+        enc_out = None
+        if cfg.encoder is not None:
+            enc_out = self._encoder(params["encoder"], enc_embeds)
+
+        want_cache = mode == "prefill"
+        x, new_cache, aux = self._stack(
+            params, x, enc_out=enc_out,
+            prefill_kv_dtype=kv_dtype if want_cache else None)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        if mode == "prefill":
+            logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head)
+            return {"logits": self._mask_vocab(logits), "cache": new_cache}
+
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        logits = plan.act(logits, "batch", "seq", "vocab")
+        out = {"aux_loss": aux}
+        if labels is not None:
+            n_img = x.shape[1] - tokens.shape[1]
+            if n_img > 0:
+                logits = logits[:, n_img:]
+            out["loss"] = cross_entropy_loss(
+                logits[:, :-1], labels[:, 1:], cfg.vocab_size) + 0.01 * aux
+        else:
+            out["logits"] = self._mask_vocab(logits)
+        return out
+
+    def _mask_vocab(self, logits):
+        v_real = self.cfg.vocab_size
+        if logits.shape[-1] == v_real:
+            return logits
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        return jnp.where(iota < v_real, logits, -1e30)
+
+    def _embed_inputs(self, params, tokens, embeds_prefix):
+        cfg, plan = self.cfg, self.plan
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if embeds_prefix is not None:
+            x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+        return plan.act(x, "batch", "seq", "embed")
+
+    def _encoder(self, ep, enc_embeds):
+        cfg, plan = self.cfg, self.plan
+        x = plan.act(enc_embeds.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "embed")
+
+        def body(x, lp):
+            h, _ = self._attn(rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                              window=None, theta=cfg.rope_theta, causal=False)
+            x = x + h
+            m = lp["mlp"]
+            x = x + swiglu(rms_norm(x, lp["ln2"], cfg.norm_eps),
+                           m["w_gate"], m["w_up"], m["w_down"])
+            return plan.act(x, "batch", "seq", "embed"), None
+
+        body = self._maybe_remat(body)
+        xs = {k: v for k, v in ep.items() if k != "final_norm"}
+        x, _ = jax.lax.scan(body, x, xs)
+        return rms_norm(x, ep["final_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------- layer stacks
+    def _stack(self, params, x, cache=None, enc_out=None, pos=None,
+               prefill_kv_dtype=None):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return self._stack_hybrid(params, x, cache=cache, pos=pos,
+                                      prefill_kv_dtype=prefill_kv_dtype)
+        if cfg.family == "ssm":
+            return self._stack_ssm(params, x, cache=cache, pos=pos,
+                                   want_cache=prefill_kv_dtype is not None)
+        return self._stack_attn(params, x, cache=cache, enc_out=enc_out,
+                                pos=pos, prefill_kv_dtype=prefill_kv_dtype)
+
+    def _stack_attn(self, params, x, cache=None, enc_out=None, pos=None,
+                    prefill_kv_dtype=None):
+        cfg, plan = self.cfg, self.plan
+        bp = params["blocks"]
+        win, theta = self._layer_windows()
+        has_moe = cfg.moe is not None
+        is_encdec = cfg.encoder is not None
+        cross_p = params.get("cross")
+        decode = pos is not None
+        if is_encdec and decode:
+            self_cache, cross_cache = cache["self"], cache["cross"]
+        else:
+            self_cache, cross_cache = cache, None
+
+        def body(x, xs):
+            lp, w_i, th_i, layer_cache, cross_c, cross_lp = xs
+            if cfg.sliding_window <= 0:
+                w_i = None   # static: allows the Pallas flash path
+            h, new_c = self._attn(
+                rms_norm(x, lp["ln1"], cfg.norm_eps), lp["attn"],
+                window=w_i, theta=th_i, causal=True,
+                cache=layer_cache, pos=pos,
+                prefill_kv_dtype=prefill_kv_dtype)
+            x = x + h
+            new_cross = None
+            if cross_lp is not None:
+                if decode:
+                    kv = cross_c
+                    new_cross = cross_c
+                else:
+                    kv = {"k": jnp.einsum("bsd,dhk->bshk", enc_out, cross_lp["attn"]["wk"]),
+                          "v": jnp.einsum("bsd,dhk->bshk", enc_out, cross_lp["attn"]["wv"])}
+                    new_cross = kv if prefill_kv_dtype is not None else None
+                h, _ = self._attn(rms_norm(x, cross_lp["ln"], cfg.norm_eps),
+                                  cross_lp["attn"], window=None,
+                                  theta=cfg.rope_theta, cross_kv=kv)
+                x = x + h
+            y, aux = self._ffn(rms_norm(x, lp["ln2"], cfg.norm_eps),
+                               has_moe, moe_p=lp.get("moe"), mlp_p=lp.get("mlp"))
+            x = plan.act(x + y, "batch", "seq", "embed")
+            return x, (new_c, new_cross, aux)
+
+        body = self._maybe_remat(body)
+        xs = ({k: bp[k] for k in bp}, win, theta, self_cache, cross_cache,
+              cross_p)
+        x, (new_self, new_cross, aux) = jax.lax.scan(body, x, xs)
+        new_cache = None
+        if new_self is not None:
+            new_cache = ({"self": new_self, "cross": new_cross}
+                         if is_encdec else new_self)
+        return x, new_cache, jnp.mean(aux)
+
+    def _stack_ssm(self, params, x, cache=None, pos=None, want_cache=False):
+        cfg, plan = self.cfg, self.plan
+        decode = pos is not None
+
+        def body(x, xs):
+            lp, layer_cache = xs
+            h0 = conv0 = None
+            if layer_cache is not None:
+                h0, conv0 = layer_cache["ssm"], layer_cache["conv"]
+            h, (h_new, conv_new) = ssm_mod.mamba_block(
+                rms_norm(x, lp["ln"], cfg.norm_eps), lp["mamba"], cfg,
+                plan=plan, h0=h0 if decode else None, conv0=conv0,
+                decode=decode)
+            x = plan.act(x + h, "batch", "seq", "embed")
+            new_c = None
+            if layer_cache is not None or want_cache:
+                new_c = {"ssm": h_new, "conv": conv_new}
+            return x, new_c
+
+        body = self._maybe_remat(body)
+        bp = params["blocks"]
+        x, new_cache = jax.lax.scan(body, x, (bp, cache))
+        return x, new_cache, jnp.float32(0)
+
+    def _stack_hybrid(self, params, x, cache=None, pos=None,
+                      prefill_kv_dtype=None):
+        cfg, plan = self.cfg, self.plan
+        gp = params["groups"]
+        per = cfg.hybrid.attn_period
+        decode = pos is not None
+        want_cache = decode or prefill_kv_dtype is not None
+
+        def group_body(x, xs):
+            g, gcache = xs
+            aux_total = jnp.float32(0)
+            new_c: Dict[str, Any] = {}
+            mamba_states, conv_states, moe_i, dense_i = [], [], 0, 0
+            for i in range(per):
+                xin = rms_norm(x, g["ln_mix"][i], cfg.norm_eps)
+                if cfg.is_attn_layer(i):
+                    layer_cache = gcache["attn"] if decode else None
+                    h, c = self._attn(xin, g["attn"], window=None,
+                                      theta=cfg.rope_theta, causal=True,
+                                      cache=layer_cache, pos=pos,
+                                      prefill_kv_dtype=prefill_kv_dtype)
+                    if want_cache:
+                        new_c["attn"] = c
+                else:
+                    j = i - 1
+                    mp = jax.tree.map(lambda a: a[j], g["mamba"])
+                    h0 = conv0 = None
+                    if decode:
+                        h0 = jax.tree.map(lambda a: a[j], gcache["ssm"])
+                        conv0 = jax.tree.map(lambda a: a[j], gcache["conv"])
+                    h, (h_new, conv_new) = ssm_mod.mamba_block(
+                        xin, mp, cfg, plan=plan, h0=h0, conv0=conv0,
+                        decode=decode)
+                    if want_cache:
+                        mamba_states.append(h_new)
+                        conv_states.append(conv_new)
+                x = x + h
+                xf = rms_norm(x, g["ln_ffn"][i], cfg.norm_eps)
+                if cfg.is_moe_layer(i):
+                    mo = jax.tree.map(lambda a: a[moe_i], g["moe"])
+                    y, aux = self._ffn(xf, True, moe_p=mo)
+                    moe_i += 1
+                    aux_total += aux
+                else:
+                    ml = jax.tree.map(lambda a: a[dense_i], g["dense_ffn"])
+                    y, _ = self._ffn(xf, False, mlp_p=ml)
+                    dense_i += 1
+                x = plan.act(x + y, "batch", "seq", "embed")
+            if want_cache:
+                new_c["ssm"] = jnp.stack(mamba_states)
+                new_c["conv"] = jnp.stack(conv_states)
+            return x, (new_c if want_cache else None, aux_total / per)
+
+        group_body = self._maybe_remat(group_body)
+        x, (new_cache, aux) = jax.lax.scan(group_body, x, (gp, cache))
+        return x, new_cache, jnp.mean(aux)
+
+    # -------------------------------------------------------------- decode
+    def decode(self, params, cache, token, pos):
+        """One serve step. token [B,1] int32; pos scalar int32.
+        Returns (logits [B,1,V_pad] with padded vocab masked, new_cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, token, None)
+        x, new_cache, _ = self._stack(params, x, cache=cache, pos=pos)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+        return self._mask_vocab(logits), new_cache
+
+    # ----------------------------------------------------------- caches
+    def cache_struct(self, batch: int, seq: int, kv_dtype: str):
+        """ShapeDtypeStructs (with shardings) for the decode cache."""
+        cfg, plan = self.cfg, self.plan
+        mesh = plan.info.mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def sds(shape, dtype, spec):
+            return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype),
+                                        sharding=NamedSharding(mesh, spec))
+
+        def kv_layers(lead, S):
+            hd = cfg.head_dim
+            full = plan.kv_cache_spec(batch)   # [L,2,B,S,K,hd]
+            n = len(lead)
+            kspec = P(*([None] * n + list(full[2:])))
+            sspec = P(*([None] * n + list(full[2:-1])))
+            out = {
+                "k": sds((*lead, batch, S, plan.K, hd), kv_dtype, kspec),
+                "v": sds((*lead, batch, S, plan.K, hd), kv_dtype, kspec),
+            }
+            if kv_dtype == "int8":
+                out["k_scale"] = sds((*lead, batch, S, plan.K), "float32", sspec)
+                out["v_scale"] = sds((*lead, batch, S, plan.K), "float32", sspec)
+            return out
+
+        def ssm_layers(lead):
+            s = cfg.ssm
+            nh, Pd, N = s.n_heads(cfg.d_model), s.head_dim, s.d_state
+            di = s.d_inner(cfg.d_model)
+            GN = s.n_groups * s.d_state
+            hfull = plan.ssm_cache_spec(batch)
+            cfull = plan.conv_cache_spec(batch)
+            n = len(lead)
+            hspec = P(*([None] * n + list(hfull[1:])))
+            cvspec = P(*([None] * n + list(cfull[1:])))
+            return {
+                "ssm": sds((*lead, batch, nh, Pd, N), "float32", hspec),
+                "conv": sds((*lead, batch, s.conv_width - 1, di + 2 * GN),
+                            "float32", cvspec),
+            }
+
+        if cfg.family == "ssm":
+            return ssm_layers((cfg.num_layers,))
+        if cfg.family == "hybrid":
+            per = cfg.hybrid.attn_period
+            return {
+                "attn": kv_layers((self.n_groups,), seq),
+                **ssm_layers((self.n_groups, per - 1)),
+            }
+        c = kv_layers((cfg.num_layers,), seq)
+        if cfg.encoder is not None:
+            src = cfg.encoder.source_len
+            full = plan.kv_cache_spec(batch)
+            cspec = P(None, *full[2:])
+            return {"self": c, "cross": {
+                "k": sds((cfg.num_layers, batch, src, plan.K, cfg.head_dim),
+                         cfg.dtype, cspec),
+                "v": sds((cfg.num_layers, batch, src, plan.K, cfg.head_dim),
+                         cfg.dtype, cspec),
+            }}
+        return c
+
+    def init_cache(self, batch: int, seq: int, kv_dtype: str = "bfloat16"):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_struct(batch, seq, kv_dtype),
+            is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))

@@ -1,0 +1,205 @@
+"""Mamba-2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Chunked "block decomposition" form: within a chunk the SSD is evaluated as a
+masked attention-like quadratic (MXU-friendly); across chunks a recurrent
+state [B, H, P, N] is carried by a lax.scan.  This jnp implementation is the
+oracle-equivalent of the Pallas kernel (kernels/ssd_scan.py) and the path
+used at scale under pjit (heads sharded over the model axis; all SSD einsums
+are head-parallel, so no collectives inside the scan).
+
+Decode uses the O(1) recurrence: h = h * exp(A dt) + dt * B (x) ; y = C . h.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rms_norm
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    with jax.named_scope("ssd_core"):
+        return _ssd_chunked(x, dt, A, B, C, chunk, h0=h0)
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """SSD over a full sequence.
+
+    x  [b, S, H, P]   per-head inputs
+    dt [b, S, H]      positive step sizes (already softplus'd)
+    A  [H]            negative per-head decay
+    B  [b, S, G, N]   input projections (G groups, H % G == 0)
+    C  [b, S, G, N]   output projections
+    h0 optional initial state [b, H, P, N]
+    returns (y [b,S,H,P], h_final [b,H,P,N])
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Hg = H // G
+    S_orig = S
+    if S % chunk:
+        # zero-pad the tail: dt=0 rows are exact no-ops for both the output
+        # at positions < S and the final state (decay exp(0)=1, B*dt=0).
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+
+    # chunk-major
+    xr = x.reshape(b, nc, chunk, G, Hg, P).transpose(1, 0, 2, 3, 4, 5)
+    dtr = dt.reshape(b, nc, chunk, G, Hg).transpose(1, 0, 2, 3, 4)
+    Br = B.reshape(b, nc, chunk, G, N).transpose(1, 0, 2, 3, 4)
+    Cr = C.reshape(b, nc, chunk, G, N).transpose(1, 0, 2, 3, 4)
+    Ar = A.reshape(G, Hg)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, G, Hg, P, N), jnp.float32)
+    else:
+        h0 = h0.reshape(b, G, Hg, P, N).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))      # i >= j
+
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs                            # [b,Q,...]
+        da = dtc.astype(jnp.float32) * Ar[None, None]   # [b,Q,G,Hg]  (<=0)
+        cum = jnp.cumsum(da, axis=1)                    # [b,Q,G,Hg]
+        total = cum[:, -1]                              # [b,G,Hg]
+
+        # ---- intra-chunk (quadratic, masked) --------------------------
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cc, Bc,
+                        preferred_element_type=jnp.float32)  # [b,G,Q,Q]
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])   # [b,Qi,Qj,G,Hg]
+        att = CB.transpose(0, 2, 3, 1)[..., None]            # [b,Qi,Qj,G,1]
+        att = att * decay * dtc[:, None, :, :, :]            # [b,Qi,Qj,G,Hg]
+        att = jnp.where(tri[None, :, :, None, None], att, 0.0)
+        y_intra = jnp.einsum("bijgh,bjghp->bighp", att,
+                             xc.astype(jnp.float32))
+
+        # ---- inter-chunk via carried state ----------------------------
+        # y_inter_i = exp(cum_i) * C_i . h_prev
+        Ch = jnp.einsum("bqgn,bghpn->bqghp", Cc.astype(jnp.float32), h)
+        y_inter = jnp.exp(cum)[..., None] * Ch
+        y = (y_intra + y_inter)
+
+        # ---- state update ---------------------------------------------
+        w = jnp.exp(total[:, None] - cum) * dtc             # [b,Q,G,Hg]
+        S_c = jnp.einsum("bqgn,bqghp->bghpn",
+                         Bc.astype(jnp.float32),
+                         w[..., None] * xc.astype(jnp.float32))
+        h_new = h * jnp.exp(total)[..., None, None] + S_c
+        return h_new, y
+
+    xs = (xr, dtr, Br, Cr)
+    h_f, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4, 5).reshape(b, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_f.reshape(b, H, P, N)
+
+
+def ssd_decode_step(h, x, dt, A, B, C):
+    """One-token SSD update.
+
+    h [b,H,P,N] f32; x [b,H,P]; dt [b,H]; A [H]; B,C [b,G,N].
+    returns (y [b,H,P], h_new)
+    """
+    bsz, H, P, N = h.shape
+    G = B.shape[1]
+    Hg = H // G
+    da = jnp.exp(dt.astype(jnp.float32) * A[None])          # [b,H]
+    Bh = jnp.repeat(B, Hg, axis=1).astype(jnp.float32)      # [b,H,N]
+    Ch = jnp.repeat(C, Hg, axis=1).astype(jnp.float32)
+    dx = (dt[..., None] * x).astype(jnp.float32)            # [b,H,P]
+    h_new = h * da[..., None, None] + dx[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y.astype(x.dtype), h_new
+
+
+class MambaState(NamedTuple):
+    """Decode-time cache for one Mamba-2 layer stack (stacked over layers)."""
+    ssm: jax.Array    # [L, B, H, P, N] f32
+    conv: jax.Array   # [L, B, conv_width-1, conv_channels]
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; b [C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def causal_conv_step(conv_state, x_new, w, b):
+    """conv_state [B, W-1, C] (raw inputs); x_new [B, C] ->
+    (out [B,C], new_state [B, W-1, C])."""
+    full = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # [B,W,C]
+    out = jnp.einsum("bwc,wc->bc", full, w) + b
+    return out, full[:, 1:]
+
+
+def mamba_block(u, p, cfg: ModelConfig, plan=None, h0=None, conv0=None,
+                decode: bool = False):
+    """Full Mamba-2 mixer.
+
+    u [B,S,D] (S==1 for decode).  p: layer params dict.
+    conv state = last (W-1) *raw* (pre-conv) xBC rows, concat channels.
+    Returns (out [B,S,D], (h_final, conv_state_final)).
+    """
+    s = cfg.ssm
+    B_, S, D = u.shape
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    GN = G * N
+
+    z = jnp.einsum("bsd,de->bse", u, p["w_z"])
+    xc = jnp.einsum("bsd,de->bse", u, p["w_x"])             # [B,S,di]
+    Bp = jnp.einsum("bsd,dn->bsn", u, p["w_B"])             # [B,S,G*N]
+    Cp = jnp.einsum("bsd,dn->bsn", u, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", u, p["w_dt"])            # [B,S,nh]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xbc_raw = jnp.concatenate([xc, Bp, Cp], axis=-1)
+    if decode:
+        x0, B0, C0 = (conv0[..., :di], conv0[..., di:di + GN],
+                      conv0[..., di + GN:])
+        xc, _ = causal_conv_step(x0, xc[:, 0], p["conv_w"], p["conv_b"])
+        Bp, _ = causal_conv_step(B0, Bp[:, 0], p["conv_wB"], p["conv_bB"])
+        Cp, _ = causal_conv_step(C0, Cp[:, 0], p["conv_wC"], p["conv_bC"])
+        xc, Bp, Cp = xc[:, None], Bp[:, None], Cp[:, None]
+        conv_new = jnp.concatenate([conv0, xbc_raw], axis=1)[:, 1:]
+    else:
+        xc = causal_conv(xc, p["conv_w"], p["conv_b"])
+        Bp = causal_conv(Bp, p["conv_wB"], p["conv_bB"])
+        Cp = causal_conv(Cp, p["conv_wC"], p["conv_bC"])
+        W1 = s.conv_width - 1
+        tail = xbc_raw[:, -W1:] if S >= W1 else jnp.pad(
+            xbc_raw, ((0, 0), (W1 - S, 0), (0, 0)))
+        conv_new = tail.astype(jnp.float32)
+    silu = lambda a: jax.nn.silu(a.astype(jnp.float32)).astype(u.dtype)
+    xc, Bp, Cp = silu(xc), silu(Bp), silu(Cp)
+
+    xh = xc.reshape(B_, S, nh, P)
+    Bm = Bp.reshape(B_, S, G, N)
+    Cm = Cp.reshape(B_, S, G, N)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # [nh], negative
+
+    if decode:
+        y, h_new = ssd_decode_step(h0, xh[:, 0], dt[:, 0], A,
+                                   Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+    else:
+        y, h_new = ssd_chunked(xh, dt, A, Bm, Cm,
+                               chunk=min(s.chunk_size, S), h0=h0)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B_, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)      # gated
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(u.dtype), p["w_out"])
+    return out.astype(u.dtype), (h_new, conv_new)

@@ -1,0 +1,1 @@
+from repro.sharding.plan import MeshInfo, ShardingPlan, make_plan  # noqa: F401

@@ -1,0 +1,214 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallbacks.
+
+The production mesh is ``(data=16, model=16)`` per pod and
+``(pod=2, data=16, model=16)`` across pods (see launch/mesh.py).  Logical
+axes:
+
+    batch      -> (pod, data)          activations / caches
+    seq        -> None (training/prefill); model or (pod,data,model) for
+                  decode KV caches (flash-decode style partial softmax)
+    embed      -> None                  (activations keep d_model replicated)
+    q_heads    -> model  (padded to a multiple of |model| - Megatron pads)
+    kv_heads   -> model if divisible after padding policy, else replicated
+    head_dim   -> None
+    mlp        -> model                 (Megatron FFN TP)
+    vocab      -> model  (padded to a multiple of |model| * 128)
+    experts    -> model                 (expert parallelism)
+    ssm_heads  -> model                 (SSD heads are embarrassingly TP)
+    d_inner    -> model                 (mamba channel dim)
+    layers / state / conv / expert_mlp -> None
+
+A dimension is only ever sharded when it divides the axis size; the *padding
+policy* (below) widens heads/vocab so that the big archs shard cleanly, and
+anything that still does not divide falls back to replication.  This is what
+makes every (arch x shape x mesh) cell lower+compile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# replicated kv params bigger than this get padded+sharded instead
+_KV_REPLICATE_BYTES_LIMIT = 512 * 1024 * 1024
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    mesh: Mesh
+    data_axes: tuple            # ("pod","data") or ("data",) or ()
+    model_axis: Optional[str]   # "model" or None (single device)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+    @property
+    def data_size(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def num_devices(self) -> int:
+        return self.model_size * self.data_size
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshInfo":
+        names = mesh.axis_names
+        model = "model" if "model" in names else None
+        data = tuple(a for a in names if a in ("pod", "data"))
+        return cls(mesh=mesh, data_axes=data, model_axis=model)
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    info: MeshInfo
+    cfg: ModelConfig
+    # padded dims (== cfg dims on a 1-wide model axis)
+    H: int                      # padded q heads
+    K: int                      # padded kv heads
+    V: int                      # padded vocab
+    kv_sharded: bool            # kv_heads -> model?
+    head_pad_overhead: float    # extra attention FLOP fraction from padding
+    # FSDP/ZeRO-3: weights' embed dim additionally sharded over the data
+    # axes (XLA all-gathers per layer at use).  Enabled when one model-axis
+    # shard of the params would not fit HBM (>= ~35B-param archs on a
+    # 16-wide model axis).  Activations are unaffected: the spec() dedupe
+    # drops the data axes on any tensor whose batch dim already owns them.
+    fsdp: bool = False
+
+    # ------------------------------------------------------------- specs
+    def _axis(self, logical: str):
+        m = self.info.model_axis
+        d = self.info.data_axes
+        table = {
+            "batch": d if d else None,
+            "seq": None,
+            "embed": (d if (self.fsdp and d) else None),
+            "q_heads": m,
+            "kv_heads": m if self.kv_sharded else None,
+            "head_dim": None,
+            "mlp": m,
+            "vocab": m,
+            "experts": m,
+            "expert_mlp": None,
+            "ssm_heads": m,
+            "d_inner": m,
+            "layers": None,
+            "groups": None,
+            "state": None,
+            "conv": None,
+            "scalar": None,
+            # flat per-block quantization scales: shard over every axis
+            "blocks": (tuple(d) + ((m,) if m else ())) or None,
+            None: None,
+        }
+        return table[logical]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        axes = [self._axis(l) for l in logical]
+        # a mesh axis may appear at most once in a PartitionSpec
+        seen: set = set()
+        out = []
+        for a in axes:
+            names = a if isinstance(a, tuple) else (a,) if a else ()
+            if any(n in seen for n in names):
+                out.append(None)
+            else:
+                seen.update(names)
+                out.append(a)
+        return P(*out)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.info.mesh, self.spec(*logical))
+
+    # cache specs -----------------------------------------------------------
+    def kv_cache_spec(self, batch: int) -> P:
+        """[layers, 2, batch, seq, kv_heads, head_dim] decode cache.
+
+        batch -> data axes when it divides; kv_heads -> model when sharded;
+        otherwise shard seq over the leftover axes (flash-decode layout).
+        """
+        d, m = self.info.data_axes, self.info.model_axis
+        batch_ax = d if (d and batch % self.info.data_size == 0) else None
+        leftover = [] if batch_ax else list(d)
+        if self.kv_sharded:
+            kv_ax, seq_ax = m, (tuple(leftover) or None)
+        else:
+            kv_ax = None
+            seq_ax = tuple(leftover + ([m] if m else []))
+            seq_ax = seq_ax or None
+        return P(None, None, batch_ax, seq_ax, kv_ax, None)
+
+    def ssm_cache_spec(self, batch: int) -> P:
+        """[layers, batch, ssm_heads, head_dim, state] decode state."""
+        d = self.info.data_axes
+        batch_ax = d if (d and batch % self.info.data_size == 0) else None
+        return P(None, batch_ax, self._axis("ssm_heads"), None, None)
+
+    def conv_cache_spec(self, batch: int) -> P:
+        """[layers, batch, conv_width-1, conv_channels]."""
+        d = self.info.data_axes
+        batch_ax = d if (d and batch % self.info.data_size == 0) else None
+        return P(None, batch_ax, None, self._axis("d_inner"))
+
+    def act(self, x, *logical):
+        """with_sharding_constraint by logical axes."""
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh) -> ShardingPlan:
+    info = MeshInfo.from_mesh(mesh)
+    m = info.model_size
+    if cfg.num_heads == 0:                      # attention-free (pure SSM)
+        H = K = 0
+        kv_sharded = False
+        overhead = 0.0
+    else:
+        H = _round_up(cfg.num_heads, m)
+        # keep GQA grouping valid: H must be a multiple of K
+        K = cfg.num_kv_heads
+        if H % K != 0:
+            K = _smallest_divisor_geq(H, K)
+        kv_sharded = K % m == 0
+        if not kv_sharded:
+            # decide replicate vs pad+shard by replicated byte cost
+            attn_layers = sum(1 for i in range(cfg.num_layers) if cfg.is_attn_layer(i))
+            rep_bytes = 2 * cfg.d_model * K * cfg.head_dim * attn_layers * 2
+            K_pad = _round_up(K, m)
+            if rep_bytes > _KV_REPLICATE_BYTES_LIMIT and H % K_pad == 0:
+                K, kv_sharded = K_pad, True
+        overhead = H / cfg.num_heads - 1.0
+    V = _round_up(cfg.vocab_size, max(m * 128, 128))
+    # FSDP threshold: one model-axis shard of the bf16 params > 4 GiB
+    shard_bytes = 2 * cfg.param_count() / max(m, 1)
+    fsdp = bool(info.data_axes) and shard_bytes > 4 * 2**30
+    return ShardingPlan(info=info, cfg=cfg, H=H, K=K, V=V,
+                        kv_sharded=kv_sharded, head_pad_overhead=overhead,
+                        fsdp=fsdp)
+
+
+def _smallest_divisor_geq(n: int, k: int) -> int:
+    """smallest divisor of n that is >= k (exists: n itself)."""
+    for d in range(k, n + 1):
+        if n % d == 0:
+            return d
+    return n
+
+
+def single_device_mesh() -> Mesh:
+    """1x1 (data, model) mesh for CPU unit tests."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

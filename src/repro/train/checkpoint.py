@@ -1,0 +1,181 @@
+"""Checkpointing with atomic commits, resharding restore, and async save.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf.
+Commit protocol: write into ``step_<N>.tmp`` then os.rename -> a checkpoint
+directory is either complete or absent (crash-safe).  ``restore`` device_puts
+every leaf with the *target* shardings — which may belong to a different
+mesh than the one that saved it (elastic rescale / failover to a smaller or
+larger fleet).  The data-pipeline step counter travels in the manifest, so
+restarts are bit-deterministic.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+_NATIVE_DTYPES = {"bool", "float16", "float32", "float64", "int8", "int16",
+                  "int32", "int64", "uint8", "uint16", "uint32", "uint64",
+                  "complex64", "complex128"}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    """ml_dtypes (bfloat16, fp8, ...) round-trip through .npy as uint views."""
+    if arr.dtype.name in _NATIVE_DTYPES:
+        return arr
+    return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[arr.dtype.itemsize])
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _NATIVE_DTYPES:
+        return arr
+    return arr.view(np.dtype(dtype_name))
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None,
+         keep_last: int = 3):
+    """Synchronous atomic save."""
+    flat = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f"step_{step}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), _to_storable(arr))
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Restore into the structure of `target_tree` (pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of
+    NamedSharding — enables cross-mesh (elastic) restore."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    loaded = {}
+    for key, tgt in flat_target.items():
+        info = manifest["leaves"].get(key)
+        if info is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = _from_storable(np.load(os.path.join(path, info["file"])),
+                             info["dtype"])
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs target {tgt.shape}")
+        sh = flat_shard.get(key)
+        if sh is None and hasattr(tgt, "sharding") and tgt.sharding is not None \
+                and not isinstance(tgt, np.ndarray):
+            sh = getattr(tgt, "sharding", None)
+        loaded[key] = jax.device_put(arr.astype(tgt.dtype), sh)
+    # rebuild tree in target structure
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    vals = []
+    for pth, _ in leaves_with_paths:
+        key = "/".join(_path_str(p) for p in pth)
+        vals.append(loaded[key])
+    return jax.tree_util.tree_unflatten(treedef, vals), manifest
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointer: `save` enqueues a host snapshot and
+    returns immediately; `wait()` drains.  At most one pending save —
+    back-pressure blocks the training loop only if saves can't keep up."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, metadata = item
+            try:
+                save(self.ckpt_dir, step, host_tree, metadata,
+                     keep_last=self.keep_last)
+            except BaseException as e:   # surfaced on next save/wait
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self._q.put((step, host_tree, metadata))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

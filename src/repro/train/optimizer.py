@@ -1,0 +1,178 @@
+"""AdamW with ZeRO-1-style optimizer-state sharding and fp32 master weights.
+
+Optimizer state (m, v, master) is fp32 and sharded over the *data* axes in
+addition to the param's model-axis sharding: for each param we shard the
+first dimension that is still replicated and divides the data-axis size.
+Under pjit this reproduces ZeRO-1 semantics — XLA reduce-scatters gradients
+into the state shards and all-gathers the updated params — without any
+manual collectives.
+
+The schedule is linear warmup -> cosine decay.  Gradient clipping is by
+global norm (fp32).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.sharding.plan import ShardingPlan
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    clip_norm: float = 1.0
+    use_master: bool = True
+    # 8 = block-wise int8 m/v (8-bit Adam, ~6 B/param with fp32 master
+    # instead of 12) — the fix for the 235B-on-one-pod capacity finding
+    state_bits: int = 32
+
+
+def schedule(step, cfg: OptimizerConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * decay
+
+
+def _zero1_logical(spec: ParamSpec, plan: ShardingPlan):
+    """Logical axes for the fp32 state of `spec`: first still-replicated dim
+    that divides the data size is re-tagged to shard over data axes."""
+    if not plan.info.data_axes:
+        return spec.logical
+    dsz = plan.info.data_size
+    logical = list(spec.logical)
+    pspec = plan.spec(*spec.logical)
+    for i, (dim, ax) in enumerate(zip(spec.shape, pspec)):
+        if ax is None and dim % dsz == 0 and dim >= dsz:
+            logical[i] = "batch"          # "batch" maps to the data axes
+            return tuple(logical)
+    return spec.logical
+
+
+def opt_state_specs(param_specs, plan: ShardingPlan, cfg: OptimizerConfig):
+    """ParamSpec pytree for the optimizer state."""
+    from repro.train.quantized_state import n_blocks
+
+    def f32_state(s: ParamSpec):
+        return ParamSpec(s.shape, _zero1_logical(s, plan), dtype="float32",
+                         init="zeros")
+
+    def q8_state(s: ParamSpec):
+        nb = n_blocks(s.shape)
+        scale_logical = ("blocks",) if (plan.info.num_devices > 1 and
+                                        nb % plan.info.num_devices == 0) else (None,)
+        return {"q": ParamSpec(s.shape, _zero1_logical(s, plan),
+                               dtype="int8", init="zeros"),
+                "scale": ParamSpec((nb,), scale_logical, dtype="float32",
+                                   init="zeros")}
+
+    mv_state = q8_state if cfg.state_bits == 8 else f32_state
+    is_p = lambda x: isinstance(x, ParamSpec)
+    state = {
+        "m": jax.tree.map(mv_state, param_specs, is_leaf=is_p),
+        "v": jax.tree.map(mv_state, param_specs, is_leaf=is_p),
+        "step": ParamSpec((), (), dtype="int32", init="zeros"),
+    }
+    if cfg.use_master:
+        def master(s: ParamSpec):
+            return ParamSpec(s.shape, _zero1_logical(s, plan), dtype="float32")
+        state["master"] = jax.tree.map(master, param_specs, is_leaf=is_p)
+    return state
+
+
+def init_opt_state(params, plan: ShardingPlan, cfg: OptimizerConfig):
+    """Concrete zero state (master initialized from params)."""
+    from repro.train.quantized_state import n_blocks
+    if cfg.state_bits == 8:
+        zeros = lambda p: {"q": jnp.zeros(p.shape, jnp.int8),
+                           "scale": jnp.zeros((n_blocks(p.shape),),
+                                              jnp.float32)}
+    else:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.use_master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, opt_state, cfg: OptimizerConfig):
+    """One AdamW step.  grads fp32 (or cast here).  Returns
+    (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.clip_norm > 0 else 1.0
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        from repro.train.quantized_state import q8_decode, q8_encode
+        q8 = isinstance(m, dict)
+        if q8:
+            m = q8_decode(m["q"], m["scale"])
+            # v is stored as sqrt(v): int8 absmax quantization in the linear
+            # domain zeroes small second moments and destabilizes Adam
+            v = jnp.square(q8_decode(v["q"], v["scale"]))
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat, vhat = m / bc1, v / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * delta
+        if q8:
+            mq, ms = q8_encode(m)
+            vq, vs = q8_encode(jnp.sqrt(v))
+            m = {"q": mq, "scale": ms}
+            v = {"q": vq, "scale": vs}
+        return new_master.astype(p.dtype), m, v, new_master
+
+    ms, vs = opt_state["m"], opt_state["v"]
+    masters = opt_state.get("master")
+    if masters is None:
+        masters = jax.tree.map(lambda p: None, params)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(ms)
+    flat_v = tdef.flatten_up_to(vs)
+    flat_ma = flat_p if opt_state.get("master") is None else tdef.flatten_up_to(opt_state["master"])
+
+    out = [upd(p, g, m, v, (ma if opt_state.get("master") is not None else None))
+           for p, g, m, v, ma in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if opt_state.get("master") is not None:
+        new_state["master"] = tdef.unflatten([o[3] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, new_state, metrics

@@ -1,0 +1,92 @@
+"""Elastic controller on real (fast, fake-workload) duets: parallel fan-out,
+timeout, retry, min-results filtering."""
+import threading
+import time
+
+import pytest
+
+from repro.core.controller import ControllerConfig, ElasticController
+from repro.core.duet import DuetRunnable, collect_pairs
+from repro.core.results import analyze
+from repro.core import rmit
+
+
+def _mk_duet(name, t1=0.001, t2=0.0012, fail_first=0):
+    state = {"fails": fail_first}
+
+    def v1():
+        if state["fails"] > 0:
+            state["fails"] -= 1
+            raise RuntimeError("platform failure")
+        return t1
+
+    return DuetRunnable(name, v1, lambda: t2)
+
+
+def test_suite_runs_and_collects_all_pairs():
+    duets = {f"b{i}": _mk_duet(f"b{i}") for i in range(4)}
+    plan = rmit.make_plan(sorted(duets), n_calls=5, repeats_per_call=2, seed=0)
+    ctl = ElasticController(duets, ControllerConfig(max_parallelism=8))
+    rep = ctl.run_suite(plan)
+    grouped = collect_pairs(rep.pairs)
+    assert set(grouped) == set(duets)
+    for v1s, v2s in grouped.values():
+        assert len(v1s) == 10 and len(v2s) == 10
+    assert rep.invocations_failed == 0
+
+
+def test_retry_recovers_transient_failure():
+    duets = {"b": _mk_duet("b", fail_first=1)}
+    plan = rmit.make_plan(["b"], n_calls=3, repeats_per_call=1, seed=1)
+    ctl = ElasticController(duets, ControllerConfig(max_parallelism=2,
+                                                    max_retries=2))
+    rep = ctl.run_suite(plan)
+    assert rep.retries >= 1
+    assert rep.invocations_failed == 0
+    assert len(rep.pairs) == 3
+
+
+def test_failure_without_retries_is_reported():
+    duets = {"b": _mk_duet("b", fail_first=99)}
+    plan = rmit.make_plan(["b"], n_calls=2, repeats_per_call=1, seed=2)
+    ctl = ElasticController(duets, ControllerConfig(max_parallelism=2,
+                                                    max_retries=0))
+    rep = ctl.run_suite(plan)
+    assert rep.invocations_failed == 2
+    assert "b" in rep.failed_benchmarks
+
+
+def test_benchmark_timeout_enforced():
+    duets = {"slow": DuetRunnable("slow", lambda: 99.0, lambda: 99.0)}
+    plan = rmit.make_plan(["slow"], n_calls=1, repeats_per_call=1, seed=3)
+    ctl = ElasticController(duets, ControllerConfig(
+        max_parallelism=1, benchmark_timeout_s=1.0, max_retries=0))
+    rep = ctl.run_suite(plan)
+    assert rep.invocations_failed == 1
+
+
+def test_detects_real_difference_end_to_end():
+    duets = {"fast_vs_slow": _mk_duet("fast_vs_slow", t1=0.001, t2=0.0015)}
+    plan = rmit.make_plan(["fast_vs_slow"], n_calls=15, repeats_per_call=3,
+                          seed=4)
+    ctl = ElasticController(duets, ControllerConfig(max_parallelism=4))
+    rep = ctl.run_suite(plan)
+    res = analyze(rep.pairs)["fast_vs_slow"]
+    assert res.changed and res.direction == 1
+    assert 40 < res.median_diff_pct < 60
+
+
+def test_parallel_execution_faster_than_serial():
+    def mk(name):
+        def run():
+            time.sleep(0.03)
+            return 0.03
+        return DuetRunnable(name, run, run)
+
+    duets = {f"b{i}": mk(f"b{i}") for i in range(8)}
+    plan = rmit.make_plan(sorted(duets), n_calls=1, repeats_per_call=1, seed=5)
+    t0 = time.monotonic()
+    ElasticController(duets, ControllerConfig(max_parallelism=8)).run_suite(plan)
+    parallel_t = time.monotonic() - t0
+    # 8 invocations x 2 runs x 30ms = 480ms serial; parallel should be ~60ms
+    assert parallel_t < 0.4

@@ -1,0 +1,86 @@
+"""Multi-device lower+compile in a subprocess (8 placeholder host devices —
+the 512-device production dry-run runs via launch/dryrun.py; this guards the
+same code path in CI time)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.launch.mesh import make_mesh
+from repro.launch.cells import build_cell
+from repro.analysis.hlo import account
+
+import dataclasses
+import jax.numpy as jnp
+import numpy as np
+from repro.configs.base import MoEConfig
+from repro.models import moe as moe_mod
+from repro.sharding.plan import make_plan
+
+# MoE FSDP gather-mode equivalence: weights vs partial vs dense oracle
+mesh = make_mesh((2, 2), ("data", "model"))
+from repro.configs import get_config
+cfg = get_config("phi3.5-moe-42b-a6.6b").reduced()
+plan = dataclasses.replace(make_plan(cfg, mesh), fsdp=True)
+moe = MoEConfig(num_experts=8, top_k=2, d_ff_expert=16, capacity_factor=8.0)
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+D = 64
+p = {
+    "router": jax.random.normal(ks[0], (D, 8)) * 0.1,
+    "w_gate": jax.random.normal(ks[1], (8, D, 16)) * 0.1,
+    "w_up": jax.random.normal(ks[2], (8, D, 16)) * 0.1,
+    "w_down": jax.random.normal(ks[3], (8, 16, D)) * 0.1,
+}
+x = jax.random.normal(ks[4], (4, 8, D)) * 0.5
+with mesh:
+    y_dense, _ = moe_mod.moe_ffn_dense(x, p, moe)
+    y_w, _ = moe_mod.moe_ffn_sharded(x, p, moe, plan, gather_mode="weights")
+    y_p, _ = moe_mod.moe_ffn_sharded(x, p, moe, plan, gather_mode="partial")
+np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_w), atol=1e-4, rtol=1e-4)
+np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_p), atol=1e-4, rtol=1e-4)
+
+out = [{"arch": "moe-gather-equivalence", "shape": "ok", "mesh": [2, 2],
+        "flops": 1.0, "collectives": []}]
+cells = [
+    ("internlm2-1.8b", "train_4k", (2, 4), ("data", "model")),
+    ("phi3.5-moe-42b-a6.6b", "train_4k", (2, 4), ("data", "model")),
+    ("mamba2-1.3b", "decode_32k", (2, 4), ("data", "model")),
+    ("internlm2-1.8b", "train_4k", (2, 2, 2), ("pod", "data", "model")),
+]
+for arch, shape, mshape, axes in cells:
+    mesh = make_mesh(mshape, axes)
+    with mesh:
+        cell = build_cell(arch, shape, mesh, reduced=True, accum=2)
+        compiled = cell.lower().compile()
+        acct = account(compiled.as_text())
+        out.append({"arch": arch, "shape": shape, "mesh": list(mshape),
+                    "flops": acct.flops,
+                    "collectives": sorted(acct.collective_bytes)})
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_reduced_cells_compile_on_multidevice_meshes():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    records = json.loads(res.stdout.strip().splitlines()[-1])
+    assert len(records) == 5
+    for r in records:
+        assert r["flops"] > 0
+    # data-parallel training must all-reduce gradients
+    assert "all-reduce" in records[1]["collectives"]
+    # multi-pod mesh compiles the same arch
+    assert records[4]["mesh"] == [2, 2, 2]

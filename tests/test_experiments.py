@@ -1,0 +1,62 @@
+"""Light versions of the paper-table experiments (fast, deterministic)."""
+import numpy as np
+import pytest
+
+from repro.core.experiment import (aa_suite, run_faas_experiment,
+                                   run_vm_experiment,
+                                   victoriametrics_like_suite)
+from repro.core.stats import compare_experiments
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return victoriametrics_like_suite()
+
+
+@pytest.fixture(scope="module")
+def original(suite):
+    return run_vm_experiment("original", suite)
+
+
+def test_suite_shape(suite):
+    assert len(suite) == 106
+    assert sum(w.fs_write for w in suite.values()) == 15
+    effects = [abs(w.effect_pct) for w in suite.values()]
+    assert max(effects) > 60
+
+
+def test_aa_no_false_changes(suite):
+    res = run_faas_experiment("aa", aa_suite(suite), seed=21)
+    assert res.n_executed == 90                      # paper: 90/106
+    assert res.n_changed == 0                        # paper: none detected
+
+
+def test_baseline_agrees_with_original(suite, original):
+    base = run_faas_experiment("baseline", suite, seed=11)
+    cmp = compare_experiments(base.changes, original.changes)
+    assert cmp.agreement >= 0.90                     # paper: 95.65%
+    assert len(cmp.opposite_direction) <= 4          # paper: 3 (AddMulti)
+
+
+def test_faas_headline_speed_and_cost(suite, original):
+    single = run_faas_experiment("single", suite, n_calls=45,
+                                 repeats_per_call=1, seed=13)
+    assert single.report.wall_seconds <= 15 * 60     # paper: <= 15 min
+    assert single.report.cost_dollars < original.report.cost_dollars
+    assert original.report.wall_seconds > 2 * 3600   # VM baseline ~4 h
+    assert original.report.wall_seconds / single.report.wall_seconds > 10
+
+
+def test_lower_memory_drops_benchmarks(suite):
+    low = run_faas_experiment("lowmem", suite, memory_mb=1024, seed=14)
+    base = run_faas_experiment("baseline", suite, seed=11)
+    assert low.n_executed < base.n_executed          # paper: 81 < 90
+    assert low.report.timeouts > 0
+
+
+def test_experiments_are_replayable(suite):
+    a = run_faas_experiment("x", suite, seed=9)
+    b = run_faas_experiment("x", suite, seed=9)
+    assert a.report.wall_seconds == b.report.wall_seconds
+    assert {k: v.median_diff_pct for k, v in a.changes.items()} == \
+           {k: v.median_diff_pct for k, v in b.changes.items()}

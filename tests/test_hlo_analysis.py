@@ -1,0 +1,67 @@
+"""HLO parser: trip-count multipliers, dot FLOPs, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import _shape_bytes, account, parse_hlo
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_scan_trip_count_multiplies_flops():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    acc = account(txt)
+    assert acc.flops == 2 * 64 * 32 * 32 * 5
+
+
+def test_nested_scan_multiplies_both_levels():
+    def inner(x, w):
+        return x @ w, None
+
+    def outer(x, ws):
+        def ob(x, _):
+            return jax.lax.scan(inner, x, ws)[0], None
+        return jax.lax.scan(ob, x, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 16, 16), jnp.float32)
+    txt = jax.jit(outer).lower(x, ws).compile().as_text()
+    acc = account(txt)
+    assert acc.flops == 2 * 16 * 16 * 16 * 4 * 3
+
+
+def test_unrolled_matches_analytic():
+    def f(a, b):
+        return (a @ b) @ b
+
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    acc = account(txt)
+    assert acc.flops == 2 * 32 * 64 * 64 * 2
+
+
+def test_parse_hlo_finds_computations():
+    def f(x):
+        return jnp.sum(jnp.sin(x))
+
+    txt = jax.jit(f).lower(jax.ShapeDtypeStruct((128,), jnp.float32))\
+        .compile().as_text()
+    comps = parse_hlo(txt)
+    assert any("main" in name for name in comps)
+    acc = account(txt)
+    assert acc.traffic_bytes > 0
+    assert acc.collective_bytes == {}

@@ -1,0 +1,77 @@
+"""Integration extras: Pallas-kernel-backed attention inside the LM,
+memory autotuning, parallelism elasticity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.sharding.plan import make_plan, single_device_mesh
+
+
+def test_lm_forward_with_flash_kernel_matches_dot():
+    """attention_impl='flash' routes through the Pallas kernel (interpret
+    mode on CPU) and must match the jnp path."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    mesh = single_device_mesh()
+    plan = make_plan(cfg, mesh)
+    lm_dot = LM(dataclasses.replace(cfg, attention_impl="dot"), plan)
+    lm_flash = LM(dataclasses.replace(cfg, attention_impl="flash"), plan)
+    params = lm_dot.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    with mesh:
+        a = lm_dot.forward(params, tokens, mode="train")["logits"]
+        b = lm_flash.forward(params, tokens, mode="train")["logits"]
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    # bf16 end-to-end: block-wise fp32 accumulation differs slightly from
+    # the jnp path; assert distributional closeness, not elementwise equality
+    assert np.mean(np.abs(a - b)) < 0.05
+    assert np.mean(np.abs(a - b) < 0.25) > 0.99
+    # next-token prediction must agree almost everywhere
+    agree = np.mean(np.argmax(a, -1) == np.argmax(b, -1))
+    assert agree > 0.95
+
+
+def test_gemma3_flash_kernel_with_sliding_window():
+    """the window pattern survives the kernel path (static per-layer window
+    requires impl='flash' only on fixed-window layers; here window=16)."""
+    from repro.kernels import flash_attention
+    from repro.models.attention import attention_dot
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    a = flash_attention(q, k, v, causal=True, window=16, interpret=True)
+    b = attention_dot(q, k, v, causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_memory_autotune_consistent_detections():
+    from repro.core.autotune import autotune_memory
+    from repro.core.experiment import victoriametrics_like_suite
+    suite = dict(list(victoriametrics_like_suite().items())[:30])
+    res = autotune_memory(suite, n_calls=12, seed=3)
+    assert res.detections_consistent >= 0.9
+    assert set(res.memory_map) == set(suite)
+    # no benchmark may be tuned into timeout territory
+    assert all(m >= 512 for m in res.memory_map.values())
+
+
+def test_parallelism_elasticity_scales_wall_time():
+    from repro.core import rmit
+    from repro.core.experiment import victoriametrics_like_suite
+    from repro.faas.platform import SimulatedFaaS
+    suite = victoriametrics_like_suite()
+    plan = rmit.make_plan(sorted(suite), n_calls=10, repeats_per_call=1,
+                          seed=4)
+    walls = {}
+    for par in (20, 200):
+        rep = SimulatedFaaS(suite, seed=4).run_suite(plan, parallelism=par)
+        walls[par] = rep.wall_seconds
+    assert walls[200] < walls[20] / 3      # elastic fleets actually help

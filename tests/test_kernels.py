@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, ssd_scan
+from repro.kernels.ref import attention_ref, ssd_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd", [
+    (2, 128, 128, 4, 2, 64),
+    (1, 100, 100, 4, 4, 128),     # non-multiple seq (padding path)
+    (2, 64, 64, 8, 2, 32),
+    (1, 128, 256, 4, 1, 64),      # MQA, longer kv
+    (1, 257, 129, 2, 2, 256),     # odd everything + big head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, K, hd, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, K, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 64, 200])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True, window=window), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 4, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 4, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = jnp.swapaxes(attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True), 1, 2)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2,
+                               rtol=3e-2)
+
+
+@pytest.mark.parametrize("B,S,H,G,P,N,chunk", [
+    (1, 64, 4, 1, 32, 16, 16),
+    (2, 37, 4, 2, 16, 32, 16),    # ragged seq, grouped B/C
+    (1, 128, 2, 1, 64, 128, 32),
+    (1, 96, 8, 4, 16, 16, 48),
+])
+def test_ssd_scan_matches_recurrence(B, S, H, G, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bi = jax.random.normal(ks[3], (B, S, G, N), jnp.float32) * 0.5
+    Ci = jax.random.normal(ks[4], (B, S, G, N), jnp.float32) * 0.5
+    y, st = ssd_scan(x, dt, A, Bi, Ci, chunk=chunk, interpret=True)
+    yr, str_ = ssd_ref(jnp.moveaxis(x, 1, 2), jnp.moveaxis(dt, 1, 2), A,
+                       jnp.moveaxis(Bi, 1, 2), jnp.moveaxis(Ci, 1, 2))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.moveaxis(yr, 1, 2)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_scan_bf16_inputs():
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (1, 64, 2, 32), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 64, 2))).astype(jnp.bfloat16)
+    A = -jnp.exp(jax.random.normal(ks[2], (2,)) * 0.5)
+    Bi = (jax.random.normal(ks[3], (1, 64, 1, 16)) * 0.5).astype(jnp.bfloat16)
+    Ci = (jax.random.normal(ks[4], (1, 64, 1, 16)) * 0.5).astype(jnp.bfloat16)
+    y, st = ssd_scan(x, dt, A, Bi, Ci, chunk=16, interpret=True)
+    yr, _ = ssd_ref(jnp.moveaxis(x, 1, 2), jnp.moveaxis(dt, 1, 2), A,
+                    jnp.moveaxis(Bi, 1, 2), jnp.moveaxis(Ci, 1, 2))
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(jnp.moveaxis(yr, 1, 2), np.float32),
+                               atol=5e-2, rtol=5e-2)

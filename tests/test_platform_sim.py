@@ -1,0 +1,101 @@
+"""Simulated FaaS/VM platforms: determinism + modeled phenomena."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmit
+from repro.core.results import analyze
+from repro.faas.platform import (FaaSPlatformConfig, SimWorkload,
+                                 SimulatedFaaS, SimulatedVM, VMPlatformConfig)
+
+
+def _suite(n=6):
+    return {f"b{i}": SimWorkload(name=f"b{i}", base_seconds=0.5 + 0.1 * i,
+                                 effect_pct=5.0 * (i % 2), setup_seconds=2.0)
+            for i in range(n)}
+
+
+def _plan(suite, **kw):
+    return rmit.make_plan(sorted(suite), **kw)
+
+
+def test_simulation_is_deterministic():
+    suite = _suite()
+    plan = _plan(suite, n_calls=5, seed=1)
+    r1 = SimulatedFaaS(suite, seed=3).run_suite(plan, parallelism=4)
+    r2 = SimulatedFaaS(suite, seed=3).run_suite(plan, parallelism=4)
+    assert r1.wall_seconds == r2.wall_seconds
+    assert [p.v1_seconds for p in r1.pairs] == [p.v1_seconds for p in r2.pairs]
+
+
+def test_parallelism_reduces_wall_time_increases_cold_starts():
+    suite = _suite(12)
+    plan = _plan(suite, n_calls=10, seed=2)
+    lo = SimulatedFaaS(suite, seed=4).run_suite(plan, parallelism=2)
+    hi = SimulatedFaaS(suite, seed=4).run_suite(plan, parallelism=60)
+    assert hi.wall_seconds < lo.wall_seconds
+    assert hi.cold_starts >= lo.cold_starts          # paper §4 tradeoff
+
+
+def test_fs_write_workloads_fail():
+    suite = _suite(4)
+    suite["bad"] = SimWorkload(name="bad", base_seconds=0.5, effect_pct=0,
+                               fs_write=True)
+    plan = _plan(suite, n_calls=3, seed=0)
+    rep = SimulatedFaaS(suite, seed=0).run_suite(plan, parallelism=4)
+    assert "bad" in rep.failed_benchmarks
+    assert "bad" not in rep.executed_benchmarks
+
+
+def test_low_memory_slows_and_times_out():
+    wl = {"slow": SimWorkload(name="slow", base_seconds=8.0, effect_pct=0)}
+    plan = _plan(wl, n_calls=3, seed=0)
+    ok = SimulatedFaaS(wl, FaaSPlatformConfig(memory_mb=2048), seed=1)\
+        .run_suite(plan, parallelism=2)
+    low = SimulatedFaaS(wl, FaaSPlatformConfig(memory_mb=1024), seed=1)\
+        .run_suite(plan, parallelism=2)
+    assert ok.timeouts == 0
+    assert low.timeouts > 0                          # 20 s cap (paper §6.2.4)
+
+
+def test_duet_cancels_instance_heterogeneity():
+    """huge instance sigma must NOT bias the detected relative change."""
+    wl = {"b": SimWorkload(name="b", base_seconds=1.0, effect_pct=10.0,
+                           run_sigma=0.01)}
+    cfg = FaaSPlatformConfig(instance_sigma=0.5)     # wild heterogeneity
+    plan = _plan(wl, n_calls=30, repeats_per_call=2, seed=5)
+    rep = SimulatedFaaS(wl, cfg, seed=5).run_suite(plan, parallelism=10)
+    res = analyze(rep.pairs)["b"]
+    assert res.changed and 7 < res.median_diff_pct < 13
+
+
+def test_vm_platform_runs_everything():
+    suite = _suite(5)
+    plan = _plan(suite, n_calls=12, repeats_per_call=1, seed=6)
+    rep = SimulatedVM(suite, seed=6).run_suite(plan)
+    assert len(rep.executed_benchmarks) == 5
+    assert rep.wall_seconds > 0 and rep.cost_dollars > 0
+
+
+def test_billing_scales_with_memory():
+    suite = _suite(3)
+    plan = _plan(suite, n_calls=4, seed=7)
+    small = SimulatedFaaS(suite, FaaSPlatformConfig(memory_mb=1024), seed=7)\
+        .run_suite(plan, parallelism=4)
+    big = SimulatedFaaS(suite, FaaSPlatformConfig(memory_mb=4096), seed=7)\
+        .run_suite(plan, parallelism=4)
+    # 4x memory at <=1/4 the duration per call: GB-s cost not 4x higher
+    assert big.cost_dollars < 4 * small.cost_dollars
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=40),
+       st.integers(min_value=0, max_value=100))
+def test_wall_time_monotone_in_parallelism(par, seed):
+    suite = _suite(6)
+    plan = _plan(suite, n_calls=4, seed=seed)
+    r1 = SimulatedFaaS(suite, seed=seed).run_suite(plan, parallelism=par)
+    r2 = SimulatedFaaS(suite, seed=seed).run_suite(plan, parallelism=par + 10)
+    assert r2.wall_seconds <= r1.wall_seconds * 1.5 + 60.0

@@ -1,0 +1,46 @@
+"""RMIT scheduling invariants (property-based)."""
+from collections import Counter
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmit
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=1, max_value=20),    # benchmarks
+       st.integers(min_value=1, max_value=20),    # n_calls
+       st.integers(min_value=1, max_value=5),     # repeats/call
+       st.integers(min_value=0, max_value=1000))  # seed
+def test_plan_covers_every_benchmark_exactly(nb, n_calls, repeats, seed):
+    benches = [f"b{i}" for i in range(nb)]
+    plan = rmit.make_plan(benches, n_calls=n_calls, repeats_per_call=repeats,
+                          seed=seed)
+    counts = Counter(inv.benchmark for inv in plan.invocations)
+    assert all(counts[b] == n_calls for b in benches)
+    assert plan.total_results_per_benchmark == n_calls * repeats
+    for inv in plan.invocations:
+        assert len(inv.version_order) == repeats
+        for order in inv.version_order:
+            assert sorted(order) == ["v1", "v2"]
+
+
+def test_plan_deterministic_by_seed():
+    b = [f"b{i}" for i in range(10)]
+    p1 = rmit.make_plan(b, seed=5)
+    p2 = rmit.make_plan(b, seed=5)
+    p3 = rmit.make_plan(b, seed=6)
+    assert p1.invocations == p2.invocations
+    assert p1.invocations != p3.invocations
+
+
+def test_order_is_shuffled_across_suite():
+    b = [f"b{i}" for i in range(50)]
+    plan = rmit.make_plan(b, n_calls=2, seed=0)
+    names = [inv.benchmark for inv in plan.invocations]
+    assert names != sorted(names)
+
+
+def test_version_order_randomized():
+    plan = rmit.make_plan(["b"], n_calls=64, repeats_per_call=1, seed=1)
+    firsts = Counter(inv.version_order[0][0] for inv in plan.invocations)
+    assert firsts["v1"] > 5 and firsts["v2"] > 5

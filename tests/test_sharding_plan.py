@@ -1,0 +1,100 @@
+"""Sharding plan rules: padding, kv policy, fsdp threshold, cache specs.
+
+Uses a mocked 16-wide model axis via an abstract mesh (no devices needed:
+jax.sharding.AbstractMesh carries only shapes/names)."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.sharding.plan import MeshInfo, make_plan
+
+
+def _mesh16():
+    return AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _mesh_pod():
+    return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+CASES = {
+    # arch: (H_pad, K_pad, kv_sharded, fsdp)
+    "gemma3-4b": (16, 4, False, False),
+    "qwen1.5-32b": (48, 48, True, True),
+    "granite-3-8b": (32, 16, True, False),
+    "internlm2-1.8b": (16, 8, False, False),
+    "qwen3-moe-235b-a22b": (64, 16, True, True),
+    "phi3.5-moe-42b-a6.6b": (32, 8, False, True),
+    "llava-next-34b": (64, 16, True, True),
+    "whisper-medium": (16, 16, True, False),
+    "jamba-1.5-large-398b": (64, 8, False, True),
+}
+
+
+@pytest.mark.parametrize("arch,expect", sorted(CASES.items()))
+def test_head_padding_and_kv_policy(arch, expect):
+    cfg = get_config(arch)
+    plan = make_plan(cfg, _mesh16())
+    H, K, kv_sharded, fsdp = expect
+    assert plan.H == H, f"{arch}: H {plan.H} != {H}"
+    assert plan.K == K, f"{arch}: K {plan.K} != {K}"
+    assert plan.kv_sharded == kv_sharded
+    assert plan.fsdp == fsdp
+    assert plan.H % 16 == 0 or plan.H == cfg.num_heads
+    assert plan.H % plan.K == 0                       # GQA grouping valid
+    assert plan.V % 16 == 0 and plan.V >= cfg.vocab_size
+
+
+def test_vocab_padding_alignment():
+    plan = make_plan(get_config("mamba2-1.3b"), _mesh16())
+    assert plan.V % (16 * 128) == 0 and plan.V >= 50280
+
+
+def test_specs_dedupe_mesh_axes():
+    plan = make_plan(get_config("qwen1.5-32b"), _mesh16())   # fsdp on
+    # weights: embed -> data
+    assert plan.spec("embed", "mlp") == P(("data",), "model")
+    # activations: batch claims data; embed must dedupe to None
+    assert plan.spec("batch", "seq", "embed") == P(("data",), None, None)
+
+
+def test_multipod_batch_axes():
+    plan = make_plan(get_config("internlm2-1.8b"), _mesh_pod())
+    assert plan.spec("batch")[0] == ("pod", "data")
+    assert plan.info.data_size == 32
+    assert plan.info.num_devices == 512
+
+
+def test_kv_cache_spec_seq_sharded_when_kv_replicated():
+    plan = make_plan(get_config("gemma3-4b"), _mesh16())     # kv replicated
+    spec = plan.kv_cache_spec(batch=128)
+    # [L, 2, B, S, K, hd]: batch -> data, seq -> model
+    assert spec[2] in ("data", ("data",))
+    assert spec[3] in ("model", ("model",))
+    assert spec[4] is None
+
+
+def test_kv_cache_spec_head_sharded_when_possible():
+    plan = make_plan(get_config("granite-3-8b"), _mesh16())  # K padded to 16
+    spec = plan.kv_cache_spec(batch=128)
+    assert spec[4] == "model"
+
+
+def test_kv_cache_batch1_uses_all_axes_on_seq():
+    plan = make_plan(get_config("jamba-1.5-large-398b"), _mesh16())
+    spec = plan.kv_cache_spec(batch=1)
+    assert spec[2] is None                     # batch 1: can't shard
+    assert "model" in (spec[3] if isinstance(spec[3], tuple) else (spec[3],))
+
+
+def test_reduced_configs_never_pad_on_one_device():
+    from repro.sharding.plan import single_device_mesh
+    for arch in CASES:
+        cfg = get_config(arch).reduced()
+        plan = make_plan(cfg, single_device_mesh())
+        assert plan.H == cfg.num_heads or cfg.num_heads == 0
+        assert plan.head_pad_overhead == 0.0
+        assert not plan.fsdp

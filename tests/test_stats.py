@@ -1,0 +1,128 @@
+"""Statistics layer: bootstrap CIs, change detection, agreement/coverage."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import (ChangeResult, agree, bootstrap_median_ci,
+                              cis_overlap, compare_experiments, detect_change,
+                              one_sided_coverage, relative_diffs,
+                              repeats_for_ci_parity, two_sided_coverage)
+
+
+def test_relative_diffs_basic():
+    v1 = np.array([1.0, 2.0])
+    v2 = np.array([1.1, 1.8])
+    d = relative_diffs(v1, v2)
+    assert np.allclose(d, [10.0, -10.0])
+
+
+def test_bootstrap_ci_contains_median_for_stable_data():
+    x = np.random.default_rng(0).normal(5.0, 0.1, size=100)
+    med, lo, hi = bootstrap_median_ci(x, seed=1)
+    assert lo <= med <= hi
+    assert abs(med - 5.0) < 0.1
+
+
+def test_detect_change_positive_effect():
+    rng = np.random.default_rng(2)
+    v1 = rng.lognormal(0, 0.02, 50)
+    v2 = v1 * 1.10 * rng.lognormal(0, 0.02, 50)
+    res = detect_change("b", v1, v2)
+    assert res.changed and res.direction == 1
+    assert 5 < res.median_diff_pct < 15
+
+
+def test_detect_no_change_aa():
+    rng = np.random.default_rng(3)
+    v1 = rng.lognormal(0, 0.05, 45)
+    v2 = rng.lognormal(0, 0.05, 45)
+    res = detect_change("b", v1, v2, seed=3)
+    assert not res.changed
+
+
+def test_min_results_filter():
+    v = np.ones(5)
+    assert detect_change("b", v, v) is None          # < 10 pairs (paper §6.1)
+    assert detect_change("b", np.ones(10), np.ones(10)) is not None
+
+
+def _cr(med, lo, hi, name="x"):
+    changed = lo > 0 or hi < 0
+    return ChangeResult(name, 45, med, lo, hi, changed,
+                        0 if not changed else (1 if med > 0 else -1))
+
+
+def test_agreement_rules():
+    a = _cr(5, 2, 8)
+    b = _cr(7, 3, 11)
+    c = _cr(-5, -8, -2)
+    d = _cr(0.1, -1, 1)
+    assert agree(a, b)                 # same direction
+    assert not agree(a, c)             # opposite directions
+    assert not agree(a, d)             # change vs no-change
+    assert agree(d, _cr(-0.2, -2, 2))  # both no-change
+
+
+def test_coverage():
+    a = _cr(5, 2, 8)
+    b = _cr(6, 4, 7)
+    assert one_sided_coverage(b, a)    # b's median inside a's CI
+    assert one_sided_coverage(a, b) == (4 <= 5 <= 7)
+    assert two_sided_coverage(a, b) == (one_sided_coverage(a, b)
+                                        and one_sided_coverage(b, a))
+    assert cis_overlap(a, b)
+    assert not cis_overlap(a, _cr(-5, -8, -2))
+
+
+def test_compare_experiments_common_only():
+    res_a = {"x": _cr(5, 2, 8), "y": _cr(0, -1, 1)}
+    res_b = {"x": _cr(6, 3, 9), "z": _cr(1, 0.5, 2)}
+    cmp = compare_experiments(res_a, res_b)
+    assert cmp.n_common == 1 and cmp.agreement == 1.0
+
+
+def test_repeats_for_ci_parity_monotonic_data():
+    rng = np.random.default_rng(5)
+    diffs = rng.normal(3.0, 1.0, 200)
+    n = repeats_for_ci_parity(diffs, target_ci_size=1.0,
+                              steps=list(range(10, 201, 10)))
+    assert n is not None
+    # with a stricter target we need at least as many repeats
+    n2 = repeats_for_ci_parity(diffs, target_ci_size=0.5,
+                               steps=list(range(10, 201, 10)))
+    assert n2 is None or n2 >= n
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=-50, max_value=50), min_size=10,
+                max_size=80),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_ci_always_brackets_sample_median(diffs, seed):
+    x = np.asarray(diffs)
+    med, lo, hi = bootstrap_median_ci(x, seed=seed)
+    assert lo <= med + 1e-9 and med - 1e-9 <= hi
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=0.5, max_value=1.5),
+       st.floats(min_value=0.0, max_value=0.4))
+def test_detection_is_scale_invariant(scale, effect):
+    """Multiplying both versions by a constant must not change detection
+    (duet relies only on relative differences)."""
+    rng = np.random.default_rng(7)
+    v1 = rng.lognormal(0, 0.03, 40)
+    v2 = v1 * (1 + effect)
+    r1 = detect_change("b", v1, v2, seed=8)
+    r2 = detect_change("b", v1 * scale, v2 * scale, seed=8)
+    assert r1.changed == r2.changed
+    assert np.isclose(r1.median_diff_pct, r2.median_diff_pct, atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_bootstrap_deterministic_given_seed(seed):
+    x = np.linspace(-3, 5, 37)
+    a = bootstrap_median_ci(x, seed=seed)
+    b = bootstrap_median_ci(x, seed=seed)
+    assert a == b
