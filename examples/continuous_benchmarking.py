@@ -7,9 +7,10 @@ Then prints the time/cost comparison against the VM-based baseline.
 
     PYTHONPATH=src python examples/continuous_benchmarking.py
 """
-from repro.core.experiment import (run_faas_experiment, run_vm_experiment,
+from repro.core.experiment import (run_adaptive_experiment,
+                                   run_faas_experiment, run_vm_experiment,
                                    victoriametrics_like_suite)
-from repro.core.stats import compare_experiments
+from repro.core.stats import compare_experiments, detection_set_delta
 
 
 def main():
@@ -35,6 +36,30 @@ def main():
     speedup = vm.report.wall_seconds / fa.report.wall_seconds
     print(f"speedup {speedup:.0f}x, cost "
           f"${fa.report.cost_dollars:.2f} vs ${vm.report.cost_dollars:.2f}\n")
+
+    print("== adaptive stopping: same detection, less budget ==")
+    ad = run_adaptive_experiment("ci_adaptive", suite, n_calls=45,
+                                 repeats_per_call=1, parallelism=150, seed=13)
+    only_f, only_a = detection_set_delta(fa.changes, ad.changes)
+    s = ad.adaptive
+    print(f"   wall {ad.report.wall_seconds/60:.1f} min, "
+          f"${ad.report.cost_dollars:.2f}, "
+          f"{ad.invocations_used} invocations "
+          f"(fixed used {len(fa.report.billed_seconds)}), "
+          f"{len(s.stopped_early)} benchmarks stopped early, "
+          f"{s.invocations_added} re-allocated to noisy ones")
+    print(f"   detection delta vs fixed run: {len(only_f) + len(only_a)} "
+          f"benchmarks\n")
+
+    print("== same suite on other provider profiles (shared engine) ==")
+    for provider in ("gcf", "azure"):
+        pr = run_faas_experiment(f"ci_{provider}", suite, n_calls=45,
+                                 repeats_per_call=1, parallelism=150,
+                                 seed=13, provider=provider)
+        print(f"   {provider:6s} wall {pr.report.wall_seconds/60:.1f} min, "
+              f"${pr.report.cost_dollars:.2f}, "
+              f"{pr.n_changed} changes, {pr.report.cold_starts} cold starts")
+    print()
 
     regressions = [c for c in fa.changes.values()
                    if c.changed and c.median_diff_pct > 7.0]

@@ -13,6 +13,14 @@ from dataclasses import dataclass
 # AWS Lambda (ARM, us-east-1, 2024): $0.0000133334 per GB-second + $0.20/1M req
 LAMBDA_GB_SECOND = 0.0000133334
 LAMBDA_PER_REQUEST = 0.20 / 1_000_000
+# Google Cloud Functions gen1: GB-s and GHz-s priced separately, 100 ms
+# rounding, $0.40/1M invocations
+GCF_GB_SECOND = 0.0000025
+GCF_GHZ_SECOND = 0.0000100
+GCF_PER_REQUEST = 0.40 / 1_000_000
+# Azure Functions consumption plan: $0.000016/GB-s + $0.20/1M, 100 ms minimum
+AZURE_GB_SECOND = 0.000016
+AZURE_PER_REQUEST = 0.20 / 1_000_000
 # paper's VM baseline: m5.large-class on-demand
 VM_PER_HOUR = 0.096
 # TPU v5e on-demand per chip-hour (public list price ballpark)

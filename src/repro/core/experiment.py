@@ -21,8 +21,11 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import rmit, stats
-from repro.core.duet import DuetPair
+from repro.core.controller import (AdaptiveConfig, AdaptiveController,
+                                   AdaptiveSummary)
 from repro.core.results import analyze
+from repro.faas.backends import PROVIDER_PROFILES, SimFaaSBackend
+from repro.faas.engine import EngineConfig, EngineReport, ExecutionEngine
 from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimulatedFaaS,
                                  SimulatedVM, SimWorkload, VMPlatformConfig)
 
@@ -87,19 +90,104 @@ class ExperimentResult:
         return sum(1 for c in self.changes.values() if c.changed)
 
 
+def _make_backend(suite: Dict[str, SimWorkload], provider: str,
+                  memory_mb: int, seed: int,
+                  start_time_s: float) -> SimFaaSBackend:
+    if provider == "lambda":
+        # the historical default path: FaaSPlatformConfig -> Lambda profile,
+        # replays the original SimulatedFaaS results bit-for-bit
+        return SimulatedFaaS(suite, FaaSPlatformConfig(memory_mb=memory_mb),
+                             seed=seed, start_time_s=start_time_s)\
+            .make_backend()
+    profile = PROVIDER_PROFILES[provider]
+    return SimFaaSBackend(suite, profile, memory_mb=memory_mb, seed=seed,
+                          start_time_s=start_time_s)
+
+
 def run_faas_experiment(name: str, suite: Dict[str, SimWorkload], *,
                         n_calls: int = 15, repeats_per_call: int = 3,
                         parallelism: int = 150, memory_mb: int = 2048,
                         seed: int = 0, start_time_s: float = 0.0,
-                        min_results: int = 10) -> ExperimentResult:
+                        min_results: int = 10,
+                        provider: str = "lambda",
+                        max_retries: int = 0) -> ExperimentResult:
     plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
                           repeats_per_call=repeats_per_call, seed=seed)
-    platform = SimulatedFaaS(
-        suite, FaaSPlatformConfig(memory_mb=memory_mb), seed=seed,
-        start_time_s=start_time_s)
-    report = platform.run_suite(plan, parallelism=parallelism)
+    backend = _make_backend(suite, provider, memory_mb, seed, start_time_s)
+    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism,
+                                                   max_retries=max_retries))
+    report = SimReport.from_engine(engine.run(plan))
     changes = analyze(report.pairs, seed=seed, min_results=min_results)
     return ExperimentResult(name=name, report=report, changes=changes)
+
+
+@dataclass
+class AdaptiveExperimentResult(ExperimentResult):
+    engine_report: Optional[EngineReport] = None   # skipped/topped-up detail
+    adaptive: Optional[AdaptiveSummary] = None
+
+    @property
+    def invocations_used(self) -> int:
+        return len(self.report.billed_seconds)
+
+
+def run_adaptive_experiment(name: str, suite: Dict[str, SimWorkload], *,
+                            n_calls: int = 15, repeats_per_call: int = 3,
+                            parallelism: int = 150, memory_mb: int = 2048,
+                            seed: int = 0, start_time_s: float = 0.0,
+                            min_results: int = 10,
+                            provider: str = "lambda",
+                            max_retries: int = 0,
+                            adaptive_cfg: Optional[AdaptiveConfig] = None
+                            ) -> AdaptiveExperimentResult:
+    """Same plan as `run_faas_experiment`, but with the AdaptiveController
+    attached: benchmarks stop once their CI is tight and the saved budget
+    tops up noisy ones."""
+    plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
+                          repeats_per_call=repeats_per_call, seed=seed)
+    backend = _make_backend(suite, provider, memory_mb, seed, start_time_s)
+    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism,
+                                                   max_retries=max_retries))
+    # the controller's interim CIs must be computed with the same seed and
+    # min_results as the final analyze() below, or an early-stop decision
+    # could be contradicted by the final analysis of the same pairs
+    if adaptive_cfg is None:
+        adaptive_cfg = AdaptiveConfig(min_results=min_results, seed=seed)
+    else:
+        adaptive_cfg = replace(adaptive_cfg, min_results=min_results,
+                               seed=seed)
+    controller = AdaptiveController(plan, adaptive_cfg)
+    engine_report = engine.run(plan, observer=controller)
+    report = SimReport.from_engine(engine_report)
+    # the controller's streaming analyzer IS the final analysis: it holds
+    # the pairs in the completion order its stop decisions were based on
+    # (bootstrap CIs are order-sensitive), so results can never contradict
+    # a stop decision
+    changes = controller.analyzer.analyze()
+    return AdaptiveExperimentResult(name=name, report=report, changes=changes,
+                                    engine_report=engine_report,
+                                    adaptive=controller.summary())
+
+
+def detection_accuracy(suite: Dict[str, SimWorkload],
+                       changes: Dict[str, stats.ChangeResult], *,
+                       floor_pct: float = 1.0) -> int:
+    """Benchmarks classified correctly against the synthetic ground truth:
+    a true effect >= `floor_pct` must be detected with the right sign; a
+    smaller/zero effect must not be flagged.  (Effects below the floor are
+    beneath the suite's detection power at these noise levels — the paper
+    §6.2.6 similarly treats small disagreements as 'possible changes'.)"""
+    ok = 0
+    for name, wl in suite.items():
+        should = abs(wl.effect_pct) >= floor_pct
+        c = changes.get(name)
+        detected = c is not None and c.changed
+        if should:
+            ok += int(detected and c.direction == (1 if wl.effect_pct > 0
+                                                   else -1))
+        else:
+            ok += int(not detected)
+    return ok
 
 
 def run_vm_experiment(name: str, suite: Dict[str, SimWorkload], *,

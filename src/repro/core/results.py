@@ -3,25 +3,44 @@
 Every duet pair is one JSONL record — append-only, crash-tolerant (a torn
 final line is ignored on load), mergeable across workers.  An experiment's
 analysis (core/stats) reads pair-aligned v1/v2 timings per benchmark.
+
+Two analysis paths share the same statistics:
+
+  * `analyze(pairs)` — batch: one pass over a finished result set.
+  * `StreamingAnalyzer` — incremental: pairs are added as the engine emits
+    them and per-benchmark `ChangeResult`s are recomputed on demand (with
+    caching), which is what the adaptive controller's CI-width stopping
+    rule consumes.  On the same pairs and parameters the two paths produce
+    identical results.
 """
 from __future__ import annotations
 
 import json
 import os
-from dataclasses import asdict, dataclass
-from typing import Dict, Iterable, List, Optional
+from dataclasses import asdict
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.duet import DuetPair
-from repro.core.stats import ChangeResult, detect_change
+from repro.core.stats import (ChangeResult, DEFAULT_BOOTSTRAP,
+                              DEFAULT_CONFIDENCE, detect_change)
 
 
 def append_pairs(path: str, pairs: Iterable[DuetPair]):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "a") as f:
+    with open(path, "ab") as f:
+        if f.tell() > 0:
+            # heal a torn tail from a previous crash: without the newline
+            # the first new record would glue onto the half-written line
+            # and both would be lost on load
+            with open(path, "rb") as r:
+                r.seek(-1, os.SEEK_END)
+                torn = r.read(1) != b"\n"
+            if torn:
+                f.write(b"\n")
         for p in pairs:
-            f.write(json.dumps(asdict(p)) + "\n")
+            f.write((json.dumps(asdict(p)) + "\n").encode())
 
 
 def load_pairs(path: str) -> List[DuetPair]:
@@ -40,8 +59,8 @@ def load_pairs(path: str) -> List[DuetPair]:
     return out
 
 
-def analyze(pairs: Iterable[DuetPair], *, confidence: float = 0.99,
-            n_boot: int = 1000, seed: int = 0,
+def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE,
+            n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
             min_results: int = 10) -> Dict[str, ChangeResult]:
     """Per-benchmark change detection over pair-aligned duet results."""
     grouped: Dict[str, list] = {}
@@ -56,3 +75,70 @@ def analyze(pairs: Iterable[DuetPair], *, confidence: float = 0.99,
         if res is not None:
             out[name] = res
     return out
+
+
+class StreamingAnalyzer:
+    """Incremental per-benchmark change detection.
+
+    Accumulates pair-aligned v1/v2 timings as they arrive and lazily
+    recomputes each benchmark's `ChangeResult`; the bootstrap is only
+    re-run when that benchmark has received new pairs since the last
+    query.  `analyze()` over everything added so far is equivalent to the
+    batch `analyze()` on the same pairs (same confidence/n_boot/seed)."""
+
+    def __init__(self, *, confidence: float = DEFAULT_CONFIDENCE,
+                 n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
+                 min_results: int = 10):
+        self.confidence = confidence
+        self.n_boot = n_boot
+        self.seed = seed
+        self.min_results = min_results
+        self._v1: Dict[str, List[float]] = {}
+        self._v2: Dict[str, List[float]] = {}
+        self._order: List[str] = []           # insertion order, like analyze()
+        self._cache: Dict[str, Tuple[int, Optional[ChangeResult]]] = {}
+
+    def add_pair(self, pair: DuetPair) -> None:
+        name = pair.benchmark
+        if name not in self._v1:
+            self._v1[name] = []
+            self._v2[name] = []
+            self._order.append(name)
+        self._v1[name].append(pair.v1_seconds)
+        self._v2[name].append(pair.v2_seconds)
+
+    def add_pairs(self, pairs: Iterable[DuetPair]) -> None:
+        for p in pairs:
+            self.add_pair(p)
+
+    def n_pairs(self, benchmark: str) -> int:
+        return len(self._v1.get(benchmark, ()))
+
+    @property
+    def benchmarks(self) -> List[str]:
+        return list(self._order)
+
+    def result(self, benchmark: str) -> Optional[ChangeResult]:
+        """ChangeResult over the pairs seen so far (None below min_results);
+        cached until new pairs for this benchmark arrive."""
+        n = self.n_pairs(benchmark)
+        cached = self._cache.get(benchmark)
+        if cached is not None and cached[0] == n:
+            return cached[1]
+        if n == 0:
+            return None
+        res = detect_change(benchmark, np.array(self._v1[benchmark]),
+                            np.array(self._v2[benchmark]),
+                            confidence=self.confidence, n_boot=self.n_boot,
+                            seed=self.seed, min_results=self.min_results)
+        self._cache[benchmark] = (n, res)
+        return res
+
+    def analyze(self) -> Dict[str, ChangeResult]:
+        """Batch-equivalent view of everything streamed so far."""
+        out: Dict[str, ChangeResult] = {}
+        for name in self._order:
+            res = self.result(name)
+            if res is not None:
+                out[name] = res
+        return out

@@ -35,6 +35,22 @@ class SuitePlan:
         return self.n_calls * self.repeats_per_call
 
 
+def _make_invocation(rng: random.Random, benchmark: str, call_index: int,
+                     repeats_per_call: int, randomize_versions: bool,
+                     timeout_s: float) -> Invocation:
+    """One call with its per-repeat duet version orders — shared by the
+    suite planner and the adaptive top-up generator so both stay
+    statistically identical."""
+    if randomize_versions:
+        order = tuple(tuple(rng.sample(("v1", "v2"), 2))
+                      for _ in range(repeats_per_call))
+    else:
+        order = tuple(("v1", "v2") for _ in range(repeats_per_call))
+    return Invocation(benchmark=benchmark, call_index=call_index,
+                      repeats=repeats_per_call, version_order=order,
+                      timeout_s=timeout_s)
+
+
 def make_plan(benchmarks: Sequence[str], *, n_calls: int = 15,
               repeats_per_call: int = 3, randomize_order: bool = True,
               randomize_versions: bool = True, seed: int = 0,
@@ -43,15 +59,23 @@ def make_plan(benchmarks: Sequence[str], *, n_calls: int = 15,
     inv: List[Invocation] = []
     for b in benchmarks:
         for c in range(n_calls):
-            if randomize_versions:
-                order = tuple(tuple(rng.sample(("v1", "v2"), 2))
-                              for _ in range(repeats_per_call))
-            else:
-                order = tuple(("v1", "v2") for _ in range(repeats_per_call))
-            inv.append(Invocation(benchmark=b, call_index=c,
-                                  repeats=repeats_per_call,
-                                  version_order=order, timeout_s=timeout_s))
+            inv.append(_make_invocation(rng, b, c, repeats_per_call,
+                                        randomize_versions, timeout_s))
     if randomize_order:
         rng.shuffle(inv)
     return SuitePlan(invocations=tuple(inv), n_calls=n_calls,
                      repeats_per_call=repeats_per_call)
+
+
+def extra_invocations(benchmark: str, *, n_calls: int,
+                      repeats_per_call: int, start_call_index: int,
+                      randomize_versions: bool = True, seed: int = 0,
+                      timeout_s: float = 20.0) -> List[Invocation]:
+    """Top-up invocations for one benchmark (adaptive budget re-allocation):
+    `n_calls` additional calls numbered from `start_call_index`, with fresh
+    randomized per-pair version orders.  Deterministic in (seed, benchmark,
+    start_call_index), so adaptive runs replay exactly."""
+    rng = random.Random(f"{seed}:{benchmark}:{start_call_index}")
+    return [_make_invocation(rng, benchmark, c, repeats_per_call,
+                             randomize_versions, timeout_s)
+            for c in range(start_call_index, start_call_index + n_calls)]

@@ -147,6 +147,15 @@ def compare_experiments(res_a: dict, res_b: dict) -> ExperimentComparison:
         two_sided=ts / cp, possible_changes=poss)
 
 
+def detection_set_delta(res_a: dict, res_b: dict) -> tuple:
+    """Benchmarks detected as changed in one experiment but not the other:
+    returns (only_in_a, only_in_b), sorted.  The adaptive-vs-fixed
+    comparison uses |only_a| + |only_b| as its accuracy distance."""
+    det_a = {n for n, c in res_a.items() if c.changed}
+    det_b = {n for n, c in res_b.items() if c.changed}
+    return sorted(det_a - det_b), sorted(det_b - det_a)
+
+
 def repeats_for_ci_parity(diffs: np.ndarray, target_ci_size: float, *,
                           steps: Sequence[int], confidence=DEFAULT_CONFIDENCE,
                           n_boot=DEFAULT_BOOTSTRAP, seed=0) -> Optional[int]:

@@ -1,0 +1,92 @@
+"""FaaS execution layer: one engine, pluggable platforms, adaptive control.
+
+Architecture
+============
+
+::
+
+    SuitePlan (core/rmit) ──► ExecutionEngine (engine.py) ──► EngineReport
+                                   │      ▲
+                     PlatformBackend      EngineObserver
+                      (backends.py)       (e.g. AdaptiveController,
+                                           core/controller.py)
+
+**ExecutionEngine** is the single event-driven scheduler.  It owns
+everything the three pre-refactor execution loops each reimplemented:
+concurrency slots (heap-based, O(log P) per invocation), warm-instance
+pools with keep-alive reaping, cold-start provisioning, retries of
+transient platform failures, straggler hedging, and billing/accounting.
+Simulated backends run in *virtual time* (durations are modeled at
+dispatch, so a 10k-invocation plan schedules in milliseconds); the
+real-execution backend runs on a thread pool in wall-clock time with the
+same policy and report.
+
+**PlatformBackend** (backends.py) captures what a platform *is*:
+
+* ``LambdaLikeBackend`` — AWS-Lambda-like: fast cold starts, 600 s
+  keep-alive, power-law memory→vCPU curve, $/GB-s + $/request pricing.
+  The default profile replays the historical ``SimulatedFaaS`` results
+  bit-for-bit.
+* ``GCFLikeBackend`` — Google-Cloud-Functions-like: slower cold starts,
+  GB-s **and** GHz-s pricing with 100 ms rounding, ~linear memory→CPU.
+* ``AzureLikeBackend`` — Azure-consumption-like: longest cold starts and
+  keep-alive, full vCPU at any memory size, 100 ms minimum bill.
+* ``VMBackend`` — the paper's sequential VM baseline (fixed fleet,
+  instances pinned to slots, per-hour billing).
+* ``LocalDuetBackend`` — real duet execution on host threads (the old
+  ``ElasticController`` path).
+
+Adding a provider profile
+-------------------------
+
+Declare a ``ProviderProfile`` (cold-start model, keep-alive, memory→vCPU
+curve, pricing, failure rate) and either register it in
+``PROVIDER_PROFILES`` or pass it to ``SimFaaSBackend`` directly::
+
+    from repro.faas.backends import ProviderProfile, SimFaaSBackend
+    my_cloud = ProviderProfile(name="mycloud", cold_start_base_s=1.0,
+                               per_gb_second=8e-6, rng_tag=31)
+    backend = SimFaaSBackend(workloads, my_cloud, memory_mb=2048, seed=0)
+    report = ExecutionEngine(backend, EngineConfig(parallelism=150)).run(plan)
+
+No scheduling code is involved: the engine stays untouched.
+
+Adaptive stopping (core/controller.py)
+--------------------------------------
+
+``AdaptiveController`` is an ``EngineObserver`` implementing adaptive
+repeat allocation (after Rese et al. 2024): it watches per-benchmark
+bootstrap CIs as results stream out of the engine, stops invoking a
+benchmark once its CI is *decided* (width below ``target_ci_pct``, change
+confirmed with ``margin_pct`` to zero, or CI inside the ``null_band_pct``
+noise band), releases benchmarks that keep failing
+(``fail_skip_after``), and re-spends ``reallocate_frac`` of the saved
+invocations on still-noisy benchmarks (``topup_calls`` at a time, capped
+at ``max_results`` pairs).  ``stop_min_results`` guards against deciding
+on too few samples, and ``check_n_boot`` should stay equal to the final
+analysis' bootstrap budget so a stop decision can never be contradicted
+by the final analysis of the same pairs.
+
+``SimulatedFaaS`` / ``SimulatedVM`` (platform.py) and
+``ElasticController`` remain as thin wrappers for existing call sites.
+"""
+from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
+                                 GCF_PROFILE, GCFLikeBackend,
+                                 LAMBDA_PROFILE, LambdaLikeBackend,
+                                 LocalDuetBackend, PROVIDER_PROFILES,
+                                 ProviderProfile, SimFaaSBackend, VMBackend)
+from repro.faas.engine import (CompletedInvocation, EngineConfig,
+                               EngineObserver, EngineReport, ExecutionEngine,
+                               Instance, InvocationOutcome)
+from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimWorkload,
+                                 SimulatedFaaS, SimulatedVM, VMPlatformConfig)
+
+__all__ = [
+    "AZURE_PROFILE", "AzureLikeBackend", "CompletedInvocation",
+    "EngineConfig", "EngineObserver", "EngineReport", "ExecutionEngine",
+    "FaaSPlatformConfig", "GCF_PROFILE", "GCFLikeBackend", "Instance",
+    "InvocationOutcome", "LAMBDA_PROFILE", "LambdaLikeBackend",
+    "LocalDuetBackend", "PROVIDER_PROFILES", "ProviderProfile",
+    "SimFaaSBackend", "SimReport", "SimWorkload", "SimulatedFaaS",
+    "SimulatedVM", "VMBackend", "VMPlatformConfig",
+]

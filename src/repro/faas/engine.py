@@ -1,0 +1,462 @@
+"""The single execution engine behind every platform (paper §4, Figure 2).
+
+One event-driven scheduler owns everything the three former copies of the
+execution loop (SimulatedFaaS / SimulatedVM / ElasticController) each
+reimplemented: concurrency slots, warm-instance pools with keep-alive
+reaping, cold starts, per-benchmark and per-function timeouts, retries of
+platform failures, straggler hedging, and billing.  Platforms plug in as
+`PlatformBackend`s (see backends.py) and scenarios plug in as
+`EngineObserver`s (e.g. the adaptive stopping controller in
+core/controller.py) — neither needs to re-implement scheduling.
+
+Two completion sources drive the same scheduling policy:
+
+  * **virtual time** (simulated backends): invocation durations are modeled
+    analytically at dispatch, so the event loop advances a virtual clock
+    through a heap of (slot_free_time, slot) events.  O(log P) per
+    invocation at parallelism P — a 10k-invocation plan at parallelism
+    1000 schedules in milliseconds.
+  * **real time** (LocalDuetBackend): invocations execute on a thread pool
+    and the loop consumes wall-clock completion events, with the same
+    retry/hedge policy and the same report.
+
+Results stream to the observer in completion order, and a result is only
+delivered once the (virtual) clock has reached its completion time — a
+scheduling decision at time t can only use results that exist at t, just
+like a real deployment.  That causal stream is what lets the adaptive
+controller stop a benchmark mid-run and re-allocate its remaining budget.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import heapq
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.duet import DuetPair
+from repro.core.rmit import Invocation, SuitePlan
+
+
+@dataclass
+class EngineConfig:
+    parallelism: int = 150               # paper §6.1
+    max_retries: int = 0                 # platform (not benchmark) failures
+    hedge_after_factor: float = 0.0      # 0 disables straggler hedging
+    hedge_min_samples: int = 8
+    hedge_min_s: float = 5.0
+
+
+@dataclass
+class Instance:
+    """One provisioned execution environment (container / VM)."""
+    iid: str
+    speed: float = 1.0                   # heterogeneity factor (1 = nominal)
+
+
+@dataclass
+class InvocationOutcome:
+    """What a backend reports for one attempted invocation."""
+    pairs: List[DuetPair]
+    duration_s: float                    # billed duration incl. overheads
+    ok: bool
+    timed_out: bool = False              # hit the per-benchmark timeout
+    platform_failure: bool = False       # transient infra error (retryable)
+    benchmark_failure: bool = False      # deterministic (e.g. restricted FS)
+
+
+@dataclass
+class CompletedInvocation:
+    """One finished attempt, as streamed to the observer."""
+    invocation: Invocation
+    outcome: InvocationOutcome
+    t_start: float
+    t_end: float
+    attempt: int
+    instance: Optional[Instance] = None
+
+
+class EngineObserver:
+    """Scenario hook: consumes results incrementally and may reshape the
+    remaining schedule.  All methods are called from the scheduling loop
+    (never concurrently); `on_result` delivers completed invocations in
+    completion order, never before their (virtual) completion time."""
+
+    def should_skip(self, inv: Invocation) -> bool:
+        """Consulted right before dispatch; True drops the invocation
+        (it is neither executed nor billed)."""
+        return False
+
+    def on_result(self, done: CompletedInvocation) -> None:
+        """Called once per invocation with its final attempt (retried
+        platform failures are not delivered individually); failures are
+        included."""
+
+    def extra_invocations(self) -> Sequence[Invocation]:
+        """Drained once per scheduling step; returned invocations join the
+        back of the queue (budget reallocation)."""
+        return ()
+
+
+@dataclass
+class EngineReport:
+    """Superset of the old SimReport / RunReport accounting."""
+    pairs: List[DuetPair]
+    wall_seconds: float
+    billed_seconds: List[float]
+    cost_dollars: float
+    cold_starts: int
+    timeouts: int
+    failures: int
+    executed_benchmarks: List[str]
+    failed_benchmarks: List[str]
+    invocations_done: int = 0
+    invocations_failed: int = 0
+    retries: int = 0
+    hedged: int = 0
+    skipped: int = 0
+
+
+class _HedgePolicy:
+    """Straggler-hedging rule shared by the virtual and realtime loops:
+    hedge an invocation running longer than max(factor * median duration,
+    hedge_min_s), once at least hedge_min_samples have completed.  The
+    median is recomputed lazily (only after the sample count grows ~12%)
+    so large virtual plans stay O(N log N) overall."""
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self._durations: List[float] = []
+        self._median: Optional[float] = None
+        self._computed_at = 0
+
+    def record(self, duration_s: float) -> None:
+        self._durations.append(duration_s)
+
+    def threshold(self) -> Optional[float]:
+        cfg = self.cfg
+        if cfg.hedge_after_factor <= 0:
+            return None
+        n = len(self._durations)
+        if n < cfg.hedge_min_samples:
+            return None
+        if (self._median is None
+                or n - self._computed_at >= max(1, self._computed_at // 8)):
+            self._median = sorted(self._durations)[n // 2]
+            self._computed_at = n
+        return max(cfg.hedge_after_factor * self._median, cfg.hedge_min_s)
+
+
+class ExecutionEngine:
+    """Event-driven scheduler running a SuitePlan against one backend."""
+
+    def __init__(self, backend, cfg: Optional[EngineConfig] = None):
+        self.backend = backend
+        self.cfg = cfg or EngineConfig()
+        self._lock = threading.Lock()
+
+    def run(self, plan: SuitePlan,
+            observer: Optional[EngineObserver] = None) -> EngineReport:
+        if getattr(self.backend, "realtime", False):
+            return self._run_realtime(plan, observer)
+        return self._run_virtual(plan, observer)
+
+    # ------------------------------------------------------------- virtual
+    def _run_virtual(self, plan: SuitePlan,
+                     observer: Optional[EngineObserver]) -> EngineReport:
+        cfg, be = self.cfg, self.backend
+        be.begin_run(cfg.parallelism)
+
+        pairs: List[DuetPair] = []
+        billed: List[float] = []
+        cold_starts = timeouts = failures = 0
+        done_n = failed_n = retries = hedged = skipped = 0
+        executed: set = set()
+        failed: set = set()
+        wall = 0.0
+        hedge = _HedgePolicy(cfg)
+
+        # slot = one concurrency lane; (free_time, slot_idx) min-heap gives
+        # O(log P) selection with the lowest-index tie-break the O(P) scan
+        # used to have.
+        slots: List[Tuple[float, int]] = [(0.0, i)
+                                          for i in range(cfg.parallelism)]
+        warm: List[Tuple[float, Instance]] = []   # (idle_since, inst) FIFO
+        pinned: Dict[int, Instance] = {}          # slot -> fixed instance
+
+        def acquire(inv: Invocation, slot: int, t: float):
+            """Warm-pool reuse (elastic platforms) or slot-pinned instances
+            (fixed VM fleets); returns (instance, cold_overhead_s)."""
+            nonlocal cold_starts
+            if be.pinned:
+                inst = pinned.get(slot)
+                if inst is None:
+                    inst, _ = be.spawn_instance(inv, t, slot)
+                    pinned[slot] = inst
+                return inst, 0.0
+            keep = be.keep_alive_s
+            # reap instances idle beyond keep-alive; entries whose idle time
+            # lies in the future belong to still-busy instances
+            warm[:] = [w for w in warm if t - w[0] <= keep or w[0] > t]
+            for j, (idle_since, inst) in enumerate(warm):
+                if idle_since <= t:
+                    warm.pop(j)
+                    return inst, 0.0
+            inst, overhead = be.spawn_instance(inv, t, slot)
+            cold_starts += 1
+            return inst, overhead
+
+        def dispatch(inv: Invocation, attempt: int) -> CompletedInvocation:
+            t, slot = heapq.heappop(slots)
+            inst, overhead = acquire(inv, slot, t)
+            out = be.simulate(inv, inst, t, overhead)
+            t_end = t + out.duration_s
+            heapq.heappush(slots, (t_end, slot))
+            if not be.pinned:
+                warm.append((t_end, inst))
+            return CompletedInvocation(inv, out, t, t_end, attempt, inst)
+
+        # completed invocations are delivered to the observer in virtual
+        # completion order, and only once the clock has reached their
+        # t_end — a scheduling decision at virtual time t may only use
+        # results that exist at t, exactly like a real deployment
+        completions: List[tuple] = []    # (t_end, seq, CompletedInvocation)
+        comp_seq = 0
+
+        def deliver_due(now: Optional[float]) -> None:
+            while completions and (now is None or completions[0][0] <= now):
+                _, _, c = heapq.heappop(completions)
+                observer.on_result(c)
+
+        queue: deque = deque((inv, 0) for inv in plan.invocations)
+        while True:
+            if observer is not None:
+                queue.extend((inv, 0) for inv in observer.extra_invocations())
+            if not queue:
+                if observer is not None and completions:
+                    # advance the clock to the next completion: delivering
+                    # it may unlock top-ups that re-fill the queue
+                    deliver_due(completions[0][0])
+                    continue
+                break
+            inv, attempt = queue.popleft()
+            if observer is not None:
+                deliver_due(slots[0][0])     # results known by dispatch time
+                if attempt == 0 and observer.should_skip(inv):
+                    skipped += 1
+                    continue
+
+            comp = dispatch(inv, attempt)
+            out = comp.outcome
+            billed.append(out.duration_s)
+            wall = max(wall, comp.t_end)
+
+            # straggler hedging: a known-long invocation is re-issued on the
+            # next free slot; the earlier (virtual) completion wins, both
+            # attempts are billed
+            thr = hedge.threshold()
+            if thr is not None and out.duration_s > thr:
+                hedged += 1
+                alt = dispatch(inv, attempt)
+                billed.append(alt.outcome.duration_s)
+                wall = max(wall, alt.t_end)
+                if alt.outcome.ok and (not out.ok or alt.t_end < comp.t_end):
+                    comp, out = alt, alt.outcome
+
+            if out.platform_failure and attempt < cfg.max_retries:
+                retries += 1
+                queue.appendleft((inv, attempt + 1))
+                continue
+
+            name = inv.benchmark
+            if out.timed_out:
+                timeouts += 1
+            if out.ok:
+                done_n += 1
+                executed.add(name)
+                pairs.extend(out.pairs)
+                hedge.record(out.duration_s)
+            else:
+                failed_n += 1
+                if out.platform_failure:
+                    # transient infra error: the invocation is lost but the
+                    # benchmark itself is not condemned
+                    failures += 1
+                else:
+                    failed.add(name)
+                    if out.benchmark_failure:
+                        failures += 1
+            if observer is not None:
+                heapq.heappush(completions, (comp.t_end, comp_seq, comp))
+                comp_seq += 1
+
+        cost = be.finalize(billed, wall)
+        return EngineReport(
+            pairs=pairs, wall_seconds=wall, billed_seconds=billed,
+            cost_dollars=cost, cold_starts=cold_starts, timeouts=timeouts,
+            failures=failures,
+            executed_benchmarks=sorted(executed - failed),
+            failed_benchmarks=sorted(failed),
+            invocations_done=done_n, invocations_failed=failed_n,
+            retries=retries, hedged=hedged, skipped=skipped)
+
+    # ------------------------------------------------------------ realtime
+    def _run_realtime(self, plan: SuitePlan,
+                      observer: Optional[EngineObserver]) -> EngineReport:
+        cfg, be = self.cfg, self.backend
+        be.begin_run(cfg.parallelism)
+        t_start = time.monotonic()
+        pairs: List[DuetPair] = []
+        billed: List[float] = []
+        hedge = _HedgePolicy(cfg)
+        # shared mutable state: every mutation from pool threads happens
+        # under self._lock (the old controller raced on these counters)
+        state = {"done": 0, "failed": 0, "retries": 0}
+        executed: set = set()
+        timeout_failed: set = set()      # deterministic: always condemned
+        infra_failed: set = set()        # transient: condemned only if the
+        #                                  benchmark never succeeded at all
+        hedged = skipped = timeouts = 0
+
+        def attempt(inv: Invocation, tries_left: int):
+            """Returns (pairs_or_None, exception_or_None, started, ended).
+            Per-benchmark accounting happens in the main loop — a hedge
+            duplicate and its original race under first-success-wins, so
+            neither a late nor an early failed duplicate may condemn a
+            benchmark whose other attempt succeeded."""
+            t0 = time.monotonic()
+            try:
+                res = be.execute(inv)
+            except Exception as exc:
+                # benchmark timeouts are deterministic — re-running would
+                # burn another full timeout for the same outcome; only
+                # transient platform failures are worth a retry
+                if tries_left > 0 and not isinstance(exc, TimeoutError):
+                    with self._lock:
+                        state["retries"] += 1
+                    return attempt(inv, tries_left - 1)
+                return None, exc, t0, time.monotonic()
+            t1 = time.monotonic()
+            with self._lock:
+                hedge.record(t1 - t0)
+                billed.append(t1 - t0)
+            return res, None, t0, t1
+
+        invocations = list(plan.invocations)
+        with cf.ThreadPoolExecutor(max_workers=cfg.parallelism) as pool:
+            futs: Dict[cf.Future, int] = {}
+            # submit in waves (at most one fleet's worth outstanding) so an
+            # observer can still skip work that results have made redundant
+            submit_queue: deque = deque(enumerate(invocations))
+            completed_idx: set = set()   # first *successful* result wins; a
+            # failure only counts once no twin attempt remains in flight
+            outstanding: Dict[int, int] = {}     # idx -> attempts in flight
+            pending: set = set()
+
+            def fill_pool() -> int:
+                nonlocal skipped
+                processed = 0
+                while submit_queue and len(pending) < cfg.parallelism:
+                    i, inv = submit_queue.popleft()
+                    processed += 1
+                    if observer is not None and observer.should_skip(inv):
+                        skipped += 1
+                        continue
+                    f = pool.submit(attempt, inv, cfg.max_retries)
+                    futs[f] = i
+                    outstanding[i] = outstanding.get(i, 0) + 1
+                    pending.add(f)
+                return processed
+
+            def refill():
+                # alternate top-up drains and submissions to a fixpoint:
+                # fill_pool's skips release budget that may unlock top-ups,
+                # which in turn need submitting — a single pass would drop
+                # re-allocations triggered by tail skips
+                while True:
+                    added = False
+                    if observer is not None:
+                        for inv in observer.extra_invocations():
+                            invocations.append(inv)
+                            submit_queue.append((len(invocations) - 1, inv))
+                            added = True
+                    moved = fill_pool()
+                    if not added and not moved:
+                        return
+
+            while True:
+                refill()
+                if not pending:
+                    break
+                fin, pending = cf.wait(pending, timeout=0.5,
+                                       return_when=cf.FIRST_COMPLETED)
+                now = time.monotonic()
+                for f in fin:
+                    idx = futs[f]
+                    outstanding[idx] -= 1
+                    if idx in completed_idx:
+                        continue
+                    res, exc, a_start, a_end = f.result()
+                    if res is None and outstanding[idx] > 0:
+                        # another attempt (the hedge twin) is still running
+                        # and may yet succeed: defer judgement to it
+                        continue
+                    completed_idx.add(idx)
+                    inv = invocations[idx]
+                    # a benchmark-timeout is deterministic; anything else
+                    # from the backend counts as a platform failure
+                    timed_out = isinstance(exc, TimeoutError)
+                    if res is not None:
+                        state["done"] += 1
+                        executed.add(inv.benchmark)
+                        pairs.extend(res)
+                    else:
+                        state["failed"] += 1
+                        if timed_out:
+                            timeouts += 1
+                            timeout_failed.add(inv.benchmark)
+                        else:
+                            infra_failed.add(inv.benchmark)
+                    if observer is not None:
+                        out = InvocationOutcome(
+                            pairs=res or [], duration_s=a_end - a_start,
+                            ok=res is not None, timed_out=timed_out,
+                            platform_failure=exc is not None
+                            and not timed_out,
+                            benchmark_failure=timed_out)
+                        observer.on_result(CompletedInvocation(
+                            inv, out, a_start - t_start, a_end - t_start, 0))
+                # straggler hedging: re-issue long-running invocations once
+                with self._lock:
+                    threshold = hedge.threshold()
+                if threshold is not None:
+                    for f in list(pending):
+                        idx = futs[f]
+                        if getattr(f, "_repro_t0", None) is None:
+                            f._repro_t0 = now    # first seen pending
+                        elif (now - f._repro_t0 > threshold
+                              and not getattr(f, "_repro_hedged", False)):
+                            f._repro_hedged = True
+                            hedged += 1
+                            nf = pool.submit(attempt, invocations[idx], 0)
+                            futs[nf] = idx
+                            outstanding[idx] = outstanding.get(idx, 0) + 1
+                            pending.add(nf)
+
+        wall = time.monotonic() - t_start
+        cost = be.finalize(billed, wall)
+        # mirror the virtual path: a transient infra failure doesn't condemn
+        # a benchmark with good results, but one that never succeeded is
+        # still reported failed (the historical controller contract)
+        failed_benchmarks = timeout_failed | (infra_failed - executed)
+        return EngineReport(
+            pairs=pairs, wall_seconds=wall, billed_seconds=billed,
+            cost_dollars=cost, cold_starts=0, timeouts=timeouts,
+            failures=state["failed"],
+            executed_benchmarks=sorted(executed - failed_benchmarks),
+            failed_benchmarks=sorted(failed_benchmarks),
+            invocations_done=state["done"],
+            invocations_failed=state["failed"],
+            retries=state["retries"], hedged=hedged, skipped=skipped)

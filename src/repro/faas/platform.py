@@ -15,19 +15,26 @@ on (§3, citing [48], [8]):
   * warm-instance reuse up to `keep_alive_s` of idle time
 
 Everything is a pure function of the seed: experiments replay exactly.
+
+`SimulatedFaaS` / `SimulatedVM` are thin compatibility wrappers: the
+scheduling itself (slots, warm pools, retries, accounting) lives in the
+shared event-driven engine (engine.py) with the platform models plugged in
+as backends (backends.py).  A `FaaSPlatformConfig` maps 1:1 onto the
+Lambda-like `ProviderProfile`, so existing call sites and seeds replay
+the historical results bit-for-bit.
 """
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
-import numpy as np
-
-from repro.core.costmodel import FaaSCost, LAMBDA_GB_SECOND, LAMBDA_PER_REQUEST, VM_PER_HOUR
+from repro.core.costmodel import VM_PER_HOUR
 from repro.core.duet import DuetPair
 from repro.core.rmit import SuitePlan
+from repro.faas.backends import (LambdaLikeBackend, ProviderProfile,
+                                 SimFaaSBackend, VMBackend)
+from repro.faas.engine import (EngineConfig, EngineObserver, EngineReport,
+                               ExecutionEngine)
 
 
 @dataclass(frozen=True)
@@ -73,6 +80,22 @@ class FaaSPlatformConfig:
         return min(1.0, (self.memory_mb / self.cpu_nominal_mb)
                    ** self.cpu_exponent)
 
+    def to_profile(self) -> ProviderProfile:
+        """The Lambda-like ProviderProfile carrying this config's knobs
+        (pricing and RNG stream stay at the historical defaults)."""
+        return ProviderProfile(
+            name="lambda",
+            cold_start_base_s=self.cold_start_base_s,
+            cold_start_per_gb_s=self.cold_start_per_gb_s,
+            keep_alive_s=self.keep_alive_s,
+            cpu_nominal_mb=self.cpu_nominal_mb,
+            cpu_exponent=self.cpu_exponent,
+            instance_sigma=self.instance_sigma,
+            diurnal_amplitude=self.diurnal_amplitude,
+            diurnal_period_s=self.diurnal_period_s,
+            benchmark_timeout_s=self.benchmark_timeout_s,
+            function_timeout_s=self.function_timeout_s)
+
 
 @dataclass
 class SimReport:
@@ -86,9 +109,24 @@ class SimReport:
     executed_benchmarks: List[str]
     failed_benchmarks: List[str]
 
+    @classmethod
+    def from_engine(cls, rep: EngineReport, *,
+                    billed: Optional[List[float]] = None) -> "SimReport":
+        return cls(pairs=rep.pairs, wall_seconds=rep.wall_seconds,
+                   billed_seconds=rep.billed_seconds if billed is None
+                   else billed,
+                   cost_dollars=rep.cost_dollars,
+                   cold_starts=rep.cold_starts, timeouts=rep.timeouts,
+                   failures=rep.failures,
+                   executed_benchmarks=rep.executed_benchmarks,
+                   failed_benchmarks=rep.failed_benchmarks)
+
 
 class SimulatedFaaS:
-    """Virtual-time simulation of running a SuitePlan at a given parallelism."""
+    """Virtual-time simulation of running a SuitePlan at a given parallelism.
+
+    Thin wrapper: builds a Lambda-like backend from the config and delegates
+    scheduling to the shared ExecutionEngine."""
 
     def __init__(self, workloads: Dict[str, SimWorkload],
                  cfg: Optional[FaaSPlatformConfig] = None, seed: int = 0,
@@ -98,102 +136,17 @@ class SimulatedFaaS:
         self.seed = seed
         self.start = start_time_s
 
-    def _diurnal(self, t: float) -> float:
-        c = self.cfg
-        return 1.0 + c.diurnal_amplitude * math.sin(
-            2 * math.pi * (self.start + t) / c.diurnal_period_s)
+    def make_backend(self) -> SimFaaSBackend:
+        return LambdaLikeBackend(
+            self.w, profile=self.cfg.to_profile(),
+            memory_mb=self.cfg.memory_mb, image_gb=self.cfg.image_gb,
+            seed=self.seed, start_time_s=self.start)
 
-    def run_suite(self, plan: SuitePlan, *, parallelism: int = 150) -> SimReport:
-        c = self.cfg
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, 7]))
-        pairs: List[DuetPair] = []
-        billed: List[float] = []
-        cold_starts = timeouts = failures = 0
-        executed: set = set()
-        failed: set = set()
-
-        # slot = one concurrent execution lane; instances live in a warm pool
-        slot_free = [0.0] * parallelism
-        warm: List[Tuple[float, float, str]] = []  # (idle_since, speed, id)
-        inst_counter = 0
-
-        for inv in plan.invocations:
-            wl = self.w[inv.benchmark]
-            # next free slot (elastic platform: slots are just concurrency)
-            i = min(range(parallelism), key=lambda j: slot_free[j])
-            t = slot_free[i]
-
-            # instance assignment: reuse a warm instance if one is idle and
-            # not yet reaped (idle <= keep_alive)
-            inst = None
-            warm = [w_ for w_ in warm if t - w_[0] <= c.keep_alive_s or w_[0] > t]
-            for j, (idle_since, speed, iid) in enumerate(warm):
-                if idle_since <= t:
-                    inst = (speed, iid)
-                    warm.pop(j)
-                    break
-            dur = 0.0
-            cold = inst is None
-            if cold:
-                cold_starts += 1
-                inst_counter += 1
-                speed = float(rng.lognormal(0.0, c.instance_sigma))
-                inst = (speed, f"i{inst_counter}")
-                dur += c.cold_start_base_s + c.cold_start_per_gb_s * c.image_gb
-                dur += wl.setup_seconds
-            speed, iid = inst
-
-            if wl.fs_write:
-                failures += 1
-                failed.add(wl.name)
-                dur += 0.1
-                billed.append(dur)
-                slot_free[i] = t + dur
-                warm.append((t + dur, speed, iid))
-                continue
-
-            ok = True
-            inv_pairs = []
-            for order in inv.version_order:
-                res = {}
-                for ver in order:
-                    noise = float(rng.lognormal(0.0, wl.run_sigma))
-                    if wl.unstable_pct:
-                        noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
-                                                         wl.unstable_pct)) / 100.0
-                    secs = (wl.true_seconds(ver) * noise * speed
-                            * self._diurnal(t + dur) / c.cpu_factor)
-                    if secs > c.benchmark_timeout_s:
-                        ok = False
-                        timeouts += 1
-                        dur += c.benchmark_timeout_s
-                        break
-                    res[ver] = secs
-                    dur += secs
-                if not ok or dur > c.function_timeout_s:
-                    ok = ok and dur <= c.function_timeout_s
-                    break
-                inv_pairs.append(DuetPair(
-                    benchmark=wl.name, v1_seconds=res["v1"],
-                    v2_seconds=res["v2"], instance_id=iid,
-                    call_index=inv.call_index, cold_start=cold))
-            if ok:
-                pairs.extend(inv_pairs)
-                executed.add(wl.name)
-            else:
-                failed.add(wl.name)
-            billed.append(dur)
-            slot_free[i] = t + dur
-            warm.append((t + dur, speed, iid))
-
-        wall = max(slot_free) if slot_free else 0.0
-        gb_s = sum(billed) * c.memory_mb / 1024.0
-        cost = gb_s * LAMBDA_GB_SECOND + len(billed) * LAMBDA_PER_REQUEST
-        return SimReport(pairs=pairs, wall_seconds=wall, billed_seconds=billed,
-                         cost_dollars=cost, cold_starts=cold_starts,
-                         timeouts=timeouts, failures=failures,
-                         executed_benchmarks=sorted(executed - failed),
-                         failed_benchmarks=sorted(failed))
+    def run_suite(self, plan: SuitePlan, *, parallelism: int = 150,
+                  observer: Optional[EngineObserver] = None) -> SimReport:
+        engine = ExecutionEngine(self.make_backend(),
+                                 EngineConfig(parallelism=parallelism))
+        return SimReport.from_engine(engine.run(plan, observer=observer))
 
 
 @dataclass
@@ -211,7 +164,9 @@ class VMPlatformConfig:
 
 class SimulatedVM:
     """Sequential duet execution on n_vms virtual machines (the baseline the
-    paper compares against; produces the 'original dataset')."""
+    paper compares against; produces the 'original dataset').
+
+    Thin wrapper over the shared engine with a pinned-instance VM backend."""
 
     def __init__(self, workloads: Dict[str, SimWorkload],
                  cfg: Optional[VMPlatformConfig] = None, seed: int = 1):
@@ -219,39 +174,12 @@ class SimulatedVM:
         self.cfg = cfg or VMPlatformConfig()
         self.seed = seed
 
-    def run_suite(self, plan: SuitePlan) -> SimReport:
-        c = self.cfg
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, 13]))
-        vm_speed = rng.lognormal(0.0, c.instance_sigma, size=c.n_vms)
-        vm_free = [0.0] * c.n_vms
-        pairs: List[DuetPair] = []
-        executed: set = set()
-        for n, inv in enumerate(plan.invocations):
-            wl = self.w[inv.benchmark]
-            i = min(range(c.n_vms), key=lambda j: vm_free[j])
-            t = vm_free[i]
-            dur = c.trial_overhead_s
-            for order in inv.version_order:
-                res = {}
-                for ver in order:
-                    noise = float(rng.lognormal(0.0, wl.run_sigma * c.run_sigma_scale))
-                    if wl.unstable_pct:
-                        noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
-                                                         wl.unstable_pct)) / 100.0
-                    drift = 1.0 + c.diurnal_amplitude * math.sin(
-                        2 * math.pi * (t + dur) / 86400.0)
-                    secs = wl.true_seconds(ver, env="vm") * noise * vm_speed[i] * drift
-                    res[ver] = secs
-                    dur += secs
-                pairs.append(DuetPair(benchmark=wl.name, v1_seconds=res["v1"],
-                                      v2_seconds=res["v2"],
-                                      instance_id=f"vm{i}",
-                                      call_index=inv.call_index))
-            executed.add(wl.name)
-            vm_free[i] = t + dur
-        wall = max(vm_free)
-        cost = wall / 3600.0 * c.per_hour * c.n_vms
-        return SimReport(pairs=pairs, wall_seconds=wall, billed_seconds=[],
-                         cost_dollars=cost, cold_starts=0, timeouts=0,
-                         failures=0, executed_benchmarks=sorted(executed),
-                         failed_benchmarks=[])
+    def run_suite(self, plan: SuitePlan,
+                  observer: Optional[EngineObserver] = None) -> SimReport:
+        backend = VMBackend(self.w, self.cfg, seed=self.seed)
+        engine = ExecutionEngine(backend,
+                                 EngineConfig(parallelism=self.cfg.n_vms))
+        # the original dataset reported wall-clock VM-hours, not per-call
+        # billed durations
+        return SimReport.from_engine(engine.run(plan, observer=observer),
+                                     billed=[])

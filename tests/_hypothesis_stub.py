@@ -1,0 +1,97 @@
+"""Minimal deterministic stand-in for `hypothesis` (used when the real
+package is not installed — see conftest.py).
+
+Implements just the surface this test suite uses: ``given``, ``settings``,
+and the ``integers`` / ``floats`` / ``lists`` / ``sampled_from`` strategies.
+Each ``@given`` test runs against a fixed number of pseudo-random examples
+drawn from a seeded PRNG, so the property tests still exercise a spread of
+inputs and stay reproducible — they just lose real hypothesis' shrinking
+and example database.  Install ``hypothesis`` (requirements-dev.txt) to get
+the real thing; this stub never shadows it.
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=1_000_000):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, allow_nan=False, allow_infinity=False):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+def lists(elements, min_size=0, max_size=None):
+    cap = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, cap)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+class strategies:  # mimics `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    lists = staticmethod(lists)
+    sampled_from = staticmethod(sampled_from)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis aborts the example; here examples are pre-drawn so we
+    just skip the body by raising a private exception caught in `given`."""
+    if not condition:
+        raise _AssumeFailed()
+    return True
+
+
+class _AssumeFailed(Exception):
+    pass
+
+
+def given(*strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — the wrapper must expose a zero-arg
+        # signature or pytest would treat the strategy parameters as fixtures.
+        def wrapper():
+            # @settings sits *above* @given, so it decorates this wrapper —
+            # read the example budget off the wrapper, not the inner fn
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            # cap the stub's runtime: it is a smoke substitute, not a fuzzer
+            n = min(n, 25)
+            rng = random.Random(f"stub:{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                example = [s.example(rng) for s in strats]
+                try:
+                    fn(*example)
+                except _AssumeFailed:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

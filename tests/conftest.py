@@ -1,4 +1,21 @@
+import importlib.util
+import os
+import sys
+
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Tests import `hypothesis` unconditionally; on a clean env (the tier-1
+    # gate runs without dev extras) substitute the deterministic stub so
+    # collection succeeds and the property tests still run a sample spread.
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
 
 
 def pytest_configure(config):

@@ -1,0 +1,102 @@
+"""Adaptive stopping controller: CI-width early stopping, budget
+re-allocation, and the fixed-vs-adaptive accuracy/cost tradeoff."""
+import numpy as np
+import pytest
+
+from repro.core import rmit
+from repro.core.controller import AdaptiveConfig, AdaptiveController
+from repro.core.experiment import (detection_accuracy,
+                                   run_adaptive_experiment,
+                                   run_faas_experiment,
+                                   victoriametrics_like_suite)
+from repro.core.stats import detection_set_delta
+from repro.faas.backends import LambdaLikeBackend
+from repro.faas.engine import EngineConfig, ExecutionEngine
+from repro.faas.platform import SimWorkload
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return victoriametrics_like_suite()
+
+
+def _mini_suite():
+    return {
+        # tight CI quickly -> early stop
+        "stable_change": SimWorkload(name="stable_change", base_seconds=0.5,
+                                     effect_pct=10.0, run_sigma=0.01),
+        "stable_null": SimWorkload(name="stable_null", base_seconds=0.4,
+                                   effect_pct=0.0, run_sigma=0.01),
+        # wide CI -> keeps its budget and receives top-ups
+        "noisy": SimWorkload(name="noisy", base_seconds=0.5, effect_pct=6.0,
+                             run_sigma=0.05, unstable_pct=8.0),
+        # deterministic failure -> budget released after fail_skip_after
+        "restricted": SimWorkload(name="restricted", base_seconds=0.5,
+                                  effect_pct=0.0, fs_write=True),
+    }
+
+
+def test_stops_decided_benchmarks_and_releases_failing_ones():
+    suite = _mini_suite()
+    plan = rmit.make_plan(sorted(suite), n_calls=30, repeats_per_call=3,
+                          seed=0)
+    ctl = AdaptiveController(plan, AdaptiveConfig(seed=0))
+    rep = ExecutionEngine(LambdaLikeBackend(suite, seed=0),
+                          EngineConfig(parallelism=8)).run(plan,
+                                                           observer=ctl)
+    s = ctl.summary()
+    assert "stable_change" in s.stopped_early
+    assert "stable_null" in s.stopped_early
+    assert "restricted" in s.gave_up
+    assert rep.skipped > 0
+    # invocation budget shrinks vs the fixed plan
+    assert len(rep.billed_seconds) < len(plan.invocations)
+    # and the noisy benchmark kept (or grew) its sample budget
+    noisy_pairs = [p for p in rep.pairs if p.benchmark == "noisy"]
+    stable_pairs = [p for p in rep.pairs if p.benchmark == "stable_change"]
+    assert len(noisy_pairs) > len(stable_pairs)
+
+
+def test_topups_reallocate_saved_budget_to_noisy_benchmarks():
+    suite = _mini_suite()
+    plan = rmit.make_plan(sorted(suite), n_calls=12, repeats_per_call=3,
+                          seed=1)
+    cfg = AdaptiveConfig(seed=1, reallocate_frac=1.0, topup_calls=4)
+    ctl = AdaptiveController(plan, cfg)
+    rep = ExecutionEngine(LambdaLikeBackend(suite, seed=1),
+                          EngineConfig(parallelism=8)).run(plan,
+                                                           observer=ctl)
+    s = ctl.summary()
+    assert s.invocations_added > 0
+    assert set(s.topped_up) <= {"noisy"}
+    # re-allocation never exceeds what early stopping saved
+    assert s.invocations_added <= s.invocations_skipped
+    noisy_pairs = [p for p in rep.pairs if p.benchmark == "noisy"]
+    assert len(noisy_pairs) > 12 * 3      # more than its fixed-plan share
+
+
+def test_adaptive_run_is_deterministic(suite):
+    a = run_adaptive_experiment("x", suite, seed=5)
+    b = run_adaptive_experiment("x", suite, seed=5)
+    assert a.report.wall_seconds == b.report.wall_seconds
+    assert a.invocations_used == b.invocations_used
+    assert {k: v.median_diff_pct for k, v in a.changes.items()} == \
+           {k: v.median_diff_pct for k, v in b.changes.items()}
+
+
+@pytest.mark.parametrize("provider", ["lambda", "gcf", "azure"])
+def test_adaptive_matches_fixed_accuracy_at_lower_cost(suite, provider):
+    """The acceptance bar: +-2 benchmarks of fixed-RMIT detection accuracy
+    on the 106-benchmark suite, at measurably lower billed cost AND
+    invocation count — on every provider profile."""
+    fixed = run_faas_experiment("fixed", suite, seed=0, provider=provider)
+    adap = run_adaptive_experiment("adaptive", suite, seed=0,
+                                   provider=provider)
+    acc_fixed = detection_accuracy(suite, fixed.changes)
+    acc_adap = detection_accuracy(suite, adap.changes)
+    assert acc_adap >= acc_fixed - 2
+    assert adap.invocations_used < 0.8 * len(fixed.report.billed_seconds)
+    assert adap.report.cost_dollars < 0.95 * fixed.report.cost_dollars
+    # the detected-change sets stay close, too
+    only_f, only_a = detection_set_delta(fixed.changes, adap.changes)
+    assert len(only_f) + len(only_a) <= 5

@@ -1,0 +1,166 @@
+"""Unified execution engine + pluggable backends: seed parity, provider
+profiles, retries, hedging, and the VM fleet through one scheduler."""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import rmit
+from repro.core.experiment import (run_faas_experiment, run_vm_experiment,
+                                   victoriametrics_like_suite)
+from repro.core.results import analyze
+from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
+                                 GCF_PROFILE, GCFLikeBackend,
+                                 LAMBDA_PROFILE, LambdaLikeBackend,
+                                 PROVIDER_PROFILES, ProviderProfile,
+                                 SimFaaSBackend, VMBackend)
+from repro.faas.engine import EngineConfig, ExecutionEngine
+from repro.faas.platform import SimWorkload
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_seed_baseline.json")
+
+
+def _suite(n=6, **kw):
+    return {f"b{i}": SimWorkload(name=f"b{i}", base_seconds=0.5 + 0.1 * i,
+                                 effect_pct=5.0 * (i % 2), setup_seconds=2.0,
+                                 **kw)
+            for i in range(n)}
+
+
+# ------------------------------------------------------------- seed parity
+def test_baseline_experiment_matches_seed_golden():
+    """The refactored wrappers must reproduce the pre-refactor outcomes:
+    same executed/failed sets and same detected-change set at seed 0."""
+    golden = json.load(open(GOLDEN))["baseline_seed0"]
+    suite = victoriametrics_like_suite()
+    res = run_faas_experiment("baseline", suite, seed=0)
+    assert res.report.executed_benchmarks == golden["executed"]
+    assert res.report.failed_benchmarks == golden["failed"]
+    assert sorted(n for n, c in res.changes.items()
+                  if c.changed) == golden["changed"]
+
+
+def test_vm_experiment_matches_seed_golden():
+    golden = json.load(open(GOLDEN))["vm_original"]
+    suite = victoriametrics_like_suite()
+    res = run_vm_experiment("original", suite)
+    assert res.report.executed_benchmarks == golden["executed"]
+    assert res.report.failed_benchmarks == golden["failed"]
+    assert sorted(n for n, c in res.changes.items()
+                  if c.changed) == golden["changed"]
+
+
+# -------------------------------------------------------- provider profiles
+@pytest.mark.parametrize("backend_cls,profile", [
+    (LambdaLikeBackend, LAMBDA_PROFILE),
+    (GCFLikeBackend, GCF_PROFILE),
+    (AzureLikeBackend, AZURE_PROFILE),
+])
+def test_all_provider_profiles_run_through_shared_engine(backend_cls, profile):
+    suite = _suite(8)
+    plan = rmit.make_plan(sorted(suite), n_calls=10, repeats_per_call=2,
+                          seed=3)
+    backend = backend_cls(suite, seed=3)
+    assert backend.profile is profile
+    rep = ExecutionEngine(backend, EngineConfig(parallelism=6)).run(plan)
+    assert len(rep.executed_benchmarks) == 8
+    assert rep.cost_dollars > 0
+    assert rep.cold_starts >= 1
+    # detection still works through every profile
+    res = analyze(rep.pairs)
+    changed = {n for n, c in res.items() if c.changed}
+    assert {"b1", "b3", "b5", "b7"} <= changed
+
+
+def test_provider_profiles_differ_in_cost_and_cold_start():
+    suite = _suite(6)
+    plan = rmit.make_plan(sorted(suite), n_calls=8, repeats_per_call=2,
+                          seed=5)
+    reports = {}
+    for name in ("lambda", "gcf", "azure"):
+        backend = SimFaaSBackend(suite, PROVIDER_PROFILES[name], seed=5)
+        reports[name] = ExecutionEngine(
+            backend, EngineConfig(parallelism=4)).run(plan)
+    costs = {n: r.cost_dollars for n, r in reports.items()}
+    assert len(set(round(c, 8) for c in costs.values())) == 3
+    # Azure models the slowest cold starts -> largest wall time at equal
+    # parallelism
+    assert (reports["azure"].wall_seconds > reports["lambda"].wall_seconds)
+
+
+def test_deterministic_replay_per_backend():
+    suite = _suite(5)
+    plan = rmit.make_plan(sorted(suite), n_calls=6, seed=2)
+    for name in ("lambda", "gcf", "azure"):
+        r1 = ExecutionEngine(SimFaaSBackend(suite, PROVIDER_PROFILES[name],
+                                            seed=9)).run(plan)
+        r2 = ExecutionEngine(SimFaaSBackend(suite, PROVIDER_PROFILES[name],
+                                            seed=9)).run(plan)
+        assert r1.wall_seconds == r2.wall_seconds
+        assert [p.v1_seconds for p in r1.pairs] == \
+               [p.v1_seconds for p in r2.pairs]
+
+
+def test_custom_profile_plugs_in_without_engine_changes():
+    profile = ProviderProfile(name="mycloud", cold_start_base_s=0.1,
+                              cold_start_per_gb_s=0.2, keep_alive_s=60.0,
+                              per_gb_second=5e-6, rng_tag=99)
+    suite = _suite(3)
+    plan = rmit.make_plan(sorted(suite), n_calls=4, seed=1)
+    rep = ExecutionEngine(SimFaaSBackend(suite, profile, seed=1),
+                          EngineConfig(parallelism=2)).run(plan)
+    assert len(rep.executed_benchmarks) == 3
+    assert rep.cost_dollars > 0
+
+
+# ------------------------------------------------------ retries & failures
+def test_virtual_retry_recovers_platform_failures():
+    flaky = ProviderProfile(name="flaky", failure_rate=0.2, rng_tag=41)
+    suite = _suite(4)
+    plan = rmit.make_plan(sorted(suite), n_calls=10, seed=6)
+    no_retry = ExecutionEngine(SimFaaSBackend(suite, flaky, seed=6),
+                               EngineConfig(parallelism=4)).run(plan)
+    with_retry = ExecutionEngine(SimFaaSBackend(suite, flaky, seed=6),
+                                 EngineConfig(parallelism=4,
+                                              max_retries=3)).run(plan)
+    assert no_retry.invocations_failed > 0
+    assert with_retry.retries > 0
+    assert with_retry.invocations_failed < no_retry.invocations_failed
+    assert len(with_retry.pairs) > len(no_retry.pairs)
+
+
+def test_virtual_hedging_reissues_stragglers():
+    # one benchmark is 50x slower than the rest -> hedged once the median
+    # is established
+    suite = _suite(6)
+    suite["slowpoke"] = SimWorkload(name="slowpoke", base_seconds=15.0,
+                                    effect_pct=0.0, setup_seconds=2.0)
+    plan = rmit.make_plan(sorted(suite), n_calls=6, seed=8)
+    cfg = EngineConfig(parallelism=4, hedge_after_factor=3.0,
+                       hedge_min_samples=4, hedge_min_s=0.5)
+    rep = ExecutionEngine(LambdaLikeBackend(suite, seed=8), cfg).run(plan)
+    assert rep.hedged > 0
+    # hedge duplicates are billed, never double-counted as results
+    assert len(rep.billed_seconds) > len(plan.invocations)
+    grouped = {}
+    for p in rep.pairs:
+        grouped.setdefault(p.benchmark, []).append(p)
+    assert len(grouped["slowpoke"]) == 6 * plan.repeats_per_call
+
+
+# ------------------------------------------------------------- VM backend
+def test_vm_backend_pins_instances_to_slots():
+    suite = _suite(4)
+    plan = rmit.make_plan(sorted(suite), n_calls=9, repeats_per_call=1,
+                          seed=4)
+    backend = VMBackend(suite, seed=4)
+    rep = ExecutionEngine(backend,
+                          EngineConfig(parallelism=backend.cfg.n_vms)
+                          ).run(plan)
+    ids = {p.instance_id for p in rep.pairs}
+    assert ids <= {f"vm{i}" for i in range(backend.cfg.n_vms)}
+    assert rep.cold_starts == 0 and rep.timeouts == 0
+    assert len(rep.executed_benchmarks) == 4

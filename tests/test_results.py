@@ -1,0 +1,107 @@
+"""Result store: torn-tail JSONL recovery, multi-worker merge roundtrip,
+and streaming-vs-batch analysis equivalence."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.duet import DuetPair
+from repro.core.results import (StreamingAnalyzer, analyze, append_pairs,
+                                load_pairs)
+
+
+def _pairs(benchmark, n, seed=0, effect=1.10):
+    rng = np.random.default_rng(seed)
+    v1 = rng.lognormal(0.0, 0.05, n)
+    v2 = v1 * effect * rng.lognormal(0.0, 0.02, n)
+    return [DuetPair(benchmark=benchmark, v1_seconds=float(a),
+                     v2_seconds=float(b), instance_id=f"i{i}", call_index=i)
+            for i, (a, b) in enumerate(zip(v1, v2))]
+
+
+# ------------------------------------------------------------ persistence
+def test_append_load_roundtrip(tmp_path):
+    path = str(tmp_path / "r" / "pairs.jsonl")
+    pairs = _pairs("bench", 7)
+    append_pairs(path, pairs)
+    loaded = load_pairs(path)
+    assert loaded == pairs
+
+
+def test_torn_tail_line_is_recovered(tmp_path):
+    path = str(tmp_path / "pairs.jsonl")
+    pairs = _pairs("bench", 5)
+    append_pairs(path, pairs)
+    # simulate a crash mid-write: truncate the last record in half
+    raw = open(path).read()
+    lines = raw.splitlines(keepends=True)
+    torn = "".join(lines[:-1]) + lines[-1][:len(lines[-1]) // 2]
+    with open(path, "w") as f:
+        f.write(torn)
+    loaded = load_pairs(path)
+    assert loaded == pairs[:-1]          # torn tail ignored, rest intact
+    # appends after recovery keep working
+    append_pairs(path, pairs[-1:])
+    assert len(load_pairs(path)) == len(pairs) - 1 + 1
+
+
+def test_missing_file_loads_empty(tmp_path):
+    assert load_pairs(str(tmp_path / "nope.jsonl")) == []
+
+
+def test_two_worker_append_merge_roundtrip(tmp_path):
+    """Two workers append to their own shards; the merged view analyzes
+    like a single-writer file."""
+    a, b = str(tmp_path / "w0.jsonl"), str(tmp_path / "w1.jsonl")
+    pa = _pairs("bench", 12, seed=1)
+    pb = _pairs("bench", 13, seed=2)
+    # interleaved appends (each worker crashes/resumes between batches)
+    append_pairs(a, pa[:5])
+    append_pairs(b, pb[:8])
+    append_pairs(a, pa[5:])
+    append_pairs(b, pb[8:])
+    merged = load_pairs(a) + load_pairs(b)
+    assert len(merged) == 25
+    res = analyze(merged, seed=3)["bench"]
+    direct = analyze(pa + pb, seed=3)["bench"]
+    assert res == direct
+
+
+# ------------------------------------------------------- streaming = batch
+def test_streaming_equals_batch_analyze():
+    pairs = (_pairs("fast", 30, seed=4, effect=1.08)
+             + _pairs("same", 25, seed=5, effect=1.0)
+             + _pairs("tiny", 4, seed=6))              # below min_results
+    streaming = StreamingAnalyzer(seed=11)
+    # feed one pair at a time, querying interim results along the way
+    for i, p in enumerate(pairs):
+        streaming.add_pair(p)
+        if i % 7 == 0:
+            streaming.result(p.benchmark)              # exercise the cache
+    batch = analyze(pairs, seed=11)
+    assert streaming.analyze() == batch
+    assert set(batch) == {"fast", "same"}              # "tiny" filtered
+
+
+def test_streaming_result_updates_as_pairs_arrive():
+    an = StreamingAnalyzer(seed=0, min_results=10)
+    pairs = _pairs("b", 40, seed=7, effect=1.15)
+    an.add_pairs(pairs[:9])
+    assert an.result("b") is None                      # below min_results
+    an.add_pairs(pairs[9:20])
+    first = an.result("b")
+    assert first is not None and first.n_pairs == 20
+    assert an.result("b") is first                     # cached, same object
+    an.add_pairs(pairs[20:])
+    second = an.result("b")
+    assert second.n_pairs == 40
+    assert second.ci_size < first.ci_size              # CI tightens with n
+    assert second.changed and second.direction == 1
+
+
+def test_streaming_unknown_benchmark():
+    an = StreamingAnalyzer()
+    assert an.result("ghost") is None
+    assert an.n_pairs("ghost") == 0
+    assert an.analyze() == {}
