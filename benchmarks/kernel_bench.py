@@ -8,17 +8,24 @@ detects relative differences between two real implementations.
 """
 from __future__ import annotations
 
+import importlib
+import inspect
 import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cb.commits import Commit, code_digest
+from repro.cb.registry import (BenchmarkSuite, SuiteRunResult,
+                               register_suite, run_plan)
 from repro.core import rmit
 from repro.core.controller import ControllerConfig, ElasticController
 from repro.core.duet import DuetRunnable
 from repro.core.results import analyze
 from repro.core.timing import make_timed
+from repro.faas.backends import LocalDuetBackend
 
 
 def _attention_duet(B=1, S=256, H=4, hd=64):
@@ -61,6 +68,86 @@ def _rmsnorm_duet(T=4096, D=512):
                       * (1 + w))
     return DuetRunnable("rmsnorm_fused_vs_unfused",
                         make_timed(unfused, x, w), make_timed(fused, x, w))
+
+
+# ------------------------------------------------ registry-backed real suite
+# which source modules implement each duet: editing any of them changes the
+# benchmark's code fingerprint, which is what drives pipeline selection
+_FP_MODULES = {
+    "attention_dot_vs_chunked": ("repro.models.attention",),
+    "ssd_recurrence_vs_chunked": ("repro.kernels.ref", "repro.models.ssm"),
+    "rmsnorm_fused_vs_unfused": ("repro.models.layers",),
+}
+
+
+def kernel_fingerprints() -> Dict[str, str]:
+    """Content digests of the *actual* implementation sources."""
+    fps = {}
+    for bench, mods in _FP_MODULES.items():
+        fps[bench] = code_digest(*(
+            inspect.getsource(importlib.import_module(m)) for m in mods))
+    return fps
+
+
+def kernel_commits() -> List[Commit]:
+    """Two-version stream for the working tree: the reference
+    implementations as the baseline, the optimized implementations as the
+    head commit.  Every benchmark's fingerprint differs between the two, so
+    the pipeline selects and really measures all of them."""
+    fps = kernel_fingerprints()
+    base = {b: code_digest("reference", fp) for b, fp in fps.items()}
+    head = {b: code_digest("optimized", fp) for b, fp in fps.items()}
+    return [
+        Commit(commit_id="reference", index=0, parent=None, timestamp_s=0.0,
+               fingerprints=base),
+        Commit(commit_id="head", index=1, parent="reference", timestamp_s=0.0,
+               fingerprints=head, touched=tuple(sorted(head))),
+    ]
+
+
+class KernelSuite(BenchmarkSuite):
+    """The repo's own JAX/Pallas kernel duets behind the same registry
+    interface as the synthetic suite — the pipeline runs a real workload
+    end-to-end with real host timings (``small=True`` shrinks the shapes
+    for CI)."""
+
+    name = "kernels"
+
+    def __init__(self, *, small: bool = False):
+        self.small = bool(small)
+        self._duets: Optional[Dict[str, DuetRunnable]] = None
+
+    def _build(self) -> Dict[str, DuetRunnable]:
+        if self._duets is None:
+            if self.small:
+                duets = (_attention_duet(S=64), _ssd_duet(S=128, P=16, N=16),
+                         _rmsnorm_duet(T=512, D=128))
+            else:
+                duets = (_attention_duet(), _ssd_duet(), _rmsnorm_duet())
+            self._duets = {d.name: d for d in duets}
+        return self._duets
+
+    def benchmark_names(self) -> List[str]:
+        return sorted(_FP_MODULES)
+
+    def run(self, benchmarks: List[str], commit: Commit, *,
+            provider: str = "local", n_calls: int = 12,
+            repeats_per_call: int = 1, parallelism: int = 1,
+            memory_mb: int = 0, seed: int = 0, min_results: int = 10,
+            adaptive: bool = False, observer=None) -> SuiteRunResult:
+        duets = {b: self._build()[b] for b in benchmarks}
+        plan = rmit.make_plan(sorted(duets), n_calls=n_calls,
+                              repeats_per_call=repeats_per_call, seed=seed)
+        backend = LocalDuetBackend(duets, benchmark_timeout_s=60.0)
+        # real duets on one CPU host: wide parallelism would have the
+        # versions contend with each other instead of measuring them
+        return run_plan(backend, plan,
+                        parallelism=max(1, min(parallelism, 2)),
+                        seed=seed, min_results=min_results,
+                        adaptive=adaptive, observer=observer)
+
+
+register_suite("kernels", KernelSuite, replace_existing=True)
 
 
 def table_kernel_duets():

@@ -12,27 +12,44 @@ import numpy as np
 
 from repro.core.experiment import (aa_suite, detection_accuracy,
                                    run_adaptive_experiment,
-                                   run_faas_experiment, run_vm_experiment,
+                                   run_faas_experiment,
+                                   run_pipeline_experiment,
+                                   run_vm_experiment,
                                    victoriametrics_like_suite)
 from repro.core.stats import (bootstrap_median_ci, compare_experiments,
                               detection_set_delta, relative_diffs,
                               repeats_for_ci_parity)
 
-SEEDS = {"aa": 21, "baseline": 11, "replication": 12, "lowmem": 14,
-         "single": 13, "ci": 15}
+_SEED_OFFSETS = {"aa": 21, "baseline": 11, "replication": 12, "lowmem": 14,
+                 "single": 13, "ci": 15, "vm": 1, "suite": 42, "pipeline": 31}
+
+BASE_SEED = 0
+SEEDS = dict(_SEED_OFFSETS)
 
 _cache = {}
 
 
+def set_base_seed(base: int) -> None:
+    """`--seed` plumbing: offset every experiment seed by `base` so each
+    table is reproducible (and perturbable) from the command line.  Base 0
+    replays the historical tables bit-for-bit."""
+    global BASE_SEED
+    BASE_SEED = int(base)
+    SEEDS.clear()
+    SEEDS.update({k: v + BASE_SEED for k, v in _SEED_OFFSETS.items()})
+    _cache.clear()
+
+
 def _suite():
     if "suite" not in _cache:
-        _cache["suite"] = victoriametrics_like_suite()
+        _cache["suite"] = victoriametrics_like_suite(seed=SEEDS["suite"])
     return _cache["suite"]
 
 
 def _original():
     if "orig" not in _cache:
-        _cache["orig"] = run_vm_experiment("original", _suite())
+        _cache["orig"] = run_vm_experiment("original", _suite(),
+                                           seed=SEEDS["vm"])
     return _cache["orig"]
 
 
@@ -332,5 +349,57 @@ def table_adaptive_vs_fixed():
     return "adaptive_vs_fixed", harness_us, rows
 
 
+def table_pipeline_vs_full():
+    """Beyond-paper (Japke et al. 2025 direction): the continuous-
+    benchmarking pipeline over a 20-commit stream, full-suite vs selective
+    vs selective+cached, across all three provider profiles.  Selection +
+    caching must cut invocations and billed cost by >=30% while keeping
+    mean per-commit detection accuracy within +-2 benchmarks, and the
+    history changepoint detector must flag the stream's multi-commit drift
+    that no single pairwise comparison shows in full."""
+    t0 = time.perf_counter()
+    rows = {}
+    for provider in ("lambda", "gcf", "azure"):
+        res = run_pipeline_experiment(provider, n_commits=20,
+                                      seed=SEEDS["pipeline"])
+        full = res.report("full")
+        sel = res.report("selective")
+        cached = res.report("selective_cached")
+        drift_ev = res.drift_event("selective_cached")
+        rows[provider] = {
+            "full_invocations": full.total_invocations,
+            "selective_invocations": sel.total_invocations,
+            "cached_invocations": cached.total_invocations,
+            "invocations_saved_pct": round(
+                (1 - cached.total_invocations
+                 / max(full.total_invocations, 1)) * 100, 1),
+            "target_saved_pct_min": 30.0,
+            "full_cost_usd": round(full.total_cost, 2),
+            "cached_cost_usd": round(cached.total_cost, 2),
+            "cost_saved_pct": round((1 - cached.total_cost
+                                     / full.total_cost) * 100, 1),
+            "full_wall_min": round(full.total_wall_seconds / 60, 1),
+            "cached_wall_min": round(cached.total_wall_seconds / 60, 1),
+            "cache_hits": cached.cache_hits,
+            "accuracy_full": round(res.accuracy["full"], 1),
+            "accuracy_selective": round(res.accuracy["selective"], 1),
+            "accuracy_cached": round(res.accuracy["selective_cached"], 1),
+            "accuracy_delta": round(res.accuracy["selective_cached"]
+                                    - res.accuracy["full"], 1),
+            "target_accuracy_delta_min": -2.0,
+            "drift_truth_pct": round(res.drift.total_pct, 1),
+            "drift_window": f"{res.drift.start}..{res.drift.end}",
+            "drift_detected": drift_ev is not None,
+            "drift_detected_pct": round(drift_ev.cumulative_pct, 1)
+            if drift_ev else 0.0,
+            "drift_z": round(drift_ev.score, 1) if drift_ev else 0.0,
+            "drift_single_pair_flags": len(
+                res.drift_single_pair_flags("selective_cached")),
+            "drift_window_commits": res.drift.length,
+        }
+    harness_us = (time.perf_counter() - t0) * 1e6
+    return "pipeline_vs_full", harness_us, rows
+
+
 ALL_TABLES.extend([table_parallelism_curve, table_memory_autotune,
-                   table_adaptive_vs_fixed])
+                   table_adaptive_vs_fixed, table_pipeline_vs_full])

@@ -5,6 +5,7 @@ table's rows) followed by a human-readable summary block per table.
 
     PYTHONPATH=src python -m benchmarks.run [--tables aa,baseline,...]
                                             [--skip-real] [--roofline FILE]
+                                            [--seed N]
 """
 from __future__ import annotations
 
@@ -21,9 +22,15 @@ def main(argv=None) -> None:
                     help="skip the real-timing kernel duets (slow on CPU)")
     ap.add_argument("--roofline", default="results/dryrun.jsonl",
                     help="dry-run JSONL to summarize (if present)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed offsetting every table's experiment "
+                         "seeds (0 replays the historical tables)")
     args = ap.parse_args(argv)
 
-    from benchmarks.paper_tables import ALL_TABLES
+    import benchmarks.paper_tables as paper_tables
+    if args.seed:
+        paper_tables.set_base_seed(args.seed)
+    ALL_TABLES = paper_tables.ALL_TABLES
     tables = list(ALL_TABLES)
     if not args.skip_real:
         from benchmarks.kernel_bench import table_kernel_duets

@@ -3,10 +3,15 @@
 Simulates the full ElastiBench flow for a code change: run the suite on the
 elastic FaaS platform against the previous release, analyze with bootstrap
 CIs, and fail the "pipeline" if a regression above the noise floor appears.
-Then prints the time/cost comparison against the VM-based baseline.
+Then prints the time/cost comparison against the VM-based baseline, and
+finally drives a whole *commit stream* through the continuous-benchmarking
+pipeline (repro.cb): fingerprint selection + result caching vs naive
+full-suite-per-commit runs, with history-level drift detection.
 
     PYTHONPATH=src python examples/continuous_benchmarking.py
 """
+from repro.cb import (Pipeline, PipelineConfig, StreamConfig, SyntheticSuite,
+                      synthetic_stream)
 from repro.core.experiment import (run_adaptive_experiment,
                                    run_faas_experiment, run_vm_experiment,
                                    victoriametrics_like_suite)
@@ -70,6 +75,34 @@ def main():
                   f"[{r.ci_low:+.1f}, {r.ci_high:+.1f}]")
     else:
         print("CI GATE: PASS — no regression above the reliability floor")
+
+    print("\n== commit stream: selection + caching vs full-suite runs ==")
+    sim = SyntheticSuite(suite)
+    commits, drift = synthetic_stream(
+        sim.benchmark_names(), StreamConfig(n_commits=12, seed=7),
+        effectable=sim.measurable_names(),
+        drift_candidates=sim.quiet_names())
+    print(f"   ground truth: {drift.benchmark} drifts "
+          f"+{drift.per_commit_pct}%/commit over commits "
+          f"{drift.start}..{drift.end} (total +{drift.total_pct:.1f}%)")
+    reports = {}
+    for mode in ("full", "selective_cached"):
+        rep = Pipeline(SyntheticSuite(suite),
+                       PipelineConfig(mode=mode, seed=7)).run_stream(commits)
+        reports[mode] = rep
+        print(f"   {mode:16s} {rep.total_invocations:6d} invocations, "
+              f"${rep.total_cost:.2f}, "
+              f"{rep.total_wall_seconds/60:.1f} min platform time, "
+              f"{rep.cache_hits} cache hits")
+    full, cached = reports["full"], reports["selective_cached"]
+    print(f"   saved {(1 - cached.total_invocations/full.total_invocations)*100:.0f}% "
+          f"invocations, {(1 - cached.total_cost/full.total_cost)*100:.0f}% cost")
+    print("   history-level regression events (top 3 + the hidden drift):")
+    drift_ev = [e for e in cached.events if e.benchmark == drift.benchmark]
+    for e in cached.events[:3] + drift_ev:
+        mark = "  <-- the hidden drift" if e.benchmark == drift.benchmark \
+            else ""
+        print(f"      {e}{mark}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,102 @@
+"""Command-line entry point for the continuous-benchmarking pipeline.
+
+Runs a (synthetic) commit stream through the pipeline on one or more
+provider profiles, persists the history store (and optional SQLite
+export), and prints one JSON summary line per provider/mode — the CI
+smoke job runs exactly this and uploads the history as a build artifact.
+
+    PYTHONPATH=src python -m repro.cb.cli --commits 6 \
+        --providers lambda,gcf,azure --mode selective_cached \
+        --history out/history.jsonl --seed 1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.cb.commits import StreamConfig, synthetic_stream
+from repro.cb.history import HistoryStore
+from repro.cb.pipeline import MODES, Pipeline, PipelineConfig
+from repro.cb.registry import SyntheticSuite, get_suite
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", default="synthetic")
+    ap.add_argument("--commits", type=int, default=20,
+                    help="commit-stream length (incl. the baseline)")
+    ap.add_argument("--providers", default="lambda",
+                    help="comma-separated provider profiles")
+    ap.add_argument("--mode", default="selective_cached",
+                    choices=MODES + ("all",))
+    ap.add_argument("--n-calls", type=int, default=15)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--parallelism", type=int, default=150)
+    ap.add_argument("--max-staleness", type=int, default=5)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="CI-width early stopping inside each commit run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--history", default=None,
+                    help="history-store JSONL path (appended across runs)")
+    ap.add_argument("--sqlite", default=None,
+                    help="also export the history to this SQLite file")
+    args = ap.parse_args(argv)
+
+    if args.suite == "kernels":
+        # the kernel suite registers on import of the benchmarks package
+        # (repo root on sys.path, e.g. `python -m repro.cb.cli` from there)
+        try:
+            from benchmarks.kernel_bench import kernel_commits
+        except ImportError as exc:
+            ap.error(f"--suite kernels needs the repo root on sys.path "
+                     f"(run from the repo checkout): {exc}")
+        commits, drift = kernel_commits(), None
+    else:
+        suite = get_suite(args.suite)
+        names = suite.benchmark_names()
+        eff = suite.measurable_names() if isinstance(suite, SyntheticSuite) \
+            else names
+        quiet = suite.quiet_names() if isinstance(suite, SyntheticSuite) \
+            else eff
+        commits, drift = synthetic_stream(
+            names, StreamConfig(n_commits=args.commits, seed=args.seed),
+            effectable=eff, drift_candidates=quiet)
+    history = HistoryStore(args.history)
+
+    modes = MODES if args.mode == "all" else (args.mode,)
+    providers = (["local"] if args.suite == "kernels"
+                 else args.providers.split(","))
+    for provider in providers:
+        for mode in modes:
+            cfg = PipelineConfig(
+                suite=args.suite, provider=provider, mode=mode,
+                n_calls=args.n_calls, repeats_per_call=args.repeats,
+                parallelism=args.parallelism, seed=args.seed,
+                max_staleness=args.max_staleness, adaptive=args.adaptive)
+            rep = Pipeline(get_suite(args.suite), cfg,
+                           history=history).run_stream(commits)
+            summary = {
+                "suite": args.suite, "provider": provider, "mode": mode,
+                "commits": len(rep.commits),
+                "invocations": rep.total_invocations,
+                "cost_usd": round(rep.total_cost, 4),
+                "wall_min": round(rep.total_wall_seconds / 60.0, 2),
+                "cache_hits": rep.cache_hits,
+                "flagged": rep.total_flagged,
+                "events": [str(e) for e in rep.events],
+            }
+            if drift is not None:
+                summary["drift_ground_truth"] = (
+                    f"{drift.benchmark} +{drift.total_pct:.1f}% over "
+                    f"commits {drift.start}..{drift.end}")
+            print(json.dumps(summary, sort_keys=True))
+    if args.history:
+        print(f"history: {len(history)} records -> {args.history}")
+    if args.sqlite:
+        history.to_sqlite(args.sqlite)
+        print(f"sqlite export -> {args.sqlite}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

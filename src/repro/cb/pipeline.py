@@ -1,0 +1,302 @@
+"""Continuous-benchmarking pipeline orchestrator.
+
+Per commit, the pipeline composes the subsystem layers:
+
+    CommitStream ──► BenchmarkSelector ──► ResultCache ──► BenchmarkSuite
+      (commits.py)      (select.py)          (cache.py)     (registry.py,
+                                                             runs on the
+                                                             ExecutionEngine)
+                                └──────────► HistoryStore ─► RegressionDetector
+                                               (history.py)     (detect.py)
+
+Three modes trade platform spend for measurement freshness:
+
+  * ``full`` — every benchmark measured every commit (the naive per-commit
+    suite run the paper's CI use case starts from).
+  * ``selective`` — only benchmarks whose code fingerprint changed are
+    measured, plus periodic A/A revalidation of stale unchanged ones.
+  * ``selective_cached`` — as selective, but measurements whose exact
+    (fingerprint-pair, config) were measured before are served from the
+    result cache instead of the platform.
+
+Every commit's per-benchmark CIs, invocation counts, and attributed costs
+land in the history store; the regression detector then scans the history
+for changes no single pairwise comparison could flag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.stats import ChangeResult
+from repro.faas.engine import CompletedInvocation, EngineObserver
+from repro.cb.cache import ResultCache, config_digest
+from repro.cb.commits import Commit
+from repro.cb.detect import DetectorConfig, RegressionDetector, RegressionEvent
+from repro.cb.history import (HistoryRecord, HistoryStore, SOURCE_BASELINE,
+                              SOURCE_CACHE, SOURCE_RUN, SOURCE_SKIP)
+from repro.cb.registry import BenchmarkSuite, get_suite
+from repro.cb.select import BenchmarkSelector, SelectorConfig
+
+MODES = ("full", "selective", "selective_cached")
+
+
+@dataclass
+class PipelineConfig:
+    suite: str = "synthetic"
+    provider: str = "lambda"
+    mode: str = "selective_cached"
+    n_calls: int = 15
+    repeats_per_call: int = 3
+    parallelism: int = 150
+    memory_mb: int = 2048
+    min_results: int = 10
+    seed: int = 0
+    max_staleness: int = 5
+    adaptive: bool = False          # attach the AdaptiveController per run
+    detector: DetectorConfig = field(default_factory=DetectorConfig)
+
+    def config_digest(self) -> str:
+        """Cache comparability key: every knob that shapes a measurement."""
+        return config_digest(suite=self.suite, provider=self.provider,
+                             n_calls=self.n_calls,
+                             repeats_per_call=self.repeats_per_call,
+                             memory_mb=self.memory_mb,
+                             min_results=self.min_results,
+                             adaptive=self.adaptive)
+
+
+class _BenchmarkMeter(EngineObserver):
+    """Attributes engine work to benchmarks: invocation counts and billed
+    seconds per benchmark, so history records carry per-benchmark costs."""
+
+    def __init__(self):
+        self.invocations: Dict[str, int] = {}
+        self.billed_s: Dict[str, float] = {}
+
+    def on_result(self, done: CompletedInvocation) -> None:
+        b = done.invocation.benchmark
+        self.invocations[b] = self.invocations.get(b, 0) + 1
+        self.billed_s[b] = self.billed_s.get(b, 0.0) \
+            + done.outcome.duration_s
+
+
+@dataclass
+class CommitRun:
+    """What the pipeline did for one commit."""
+    commit_id: str
+    commit_index: int
+    ran: List[str]
+    revalidated: List[str]
+    cache_hits: List[str]
+    skipped: List[str]
+    changes: Dict[str, ChangeResult]
+    flagged: List[str]              # single-pair detections this commit
+    invocations: int
+    billed_seconds: float
+    cost_dollars: float
+    wall_seconds: float
+
+
+@dataclass
+class PipelineReport:
+    suite: str
+    provider: str
+    mode: str
+    commits: List[CommitRun]
+    events: List[RegressionEvent]
+    cache_hits: int
+    cache_misses: int
+
+    @property
+    def total_invocations(self) -> int:
+        return sum(c.invocations for c in self.commits)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(c.cost_dollars for c in self.commits)
+
+    @property
+    def total_wall_seconds(self) -> float:
+        return sum(c.wall_seconds for c in self.commits)
+
+    @property
+    def total_flagged(self) -> int:
+        return sum(len(c.flagged) for c in self.commits)
+
+    def commit(self, commit_id: str) -> CommitRun:
+        return next(c for c in self.commits if c.commit_id == commit_id)
+
+
+class Pipeline:
+    """Drives a BenchmarkSuite over a commit stream in one of the MODES."""
+
+    def __init__(self, suite: BenchmarkSuite, cfg: Optional[PipelineConfig]
+                 = None, *, history: Optional[HistoryStore] = None,
+                 cache: Optional[ResultCache] = None):
+        self.cfg = cfg or PipelineConfig()
+        if self.cfg.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}")
+        self.suite = suite
+        self.history = history if history is not None else HistoryStore()
+        self.cache = cache if cache is not None else ResultCache()
+        self.selector = BenchmarkSelector(SelectorConfig(
+            max_staleness=self.cfg.max_staleness,
+            select_all=self.cfg.mode == "full"))
+        self._cfg_digest = self.cfg.config_digest()
+        self._parent: Optional[Commit] = None
+
+    # ------------------------------------------------------------- stream
+    def run_stream(self, commits: List[Commit]) -> PipelineReport:
+        """Evaluate a whole stream: commits[0] is the baseline (reference
+        version, nothing to compare), each later commit is benchmarked
+        against its parent."""
+        runs = [self.run_commit(c) for c in commits]
+        events = RegressionDetector(self.cfg.detector).scan(
+            self.history, provider=self.cfg.provider, mode=self.cfg.mode)
+        return PipelineReport(
+            suite=self.suite.name, provider=self.cfg.provider,
+            mode=self.cfg.mode, commits=[r for r in runs if r is not None],
+            events=events, cache_hits=self.cache.hits,
+            cache_misses=self.cache.misses)
+
+    # ------------------------------------------------------------- commit
+    def run_commit(self, commit: Commit) -> Optional[CommitRun]:
+        """Process one commit; returns None for the stream's baseline."""
+        cfg = self.cfg
+        if self._parent is None:
+            self.selector.observe_baseline(commit)
+            self._parent = commit
+            self.history.append([HistoryRecord.from_change(
+                None, suite=self.suite.name, provider=cfg.provider,
+                mode=cfg.mode, commit_id=commit.commit_id,
+                commit_index=commit.index, benchmark=b,
+                fingerprint=commit.fingerprints[b], code_changed=False,
+                source=SOURCE_BASELINE)
+                for b in sorted(commit.fingerprints)])
+            return None
+        parent = self._parent
+        sel = self.selector.select(commit)
+
+        changes: Dict[str, ChangeResult] = {}
+        cache_hits: List[str] = []
+        to_measure: List[str] = []
+        sources: Dict[str, str] = {b: SOURCE_SKIP for b in sel.skipped}
+        use_cache = cfg.mode == "selective_cached"
+        run_set = set(sel.run)
+
+        def pair_fps(b: str) -> tuple:
+            # a changed benchmark measures parent->commit; a revalidation
+            # measures the unchanged fingerprint against itself (A/A)
+            fp2 = commit.fingerprints[b]
+            fp1 = parent.fingerprints.get(b, "") if b in run_set else fp2
+            return fp1, fp2
+
+        for b in sel.selected:
+            fp1, fp2 = pair_fps(b)
+            if use_cache:
+                hit = self.cache.get(b, fp1, fp2, self._cfg_digest)
+                if hit is not None:
+                    res = hit.change_result()
+                    if res is not None:
+                        changes[b] = res
+                    sources[b] = SOURCE_CACHE
+                    cache_hits.append(b)
+                    continue
+            to_measure.append(b)
+            sources[b] = SOURCE_RUN
+
+        meter = _BenchmarkMeter()
+        invocations = 0
+        billed = 0.0
+        cost = 0.0
+        wall = 0.0
+        if to_measure:
+            # revalidations measure A/A: the suite sees a zero step effect
+            # for them, which is exactly what an unchanged benchmark is
+            reval = set(sel.revalidate) & set(to_measure)
+            run_commit = commit if not reval else _strip_steps(commit, reval)
+            result = self.suite.run(
+                to_measure, run_commit, provider=cfg.provider,
+                n_calls=cfg.n_calls, repeats_per_call=cfg.repeats_per_call,
+                parallelism=cfg.parallelism, memory_mb=cfg.memory_mb,
+                seed=cfg.seed, min_results=cfg.min_results,
+                adaptive=cfg.adaptive, observer=meter)
+            changes.update(result.changes)
+            rep = result.report
+            invocations = len(rep.billed_seconds)
+            billed = float(sum(rep.billed_seconds))
+            cost = rep.cost_dollars
+            wall = rep.wall_seconds
+            self.selector.mark_measured(to_measure, commit.index)
+            for b in to_measure:
+                fp1, fp2 = pair_fps(b)
+                self.cache.put(
+                    b, fp1, fp2, self._cfg_digest,
+                    change=changes.get(b),
+                    invocations=meter.invocations.get(b, 0),
+                    billed_seconds=meter.billed_s.get(b, 0.0),
+                    cost_dollars=_prorate(cost, billed,
+                                          meter.billed_s.get(b, 0.0)))
+        if cache_hits:
+            self.selector.mark_measured(cache_hits, commit.index)
+
+        records = []
+        for b in sorted(commit.fingerprints):
+            src = sources.get(b, SOURCE_SKIP)
+            inv_b, billed_b = 0, 0.0
+            if src == SOURCE_RUN:
+                inv_b = meter.invocations.get(b, 0)
+                billed_b = meter.billed_s.get(b, 0.0)
+            records.append(HistoryRecord.from_change(
+                changes.get(b), suite=self.suite.name, provider=cfg.provider,
+                mode=cfg.mode, commit_id=commit.commit_id,
+                commit_index=commit.index, benchmark=b,
+                fingerprint=commit.fingerprints[b],
+                code_changed=commit.fingerprints[b]
+                != parent.fingerprints.get(b, ""),
+                source=src, invocations=inv_b, billed_seconds=billed_b,
+                cost_dollars=_prorate(cost, billed, billed_b)))
+        self.history.append(records)
+
+        self._parent = commit
+        return CommitRun(
+            commit_id=commit.commit_id, commit_index=commit.index,
+            ran=[b for b in sel.run if sources.get(b) == SOURCE_RUN],
+            revalidated=[b for b in sel.revalidate
+                         if sources.get(b) == SOURCE_RUN],
+            cache_hits=cache_hits, skipped=sel.skipped, changes=changes,
+            flagged=sorted(b for b, c in changes.items() if c.changed),
+            invocations=invocations, billed_seconds=billed,
+            cost_dollars=cost, wall_seconds=wall)
+
+
+def _prorate(total_cost: float, total_billed: float, billed_b: float) -> float:
+    """Attribute run cost to benchmarks by billed-seconds share (provider
+    bills carry per-request and memory terms; the share is the honest
+    first-order attribution)."""
+    if total_billed <= 0.0:
+        return 0.0
+    return total_cost * billed_b / total_billed
+
+
+def _strip_steps(commit: Commit, benchmarks: set) -> Commit:
+    """A/A view of a commit for revalidation runs: the listed benchmarks
+    keep their fingerprint and level but lose their (zero anyway) step."""
+    from dataclasses import replace
+    steps = {b: e for b, e in commit.step_effects.items()
+             if b not in benchmarks}
+    return replace(commit, step_effects=steps)
+
+
+def run_pipeline(suite_name: str, commits: List[Commit],
+                 cfg: Optional[PipelineConfig] = None, *,
+                 history: Optional[HistoryStore] = None,
+                 cache: Optional[ResultCache] = None,
+                 suite_kwargs: Optional[dict] = None) -> PipelineReport:
+    """Convenience entry: resolve the suite from the registry and run."""
+    cfg = cfg or PipelineConfig()
+    suite = get_suite(suite_name if suite_name else cfg.suite,
+                      **(suite_kwargs or {}))
+    return Pipeline(suite, cfg, history=history,
+                    cache=cache).run_stream(commits)

@@ -24,10 +24,10 @@ from repro.core import rmit, stats
 from repro.core.controller import (AdaptiveConfig, AdaptiveController,
                                    AdaptiveSummary)
 from repro.core.results import analyze
-from repro.faas.backends import PROVIDER_PROFILES, SimFaaSBackend
+from repro.faas.backends import SimFaaSBackend
 from repro.faas.engine import EngineConfig, EngineReport, ExecutionEngine
-from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimulatedFaaS,
-                                 SimulatedVM, SimWorkload, VMPlatformConfig)
+from repro.faas.platform import (SimReport, SimulatedVM, SimWorkload,
+                                 VMPlatformConfig, make_provider_backend)
 
 N_BENCHMARKS = 106
 
@@ -93,15 +93,9 @@ class ExperimentResult:
 def _make_backend(suite: Dict[str, SimWorkload], provider: str,
                   memory_mb: int, seed: int,
                   start_time_s: float) -> SimFaaSBackend:
-    if provider == "lambda":
-        # the historical default path: FaaSPlatformConfig -> Lambda profile,
-        # replays the original SimulatedFaaS results bit-for-bit
-        return SimulatedFaaS(suite, FaaSPlatformConfig(memory_mb=memory_mb),
-                             seed=seed, start_time_s=start_time_s)\
-            .make_backend()
-    profile = PROVIDER_PROFILES[provider]
-    return SimFaaSBackend(suite, profile, memory_mb=memory_mb, seed=seed,
-                          start_time_s=start_time_s)
+    # the lambda path replays the original SimulatedFaaS bit-for-bit
+    return make_provider_backend(suite, provider, memory_mb=memory_mb,
+                                 seed=seed, start_time_s=start_time_s)
 
 
 def run_faas_experiment(name: str, suite: Dict[str, SimWorkload], *,
@@ -200,3 +194,95 @@ def run_vm_experiment(name: str, suite: Dict[str, SimWorkload], *,
     report = platform.run_suite(plan)
     changes = analyze(report.pairs, seed=seed, min_results=min_results)
     return ExperimentResult(name=name, report=report, changes=changes)
+
+
+# ----------------------------------------------- continuous benchmarking (cb)
+@dataclass
+class PipelineExperimentResult:
+    """`pipeline_vs_full`: one provider's commit stream evaluated in every
+    pipeline mode (full / selective / selective_cached)."""
+    provider: str
+    commits: list                       # List[repro.cb.Commit]
+    drift: object                       # repro.cb.DriftSpec ground truth
+    reports: Dict[str, object]          # mode -> repro.cb.PipelineReport
+    accuracy: Dict[str, float]          # mode -> mean per-commit accuracy
+
+    def report(self, mode: str):
+        return self.reports[mode]
+
+    def drift_event(self, mode: str):
+        """The detector's event for the drifting benchmark, if any."""
+        return next((e for e in self.reports[mode].events
+                     if e.benchmark == self.drift.benchmark), None)
+
+    def drift_single_pair_flags(self, mode: str) -> List[int]:
+        """Commits inside the drift window where pairwise analysis alone
+        flagged the drifting benchmark."""
+        window = set(self.drift.commits())
+        return [c.commit_index for c in self.reports[mode].commits
+                if self.drift.benchmark in c.flagged
+                and c.commit_index in window]
+
+
+def pipeline_detection_accuracy(commits, report, measurable: List[str], *,
+                                floor_pct: float = 2.0) -> float:
+    """Mean per-commit count of correctly classified benchmarks against the
+    stream's ground truth (the commit-stream analogue of
+    `detection_accuracy`): a true step >= floor_pct must be detected with
+    the right sign, anything smaller must not be flagged.  Skipped/cached
+    benchmarks count as not-flagged — for an unchanged fingerprint that is
+    the correct call by construction."""
+    runs = {c.commit_id: c for c in report.commits}
+    per_commit = []
+    for commit in commits[1:]:
+        run = runs[commit.commit_id]
+        ok = 0
+        for b in measurable:
+            truth = commit.step_effect(b)
+            should = abs(truth) >= floor_pct
+            c = run.changes.get(b)
+            detected = c is not None and c.changed
+            if should:
+                ok += int(detected and c.direction == (1 if truth > 0
+                                                       else -1))
+            else:
+                ok += int(not detected)
+        per_commit.append(ok)
+    return float(np.mean(per_commit))
+
+
+def run_pipeline_experiment(provider: str = "lambda", *, n_commits: int = 20,
+                            seed: int = 0, n_calls: int = 15,
+                            repeats_per_call: int = 3,
+                            parallelism: int = 150,
+                            max_staleness: int = 5,
+                            modes: tuple = ("full", "selective",
+                                            "selective_cached"),
+                            floor_pct: float = 2.0
+                            ) -> PipelineExperimentResult:
+    """One synthetic commit stream evaluated per pipeline mode on one
+    provider profile; every mode sees the identical stream (same ground
+    truth, same drift) so invocation/cost/accuracy deltas are attributable
+    to selection and caching alone."""
+    from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
+                          SyntheticSuite, synthetic_stream)
+    suite = SyntheticSuite()
+    commits, drift = synthetic_stream(
+        suite.benchmark_names(), StreamConfig(n_commits=n_commits, seed=seed),
+        effectable=suite.measurable_names(),
+        drift_candidates=suite.quiet_names())
+    measurable = suite.measurable_names()
+    reports, accuracy = {}, {}
+    for mode in modes:
+        cfg = PipelineConfig(provider=provider, mode=mode, n_calls=n_calls,
+                             repeats_per_call=repeats_per_call,
+                             parallelism=parallelism, seed=seed,
+                             max_staleness=max_staleness)
+        rep = Pipeline(SyntheticSuite(suite.workloads), cfg).run_stream(
+            commits)
+        reports[mode] = rep
+        accuracy[mode] = pipeline_detection_accuracy(commits, rep, measurable,
+                                                     floor_pct=floor_pct)
+    return PipelineExperimentResult(provider=provider, commits=commits,
+                                    drift=drift, reports=reports,
+                                    accuracy=accuracy)

@@ -43,19 +43,41 @@ def append_pairs(path: str, pairs: Iterable[DuetPair]):
             f.write((json.dumps(asdict(p)) + "\n").encode())
 
 
-def load_pairs(path: str) -> List[DuetPair]:
-    out: List[DuetPair] = []
+def load_jsonl(path: str, *, schema: Optional[int] = None) -> Tuple[list,
+                                                                    int]:
+    """Crash-tolerant JSONL loader shared by every append-only store
+    (duet pairs here, the cb result cache and history store): blank and
+    torn/corrupt lines are skipped; with `schema` set, records whose
+    ``schema`` field differs are dropped and counted (an old reader never
+    misinterprets a future format).  Returns (records, n_skipped_schema)."""
+    records: list = []
+    skipped_schema = 0
     if not os.path.exists(path):
-        return out
+        return records, skipped_schema
     with open(path) as f:
         for line in f:
             line = line.strip()
             if not line:
                 continue
             try:
-                out.append(DuetPair(**json.loads(line)))
-            except (json.JSONDecodeError, TypeError):
+                rec = json.loads(line)
+            except json.JSONDecodeError:
                 continue    # torn tail line after a crash
+            if schema is not None and rec.get("schema") != schema:
+                skipped_schema += 1
+                continue
+            records.append(rec)
+    return records, skipped_schema
+
+
+def load_pairs(path: str) -> List[DuetPair]:
+    records, _ = load_jsonl(path)
+    out: List[DuetPair] = []
+    for rec in records:
+        try:
+            out.append(DuetPair(**rec))
+        except TypeError:
+            continue        # half-written record with missing fields
     return out
 
 

@@ -69,6 +69,18 @@ by the final analysis of the same pairs.
 
 ``SimulatedFaaS`` / ``SimulatedVM`` (platform.py) and
 ``ElasticController`` remain as thin wrappers for existing call sites.
+
+Continuous benchmarking (repro/cb)
+----------------------------------
+
+The engine evaluates *one* commit pair; the continuous-benchmarking
+pipeline (``repro.cb``) layers commit streams on top: fingerprint-based
+benchmark selection, result caching, a persistent regression history, and
+changepoint detection across commits.  It drives suites through the same
+``ExecutionEngine`` — ``FanoutObserver`` composes its per-benchmark cost
+meter with the adaptive controller behind the engine's single observer
+slot, and ``make_provider_backend`` (platform.py) resolves provider
+profiles by name for it and for core/experiment.py alike.
 """
 from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
                                  GCF_PROFILE, GCFLikeBackend,
@@ -77,16 +89,17 @@ from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
                                  ProviderProfile, SimFaaSBackend, VMBackend)
 from repro.faas.engine import (CompletedInvocation, EngineConfig,
                                EngineObserver, EngineReport, ExecutionEngine,
-                               Instance, InvocationOutcome)
+                               FanoutObserver, Instance, InvocationOutcome)
 from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimWorkload,
-                                 SimulatedFaaS, SimulatedVM, VMPlatformConfig)
+                                 SimulatedFaaS, SimulatedVM, VMPlatformConfig,
+                                 make_provider_backend)
 
 __all__ = [
     "AZURE_PROFILE", "AzureLikeBackend", "CompletedInvocation",
     "EngineConfig", "EngineObserver", "EngineReport", "ExecutionEngine",
-    "FaaSPlatformConfig", "GCF_PROFILE", "GCFLikeBackend", "Instance",
-    "InvocationOutcome", "LAMBDA_PROFILE", "LambdaLikeBackend",
+    "FaaSPlatformConfig", "FanoutObserver", "GCF_PROFILE", "GCFLikeBackend",
+    "Instance", "InvocationOutcome", "LAMBDA_PROFILE", "LambdaLikeBackend",
     "LocalDuetBackend", "PROVIDER_PROFILES", "ProviderProfile",
     "SimFaaSBackend", "SimReport", "SimWorkload", "SimulatedFaaS",
-    "SimulatedVM", "VMBackend", "VMPlatformConfig",
+    "SimulatedVM", "VMBackend", "VMPlatformConfig", "make_provider_backend",
 ]

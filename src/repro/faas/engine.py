@@ -100,6 +100,30 @@ class EngineObserver:
         return ()
 
 
+class FanoutObserver(EngineObserver):
+    """Composes several observers behind the engine's single observer slot
+    (e.g. an adaptive controller plus the pipeline's per-benchmark meter).
+    An invocation is skipped if *any* child skips it; results are delivered
+    to every child in order; extra invocations are concatenated."""
+
+    def __init__(self, observers: Sequence[EngineObserver]):
+        self.observers = list(observers)
+
+    def should_skip(self, inv: Invocation) -> bool:
+        # no short-circuit: every child sees every skip decision point
+        return any([obs.should_skip(inv) for obs in self.observers])
+
+    def on_result(self, done: CompletedInvocation) -> None:
+        for obs in self.observers:
+            obs.on_result(done)
+
+    def extra_invocations(self) -> Sequence[Invocation]:
+        out: List[Invocation] = []
+        for obs in self.observers:
+            out.extend(obs.extra_invocations())
+        return out
+
+
 @dataclass
 class EngineReport:
     """Superset of the old SimReport / RunReport accounting."""

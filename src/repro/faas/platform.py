@@ -122,6 +122,25 @@ class SimReport:
                    failed_benchmarks=rep.failed_benchmarks)
 
 
+def make_provider_backend(workloads: Dict[str, SimWorkload], provider: str,
+                          *, memory_mb: int = 2048, seed: int = 0,
+                          start_time_s: float = 0.0) -> SimFaaSBackend:
+    """One simulated-provider backend by name ("lambda" / "gcf" / "azure").
+
+    The Lambda path goes through `FaaSPlatformConfig.to_profile()` — the
+    historical pricing and RNG stream — so results replay the original
+    `SimulatedFaaS` bit-for-bit; the other providers use their registered
+    `ProviderProfile`s directly."""
+    from repro.faas.backends import PROVIDER_PROFILES
+    if provider == "lambda":
+        return SimulatedFaaS(workloads, FaaSPlatformConfig(memory_mb=memory_mb),
+                             seed=seed, start_time_s=start_time_s)\
+            .make_backend()
+    profile = PROVIDER_PROFILES[provider]
+    return SimFaaSBackend(workloads, profile, memory_mb=memory_mb, seed=seed,
+                          start_time_s=start_time_s)
+
+
 class SimulatedFaaS:
     """Virtual-time simulation of running a SuitePlan at a given parallelism.
 

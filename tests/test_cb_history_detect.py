@@ -1,0 +1,163 @@
+"""History store persistence/schema and the changepoint drift detector."""
+import json
+import sqlite3
+
+import numpy as np
+import pytest
+
+from repro.cb.detect import (DetectorConfig, RegressionDetector, SeriesPoint,
+                             record_to_point)
+from repro.cb.history import (SCHEMA_VERSION, SOURCE_RUN, SOURCE_SKIP,
+                              HistoryRecord, HistoryStore)
+from repro.core.stats import ChangeResult
+
+
+def _rec(commit_index, benchmark="b", median=None, ci=None, *,
+         code_changed=True, source=SOURCE_RUN, changed=False):
+    change = None
+    if median is not None:
+        lo, hi = ci
+        change = ChangeResult(benchmark=benchmark, n_pairs=45,
+                              median_diff_pct=median, ci_low=lo, ci_high=hi,
+                              changed=changed,
+                              direction=0 if not changed
+                              else (1 if median > 0 else -1))
+    return HistoryRecord.from_change(
+        change, suite="synthetic", provider="lambda", mode="selective",
+        commit_id=f"c{commit_index}", commit_index=commit_index,
+        benchmark=benchmark, fingerprint=f"f{commit_index}",
+        code_changed=code_changed, source=source)
+
+
+# ---------------------------------------------------------------- history
+def test_history_roundtrip_series_and_commits(tmp_path):
+    path = str(tmp_path / "h" / "history.jsonl")
+    h = HistoryStore(path)
+    h.append([_rec(2), _rec(1), _rec(1, benchmark="other")])
+    h.append([_rec(3)])
+    h2 = HistoryStore(path)
+    assert len(h2) == 4
+    series = h2.series("b")
+    assert [r.commit_index for r in series] == [1, 2, 3]
+    assert h2.benchmarks() == ["b", "other"]
+    assert h2.series("b", provider="gcf") == []
+
+
+def test_rerun_records_supersede_instead_of_double_counting():
+    """Accumulating the same stream twice (CI re-runs into the artifact
+    history) must not double the detector's cumulative sums."""
+    h = HistoryStore()
+    run1 = [_rec(i, median=1.2, ci=(-0.3, 2.7)) for i in range(1, 9)]
+    h.append(run1)
+    series_once = h.series("b")
+    h.append([_rec(i, median=1.3, ci=(-0.2, 2.8)) for i in range(1, 9)])
+    series_twice = h.series("b")
+    assert len(series_twice) == len(series_once) == 8
+    assert all(r.median_diff_pct == 1.3 for r in series_twice)  # latest wins
+    ev1 = RegressionDetector().scan_series(
+        "b", [record_to_point(r) for r in series_once])
+    ev2 = RegressionDetector().scan_series(
+        "b", [record_to_point(r) for r in series_twice])
+    assert abs(ev2.cumulative_pct - ev1.cumulative_pct) < 2.0  # not ~2x
+
+
+def test_history_skips_future_schema_and_torn_tail(tmp_path):
+    path = str(tmp_path / "history.jsonl")
+    h = HistoryStore(path)
+    h.append([_rec(1)])
+    with open(path, "a") as f:
+        f.write(json.dumps({"schema": SCHEMA_VERSION + 1,
+                            "benchmark": "future"}) + "\n")
+        f.write('{"schema": 1, "benchmark": "to')        # torn tail
+    h2 = HistoryStore(path)
+    assert len(h2) == 1
+    assert h2.skipped_schema == 1
+
+
+def test_history_sqlite_export(tmp_path):
+    h = HistoryStore()
+    h.append([_rec(i, median=float(i), ci=(float(i) - 1, float(i) + 1))
+              for i in range(1, 6)])
+    db = str(tmp_path / "history.sqlite")
+    h.to_sqlite(db)
+    con = sqlite3.connect(db)
+    try:
+        n, = con.execute("SELECT COUNT(*) FROM history").fetchone()
+        assert n == 5
+        med, = con.execute(
+            "SELECT median_diff_pct FROM history WHERE commit_index=3"
+        ).fetchone()
+        assert med == 3.0
+    finally:
+        con.close()
+
+
+# --------------------------------------------------------------- detector
+def _pt(i, median, se, flagged=False):
+    return SeriesPoint(commit_index=i, commit_id=f"c{i}", median=median,
+                       se=se, code_changed=se > 0, flagged=flagged)
+
+
+def test_detector_flags_multi_commit_drift_single_steps_hidden():
+    # 8 commits of +1% each, every per-commit CI includes 0 (se 0.5 ->
+    # half-width ~1.3): no single pairwise comparison fires, the window does
+    pts = [_pt(i, 1.0, 0.5) for i in range(8)]
+    ev = RegressionDetector().scan_series("b", pts)
+    assert ev is not None
+    assert ev.kind == "drift"
+    assert ev.direction == 1
+    assert ev.cumulative_pct == pytest.approx(8.0)
+    assert ev.score == pytest.approx(8.0 / np.sqrt(8 * 0.25))
+
+
+def test_detector_classifies_flagged_step_as_step():
+    pts = ([_pt(i, 0.1, 0.5) for i in range(4)]
+           + [_pt(4, 12.0, 0.8, flagged=True)]
+           + [_pt(i, -0.1, 0.5) for i in range(5, 9)])
+    ev = RegressionDetector().scan_series("b", pts)
+    assert ev is not None and ev.kind == "step"
+    assert ev.start_index <= 4 <= ev.end_index
+
+
+def test_detector_quiet_series_has_no_event():
+    rng = np.random.default_rng(0)
+    pts = [_pt(i, float(rng.normal(0.0, 0.5)), 0.5) for i in range(20)]
+    assert RegressionDetector().scan_series("b", pts) is None
+
+
+def test_detector_ignores_unchanged_code_points():
+    # the unchanged-code points carry a stale positive sample; they must
+    # contribute exactly zero signal and zero variance
+    pts = []
+    for i in range(12):
+        pts.append(_pt(i, 1.0, 0.5) if i % 2 == 0 else _pt(i, 0.0, 0.0))
+    ev = RegressionDetector().scan_series("b", pts)
+    assert ev is not None
+    assert ev.cumulative_pct == pytest.approx(6.0)
+    # reported window is trimmed to measured commits
+    assert ev.start_index == 0 and ev.end_index == 10
+
+
+def test_detector_min_cumulative_floor():
+    pts = [_pt(i, 0.4, 0.05) for i in range(4)]     # z huge, change tiny
+    cfg = DetectorConfig(min_cumulative_pct=2.0)
+    assert RegressionDetector(cfg).scan_series("b", pts) is None
+
+
+def test_record_to_point_mapping():
+    p = record_to_point(_rec(5, median=2.0, ci=(0.5, 3.5), changed=True))
+    assert p.flagged and p.median == 2.0 and p.se > 0
+    p = record_to_point(_rec(6, source=SOURCE_SKIP, code_changed=False))
+    assert p.median == 0.0 and p.se == 0.0 and not p.flagged
+
+
+def test_detector_scan_over_store():
+    h = HistoryStore()
+    for i in range(1, 11):
+        h.append([_rec(i, benchmark="drifty", median=1.2, ci=(-0.3, 2.7)),
+                  _rec(i, benchmark="flat", median=0.05, ci=(-1.3, 1.4)),
+                  _rec(i, benchmark="skippy", source=SOURCE_SKIP,
+                       code_changed=False)])
+    events = RegressionDetector().scan(h, provider="lambda")
+    assert [e.benchmark for e in events] == ["drifty"]
+    assert events[0].kind == "drift"

@@ -1,0 +1,49 @@
+"""The repo's real kernel duets behind the suite registry: fingerprints
+from actual sources, and an end-to-end pipeline run with real timings."""
+import pytest
+
+kernel_bench = pytest.importorskip(
+    "benchmarks.kernel_bench",
+    reason="benchmarks package needs the repo root on sys.path")
+
+from repro.cb import (Pipeline, PipelineConfig, available_suites,  # noqa: E402
+                      get_suite)
+from repro.cb.history import SOURCE_RUN  # noqa: E402
+
+
+def test_kernel_suite_is_registered():
+    assert "kernels" in available_suites()
+    suite = get_suite("kernels", small=True)
+    assert suite.benchmark_names() == sorted(kernel_bench._FP_MODULES)
+
+
+def test_kernel_fingerprints_track_sources():
+    fps = kernel_bench.kernel_fingerprints()
+    assert set(fps) == set(kernel_bench._FP_MODULES)
+    assert fps == kernel_bench.kernel_fingerprints()    # stable
+    assert len(set(fps.values())) == len(fps)           # per-benchmark
+
+
+def test_kernel_commits_change_every_benchmark():
+    base, head = kernel_bench.kernel_commits()
+    assert base.index == 0 and head.parent == base.commit_id
+    for b in base.fingerprints:
+        assert base.fingerprints[b] != head.fingerprints[b]
+
+
+@pytest.mark.slow
+def test_pipeline_runs_real_kernels_end_to_end():
+    commits = kernel_bench.kernel_commits()
+    cfg = PipelineConfig(suite="kernels", provider="local", mode="selective",
+                         n_calls=5, repeats_per_call=1, parallelism=1,
+                         min_results=4)
+    pipe = Pipeline(get_suite("kernels", small=True), cfg)
+    rep = pipe.run_stream(commits)
+    run = rep.commits[0]
+    assert set(run.ran) == set(kernel_bench._FP_MODULES)
+    assert run.invocations == 5 * len(run.ran)
+    # real timings flowed through engine -> analysis -> history
+    assert all(c.n_pairs == 5 for c in run.changes.values())
+    recs = [r for r in pipe.history.records() if r.source == SOURCE_RUN]
+    assert len(recs) == len(run.ran)
+    assert all(r.invocations == 5 and r.billed_seconds > 0 for r in recs)

@@ -1,0 +1,164 @@
+"""Pipeline orchestration: selection/caching savings, golden agreement
+with full-suite detection, determinism, drift detection, CLI."""
+import json
+from dataclasses import asdict
+
+import pytest
+
+from repro.cb import (Pipeline, PipelineConfig, RegressionDetector,
+                      StreamConfig, SyntheticSuite, synthetic_stream)
+from repro.cb.cli import main as cli_main
+from repro.faas.platform import SimWorkload
+
+N = 14
+
+
+def _workloads():
+    w = {}
+    for i in range(N):
+        name = f"s{i:02d}"
+        w[name] = SimWorkload(name=name, base_seconds=0.4 + 0.05 * i,
+                              effect_pct=0.0,
+                              run_sigma=0.02 + 0.002 * (i % 5),
+                              fs_write=(i == 13), setup_seconds=2.0)
+    return w
+
+
+@pytest.fixture(scope="module")
+def stream():
+    w = _workloads()
+    names = sorted(w)
+    measurable = [n for n in names if not w[n].fs_write]
+    commits, drift = synthetic_stream(
+        names, StreamConfig(n_commits=12, touched_lo=2, touched_hi=5,
+                            drift_length=6, drift_per_commit_pct=2.0,
+                            seed=11),
+        effectable=measurable, drift_candidates=measurable[:6])
+    return w, commits, drift
+
+
+def _run(stream, mode, **kw):
+    w, commits, _ = stream
+    cfg = PipelineConfig(mode=mode, parallelism=50, max_staleness=3,
+                         seed=2, **kw)
+    pipe = Pipeline(SyntheticSuite(dict(w)), cfg)
+    return pipe, pipe.run_stream(commits)
+
+
+@pytest.fixture(scope="module")
+def reports(stream):
+    out = {}
+    for mode in ("full", "selective", "selective_cached"):
+        out[mode] = _run(stream, mode)
+    return out
+
+
+def test_selection_and_caching_cut_invocations_and_cost(reports):
+    full = reports["full"][1]
+    sel = reports["selective"][1]
+    cached = reports["selective_cached"][1]
+    assert sel.total_invocations < 0.7 * full.total_invocations
+    assert cached.total_invocations <= sel.total_invocations
+    assert cached.total_invocations < 0.7 * full.total_invocations
+    assert cached.total_cost < 0.7 * full.total_cost
+    assert cached.cache_hits > 0
+
+
+def test_selective_never_flags_unchanged_benchmarks(stream, reports):
+    """Golden: a benchmark whose fingerprint did not change can only be
+    touched by an A/A revalidation — selective runs must never report a
+    change for it, matching full-suite ground truth by construction."""
+    _, commits, _ = stream
+    by_id = {c.commit_id: c for c in commits}
+    for mode in ("selective", "selective_cached"):
+        for run in reports[mode][1].commits:
+            commit = by_id[run.commit_id]
+            assert set(run.flagged) <= set(commit.touched)
+            assert not (set(run.flagged) & set(run.skipped))
+
+
+def test_selective_agrees_with_full_on_changed_benchmarks(stream, reports):
+    """On fingerprint-changed benchmarks (the ones selective measures too)
+    the detection sets of full and selective runs stay within a couple of
+    benchmarks of each other per commit."""
+    _, commits, _ = stream
+    by_id = {c.commit_id: c for c in commits}
+    full_runs = {r.commit_id: r for r in reports["full"][1].commits}
+    for run in reports["selective_cached"][1].commits:
+        touched = set(by_id[run.commit_id].touched)
+        f = set(full_runs[run.commit_id].flagged) & touched
+        s = set(run.flagged) & touched
+        assert len(f ^ s) <= 2
+
+
+def test_pipeline_history_is_deterministic(stream):
+    """Golden: two identical runs produce bit-identical history records."""
+    pipe_a, _ = _run(stream, "selective_cached")
+    pipe_b, _ = _run(stream, "selective_cached")
+    a = [asdict(r) for r in pipe_a.history.records()]
+    b = [asdict(r) for r in pipe_b.history.records()]
+    assert a == b
+
+
+def test_detector_finds_the_drift_over_history(stream, reports):
+    _, _, drift = stream
+    for mode in ("full", "selective_cached"):
+        rep = reports[mode][1]
+        ev = [e for e in rep.events if e.benchmark == drift.benchmark]
+        assert ev, f"drift not detected in {mode}"
+        e = ev[0]
+        # window overlaps the true drift and carries most of its magnitude
+        assert e.start_index <= drift.end and e.end_index >= drift.start
+        assert e.direction == 1
+        assert e.cumulative_pct >= 0.5 * drift.total_pct
+
+
+def test_failing_benchmark_is_never_flagged(stream, reports):
+    w, _, _ = stream
+    failing = next(n for n, wl in w.items() if wl.fs_write)
+    for mode, (_, rep) in reports.items():
+        for run in rep.commits:
+            assert failing not in run.flagged
+
+
+def test_adaptive_mode_reduces_invocations(stream):
+    _, fixed = _run(stream, "selective")
+    _, adap = _run(stream, "selective", adaptive=True)
+    assert adap.total_invocations < fixed.total_invocations
+
+
+def test_history_and_cache_persist_across_pipeline_runs(stream, tmp_path):
+    from repro.cb import HistoryStore, ResultCache
+    w, commits, _ = stream
+    hpath = str(tmp_path / "history.jsonl")
+    cpath = str(tmp_path / "cache.jsonl")
+    cfg = PipelineConfig(mode="selective_cached", parallelism=50,
+                         max_staleness=3, seed=2)
+    rep1 = Pipeline(SyntheticSuite(dict(w)), cfg,
+                    history=HistoryStore(hpath),
+                    cache=ResultCache(cpath)).run_stream(commits)
+    # a second run over the same stream starts from the persisted cache:
+    # every previously measured fingerprint pair is now a hit
+    rep2 = Pipeline(SyntheticSuite(dict(w)), cfg,
+                    history=HistoryStore(hpath),
+                    cache=ResultCache(cpath)).run_stream(commits)
+    assert rep2.total_invocations < rep1.total_invocations
+    assert rep2.cache_hits > rep1.cache_hits
+    # one record per benchmark per commit (incl. baseline), for both runs
+    assert len(HistoryStore(hpath)) == 2 * 12 * N
+
+
+def test_cli_smoke(tmp_path, capsys):
+    hpath = str(tmp_path / "history.jsonl")
+    rc = cli_main(["--commits", "4", "--n-calls", "8", "--providers",
+                   "lambda", "--mode", "selective_cached", "--seed", "3",
+                   "--history", hpath,
+                   "--sqlite", str(tmp_path / "history.sqlite")])
+    assert rc == 0
+    out = capsys.readouterr().out.strip().splitlines()
+    summary = json.loads(out[0])
+    assert summary["mode"] == "selective_cached"
+    assert summary["invocations"] > 0
+    from repro.cb import HistoryStore
+    assert len(HistoryStore(hpath)) > 0
+    assert (tmp_path / "history.sqlite").exists()

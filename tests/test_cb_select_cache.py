@@ -1,0 +1,102 @@
+"""Fingerprint selection and the fingerprint-keyed result cache."""
+import json
+
+from repro.cb.cache import SCHEMA_VERSION, ResultCache, config_digest
+from repro.cb.commits import Commit
+from repro.cb.select import BenchmarkSelector, SelectorConfig
+from repro.core.stats import ChangeResult
+
+
+def _commit(index, fps):
+    return Commit(commit_id=f"c{index}", index=index,
+                  parent=None if index == 0 else f"c{index-1}",
+                  timestamp_s=0.0, fingerprints=dict(fps))
+
+
+# -------------------------------------------------------------- selection
+def test_changed_fingerprints_are_selected_unchanged_skip():
+    sel = BenchmarkSelector(SelectorConfig(max_staleness=100))
+    sel.observe_baseline(_commit(0, {"a": "1", "b": "1", "c": "1"}))
+    s = sel.select(_commit(1, {"a": "2", "b": "1", "c": "1"}))
+    assert s.run == ["a"]
+    assert s.revalidate == []
+    assert s.skipped == ["b", "c"]
+
+
+def test_stale_unchanged_benchmarks_get_revalidated():
+    sel = BenchmarkSelector(SelectorConfig(max_staleness=3))
+    sel.observe_baseline(_commit(0, {"a": "1", "b": "1"}))
+    for k in (1, 2):
+        s = sel.select(_commit(k, {"a": "1", "b": "1"}))
+        assert s.revalidate == [] and s.skipped == ["a", "b"]
+    s = sel.select(_commit(3, {"a": "1", "b": "1"}))
+    assert s.revalidate == ["a", "b"]          # 3 commits without a result
+    sel.mark_measured(["a"], 3)                # only a actually measured
+    s = sel.select(_commit(4, {"a": "1", "b": "1"}))
+    assert s.revalidate == ["b"]
+    assert s.skipped == ["a"]
+
+
+def test_select_all_mode_ignores_fingerprints():
+    sel = BenchmarkSelector(SelectorConfig(select_all=True))
+    sel.observe_baseline(_commit(0, {"a": "1", "b": "1"}))
+    s = sel.select(_commit(1, {"a": "1", "b": "2"}))
+    assert s.run == ["a", "b"]
+
+
+def test_a_change_resets_staleness():
+    sel = BenchmarkSelector(SelectorConfig(max_staleness=2))
+    sel.observe_baseline(_commit(0, {"a": "1"}))
+    s = sel.select(_commit(1, {"a": "2"}))
+    assert s.run == ["a"]
+    sel.mark_measured(["a"], 1)
+    s = sel.select(_commit(2, {"a": "2"}))
+    assert s.skipped == ["a"]
+
+
+# ------------------------------------------------------------------ cache
+def _change(name="a", n=20):
+    return ChangeResult(benchmark=name, n_pairs=n, median_diff_pct=5.0,
+                        ci_low=3.0, ci_high=7.0, changed=True, direction=1)
+
+
+def test_cache_roundtrip_and_counters(tmp_path):
+    cfg = config_digest(n_calls=15, provider="lambda")
+    cache = ResultCache(str(tmp_path / "cache.jsonl"))
+    assert cache.get("a", "f1", "f2", cfg) is None
+    cache.put("a", "f1", "f2", cfg, change=_change(), invocations=15,
+              billed_seconds=120.0, cost_dollars=0.01)
+    hit = cache.get("a", "f1", "f2", cfg)
+    assert hit is not None and hit.change_result() == _change()
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different config digest is a different measurement
+    assert cache.get("a", "f1", "f2", config_digest(n_calls=45)) is None
+
+
+def test_cache_persists_and_reloads(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    cfg = config_digest(x=1)
+    c1 = ResultCache(path)
+    c1.put("a", "f", "f", cfg, change=None, invocations=3,
+           billed_seconds=9.0, cost_dollars=0.001)
+    c1.put("b", "f1", "f2", cfg, change=_change("b"), invocations=15,
+           billed_seconds=80.0, cost_dollars=0.02)
+    c2 = ResultCache(path)
+    assert len(c2) == 2
+    assert c2.get("a", "f", "f", cfg).change is None       # negative entry
+    assert c2.get("b", "f1", "f2", cfg).change_result() == _change("b")
+
+
+def test_cache_skips_future_schema_and_torn_tail(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    cfg = config_digest(x=1)
+    c1 = ResultCache(path)
+    c1.put("a", "f1", "f2", cfg, change=_change(), invocations=1,
+           billed_seconds=1.0, cost_dollars=0.0)
+    with open(path, "a") as f:
+        f.write(json.dumps({"schema": SCHEMA_VERSION + 1,
+                            "benchmark": "x"}) + "\n")
+        f.write('{"schema": 1, "benchmark": "torn')     # crash mid-write
+    c2 = ResultCache(path)
+    assert len(c2) == 1
+    assert c2.skipped_schema == 1

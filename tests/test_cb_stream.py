@@ -1,0 +1,80 @@
+"""Commit-stream model: determinism, fingerprint/effect coupling, levels."""
+import numpy as np
+import pytest
+
+from repro.cb.commits import (Commit, DriftSpec, StreamConfig, code_digest,
+                              synthetic_stream)
+
+NAMES = [f"b{i:02d}" for i in range(16)]
+
+
+def _stream(seed=3, n=12, **kw):
+    cfg = StreamConfig(n_commits=n, touched_lo=2, touched_hi=6, seed=seed,
+                       **kw)
+    return synthetic_stream(NAMES, cfg)
+
+
+def test_stream_is_deterministic():
+    a, da = _stream()
+    b, db = _stream()
+    assert da == db
+    assert [c.fingerprints for c in a] == [c.fingerprints for c in b]
+    assert [c.step_effects for c in a] == [c.step_effects for c in b]
+    c, _ = _stream(seed=4)
+    assert [x.fingerprints for x in c] != [x.fingerprints for x in a]
+
+
+def test_fingerprint_changes_exactly_for_touched_benchmarks():
+    commits, _ = _stream()
+    for prev, cur in zip(commits, commits[1:]):
+        changed = {b for b in NAMES
+                   if cur.fingerprints[b] != prev.fingerprints[b]}
+        assert changed == set(cur.touched)
+        # an effect implies a code change
+        assert set(cur.step_effects) <= changed
+
+
+def test_levels_compound_step_effects():
+    commits, _ = _stream()
+    level = {b: 1.0 for b in NAMES}
+    for c in commits[1:]:
+        for b, e in c.step_effects.items():
+            level[b] *= 1.0 + e / 100.0
+        for b in NAMES:
+            assert c.level(b) == pytest.approx(level[b])
+            # parent_level undoes exactly this commit's step
+            assert c.parent_level(b) * (1 + c.step_effect(b) / 100.0) \
+                == pytest.approx(c.level(b))
+
+
+def test_drift_rides_inside_the_window_only():
+    commits, drift = _stream(n=14, drift_length=5, drift_per_commit_pct=2.0)
+    assert drift.length == 5
+    assert drift.total_pct == pytest.approx((1.02 ** 5 - 1) * 100)
+    for c in commits[1:]:
+        if c.index in drift.commits():
+            assert c.step_effects[drift.benchmark] == 2.0
+            assert drift.benchmark in c.touched
+        else:
+            assert drift.benchmark not in c.step_effects
+            assert drift.benchmark not in c.touched
+
+
+def test_short_stream_clamps_drift_window():
+    commits, drift = _stream(n=4)          # default drift_length >> 3
+    assert drift.start >= 1
+    assert drift.end <= 3
+    assert len(commits) == 4
+
+
+def test_effectable_restricts_true_effects():
+    cfg = StreamConfig(n_commits=10, seed=5, p_effect=1.0)
+    commits, _ = synthetic_stream(NAMES, cfg, effectable=NAMES[:4],
+                                  drift_candidates=NAMES[:4])
+    for c in commits[1:]:
+        assert set(c.step_effects) <= set(NAMES[:4])
+
+
+def test_code_digest_stable_and_order_sensitive():
+    assert code_digest("a", 1) == code_digest("a", 1)
+    assert code_digest("a", 1) != code_digest(1, "a")

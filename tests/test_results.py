@@ -5,6 +5,8 @@ import os
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core.duet import DuetPair
 from repro.core.results import (StreamingAnalyzer, analyze, append_pairs,
@@ -105,3 +107,31 @@ def test_streaming_unknown_benchmark():
     assert an.result("ghost") is None
     assert an.n_pairs("ghost") == 0
     assert an.analyze() == {}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=40))
+def test_streaming_equals_batch_on_random_pair_streams(seed, n_bench,
+                                                       n_pairs):
+    """Property: for ANY interleaved stream of duet pairs, feeding the
+    StreamingAnalyzer one pair at a time (with interim queries exercising
+    its cache) yields exactly the batch analyze() of the same stream."""
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for i in range(n_bench):
+        effect = float(rng.uniform(0.85, 1.25))
+        v1 = rng.lognormal(0.0, 0.05, n_pairs)
+        v2 = v1 * effect * rng.lognormal(0.0, 0.03, n_pairs)
+        pairs += [DuetPair(benchmark=f"b{i}", v1_seconds=float(a),
+                           v2_seconds=float(b))
+                  for a, b in zip(v1, v2)]
+    order = rng.permutation(len(pairs))
+    stream = [pairs[int(j)] for j in order]
+    an = StreamingAnalyzer(seed=seed % 997, min_results=5)
+    for k, p in enumerate(stream):
+        an.add_pair(p)
+        if k % 5 == 0:
+            an.result(p.benchmark)                 # interim query + cache
+    assert an.analyze() == analyze(stream, seed=seed % 997, min_results=5)
