@@ -21,9 +21,10 @@ flagged, otherwise a *step*.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import List, Optional
+
+import numpy as np
 
 from repro.cb.history import HistoryRecord, HistoryStore
 
@@ -86,41 +87,58 @@ class RegressionDetector:
                     points: List[SeriesPoint]) -> Optional[RegressionEvent]:
         """Best window of the series, if it clears the threshold.
 
-        O(n^2) over n commits — a 20-commit stream scans instantly; series
-        from long-lived repos should be windowed by the caller."""
+        Vectorized over all O(n^2) windows at once: row i of the shifted
+        matrices holds the windows starting at commit i, cumulative sums
+        along the row give every window's mass and variance, and the
+        winner is the first row-major window attaining the maximum |z| —
+        exactly what the former nested-loop scan selected (cumulative sums
+        accumulate in the same order, so the floats match bit-for-bit).
+        O(n^2) memory over n commits — a 20-commit stream scans in a few
+        hundred microseconds; series from long-lived repos should be
+        windowed by the caller."""
         cfg = self.cfg
         pts = sorted(points, key=lambda p: p.commit_index)
-        best: Optional[RegressionEvent] = None
-        best_z = 0.0
-        for i in range(len(pts)):
-            if pts[i].se <= 0.0:
-                continue        # windows start at a measured change
-            s = 0.0
-            var = 0.0
-            for j in range(i, len(pts)):
-                s += pts[j].median
-                var += pts[j].se ** 2
-                if pts[j].se <= 0.0 or var <= cfg.max_se_floor:
-                    continue    # ... and end at one (auto-trimmed windows)
-                z = s / math.sqrt(var)
-                if (abs(z) >= cfg.z_threshold
-                        and abs(s) >= cfg.min_cumulative_pct
-                        and abs(z) > best_z):
-                    window = pts[i:j + 1]
-                    # a window is a *step* if individually-flagged commits
-                    # already explain most of its mass; otherwise the change
-                    # only exists in aggregate — a drift
-                    flagged_mass = sum(p.median for p in window if p.flagged)
-                    kind = ("step" if abs(flagged_mass) >= 0.5 * abs(s)
-                            else "drift")
-                    best_z = abs(z)
-                    best = RegressionEvent(
-                        benchmark=benchmark,
-                        start_index=pts[i].commit_index,
-                        end_index=pts[j].commit_index,
-                        cumulative_pct=s, score=abs(z), kind=kind,
-                        direction=1 if s > 0 else -1)
-        return best
+        m = len(pts)
+        if m == 0:
+            return None
+        med = np.array([p.median for p in pts])
+        se = np.array([p.se for p in pts])
+        # shifted layout: row i, column t -> commit i+t (0.0 past the end,
+        # which leaves the running sums unchanged, like the loop stopping)
+        ii = np.arange(m)[:, None] + np.arange(m)[None, :]
+        pad = np.concatenate([med, np.zeros(m)])
+        s = np.cumsum(pad[ii], axis=1)
+        pad[:m] = se ** 2
+        var = np.cumsum(pad[ii], axis=1)
+        in_range = ii < m
+        jj = np.where(in_range, ii, m - 1)
+        # windows start at a measured change, end at one, and need more
+        # than the variance floor (auto-trimmed windows)
+        valid = (in_range & (se[:, None] > 0.0) & (se[jj] > 0.0)
+                 & (var > cfg.max_se_floor))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            absz = np.abs(s) / np.sqrt(var)
+        absz[~valid | (absz < cfg.z_threshold)
+             | (np.abs(s) < cfg.min_cumulative_pct)] = -np.inf
+        flat = np.argmax(absz)          # first row-major occurrence of max
+        best_z = absz.ravel()[flat]
+        if not np.isfinite(best_z):
+            return None
+        i, t = divmod(int(flat), m)
+        j = i + t
+        s_best = float(s[i, t])
+        window = pts[i:j + 1]
+        # a window is a *step* if individually-flagged commits already
+        # explain most of its mass; otherwise the change only exists in
+        # aggregate — a drift
+        flagged_mass = sum(p.median for p in window if p.flagged)
+        kind = "step" if abs(flagged_mass) >= 0.5 * abs(s_best) else "drift"
+        return RegressionEvent(
+            benchmark=benchmark,
+            start_index=pts[i].commit_index,
+            end_index=pts[j].commit_index,
+            cumulative_pct=s_best, score=float(best_z), kind=kind,
+            direction=1 if s_best > 0 else -1)
 
     def scan(self, history: HistoryStore, *, provider: Optional[str] = None,
              mode: Optional[str] = None) -> List[RegressionEvent]:

@@ -191,6 +191,12 @@ class AdaptiveController(EngineObserver):
         cfg = self.cfg
         out: List[Invocation] = []
         ready, self._ready = self._ready, []
+        # one vectorized bootstrap pass warms the analyzer cache for every
+        # dirty candidate; the per-benchmark `_decided` checks below then
+        # hit the cache instead of re-bootstrapping one at a time
+        self._analyzer.results([b for b in ready
+                                if b not in self._stopped
+                                and b not in self._gave_up])
         for b in ready:
             if b in self._stopped or b in self._gave_up:
                 continue

@@ -6,25 +6,28 @@ analysis (core/stats) reads pair-aligned v1/v2 timings per benchmark.
 
 Two analysis paths share the same statistics:
 
-  * `analyze(pairs)` — batch: one pass over a finished result set.
-  * `StreamingAnalyzer` — incremental: pairs are added as the engine emits
-    them and per-benchmark `ChangeResult`s are recomputed on demand (with
-    caching), which is what the adaptive controller's CI-width stopping
-    rule consumes.  On the same pairs and parameters the two paths produce
-    identical results.
+  * `analyze(pairs)` — batch: one pass over a finished result set, all
+    benchmarks bootstrapped together through `stats.detect_changes_batch`.
+  * `StreamingAnalyzer` — incremental: pairs land in growable NumPy
+    buffers and a dirty-set records which benchmarks received new pairs;
+    `analyze()` re-bootstraps only the dirty ones, in one batched call.
+    This is what the adaptive controller's CI-width stopping rule
+    consumes.  On the same pairs and parameters the two paths produce
+    identical results (bit-for-bit, including the bootstrap CIs).
 """
 from __future__ import annotations
 
 import json
 import os
 from dataclasses import asdict
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.duet import DuetPair
 from repro.core.stats import (ChangeResult, DEFAULT_BOOTSTRAP,
-                              DEFAULT_CONFIDENCE, detect_change)
+                              DEFAULT_CONFIDENCE, detect_change,
+                              detect_changes_batch)
 
 
 def append_pairs(path: str, pairs: Iterable[DuetPair]):
@@ -84,29 +87,60 @@ def load_pairs(path: str) -> List[DuetPair]:
 def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE,
             n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
             min_results: int = 10) -> Dict[str, ChangeResult]:
-    """Per-benchmark change detection over pair-aligned duet results."""
+    """Per-benchmark change detection over pair-aligned duet results.
+
+    One `detect_changes_batch` call bootstraps the whole suite; identical
+    to a per-benchmark `detect_change` loop, several times faster."""
+    pairs = pairs if isinstance(pairs, list) else list(pairs)
+    v1 = np.array([p.v1_seconds for p in pairs])
+    v2 = np.array([p.v2_seconds for p in pairs])
     grouped: Dict[str, list] = {}
-    for p in pairs:
-        grouped.setdefault(p.benchmark, []).append(p)
-    out: Dict[str, ChangeResult] = {}
-    for name, ps in grouped.items():
-        v1 = np.array([p.v1_seconds for p in ps])
-        v2 = np.array([p.v2_seconds for p in ps])
-        res = detect_change(name, v1, v2, confidence=confidence,
-                            n_boot=n_boot, seed=seed, min_results=min_results)
-        if res is not None:
-            out[name] = res
-    return out
+    for i, p in enumerate(pairs):
+        g = grouped.get(p.benchmark)
+        if g is None:
+            g = grouped[p.benchmark] = []
+        g.append(i)
+    return detect_changes_batch(
+        ((name, v1[ix], v2[ix])
+         for name, ix in grouped.items()),
+        confidence=confidence, n_boot=n_boot, seed=seed,
+        min_results=min_results)
+
+
+class _PairBuffer:
+    """Growable pair-aligned v1/v2 timing arrays (amortized doubling), so
+    the streaming path never rebuilds Python lists into fresh ndarrays."""
+
+    __slots__ = ("v1", "v2", "n")
+
+    def __init__(self, capacity: int = 32):
+        self.v1 = np.empty(capacity)
+        self.v2 = np.empty(capacity)
+        self.n = 0
+
+    def append(self, a: float, b: float) -> None:
+        if self.n == len(self.v1):
+            self.v1 = np.concatenate([self.v1, np.empty(len(self.v1))])
+            self.v2 = np.concatenate([self.v2, np.empty(len(self.v2))])
+        self.v1[self.n] = a
+        self.v2[self.n] = b
+        self.n += 1
+
+    def views(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.v1[:self.n], self.v2[:self.n]
 
 
 class StreamingAnalyzer:
     """Incremental per-benchmark change detection.
 
-    Accumulates pair-aligned v1/v2 timings as they arrive and lazily
-    recomputes each benchmark's `ChangeResult`; the bootstrap is only
-    re-run when that benchmark has received new pairs since the last
-    query.  `analyze()` over everything added so far is equivalent to the
-    batch `analyze()` on the same pairs (same confidence/n_boot/seed)."""
+    Pair-aligned v1/v2 timings accumulate in growable NumPy buffers; a
+    dirty-set records which benchmarks have received pairs since their
+    last `ChangeResult` was computed.  `result()` re-bootstraps one dirty
+    benchmark; `analyze()` (and `results()`) re-bootstrap *all* dirty
+    benchmarks in a single `stats.detect_changes_batch` call and serve the
+    rest from cache.  `analyze()` over everything added so far is
+    bit-for-bit the batch `analyze()` on the same pairs (same
+    confidence/n_boot/seed)."""
 
     def __init__(self, *, confidence: float = DEFAULT_CONFIDENCE,
                  n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
@@ -115,26 +149,27 @@ class StreamingAnalyzer:
         self.n_boot = n_boot
         self.seed = seed
         self.min_results = min_results
-        self._v1: Dict[str, List[float]] = {}
-        self._v2: Dict[str, List[float]] = {}
+        self._buf: Dict[str, _PairBuffer] = {}
         self._order: List[str] = []           # insertion order, like analyze()
-        self._cache: Dict[str, Tuple[int, Optional[ChangeResult]]] = {}
+        self._dirty: set = set()
+        self._cache: Dict[str, Optional[ChangeResult]] = {}
 
     def add_pair(self, pair: DuetPair) -> None:
         name = pair.benchmark
-        if name not in self._v1:
-            self._v1[name] = []
-            self._v2[name] = []
+        buf = self._buf.get(name)
+        if buf is None:
+            buf = self._buf[name] = _PairBuffer()
             self._order.append(name)
-        self._v1[name].append(pair.v1_seconds)
-        self._v2[name].append(pair.v2_seconds)
+        buf.append(pair.v1_seconds, pair.v2_seconds)
+        self._dirty.add(name)
 
     def add_pairs(self, pairs: Iterable[DuetPair]) -> None:
         for p in pairs:
             self.add_pair(p)
 
     def n_pairs(self, benchmark: str) -> int:
-        return len(self._v1.get(benchmark, ()))
+        buf = self._buf.get(benchmark)
+        return 0 if buf is None else buf.n
 
     @property
     def benchmarks(self) -> List[str]:
@@ -143,24 +178,35 @@ class StreamingAnalyzer:
     def result(self, benchmark: str) -> Optional[ChangeResult]:
         """ChangeResult over the pairs seen so far (None below min_results);
         cached until new pairs for this benchmark arrive."""
-        n = self.n_pairs(benchmark)
-        cached = self._cache.get(benchmark)
-        if cached is not None and cached[0] == n:
-            return cached[1]
-        if n == 0:
+        buf = self._buf.get(benchmark)
+        if buf is None:
             return None
-        res = detect_change(benchmark, np.array(self._v1[benchmark]),
-                            np.array(self._v2[benchmark]),
+        if benchmark not in self._dirty:
+            return self._cache.get(benchmark)
+        v1, v2 = buf.views()
+        res = detect_change(benchmark, v1, v2,
                             confidence=self.confidence, n_boot=self.n_boot,
                             seed=self.seed, min_results=self.min_results)
-        self._cache[benchmark] = (n, res)
+        self._cache[benchmark] = res
+        self._dirty.discard(benchmark)
         return res
+
+    def results(self, benchmarks: Sequence[str]) -> Dict[str,
+                                                         Optional[ChangeResult]]:
+        """Current `ChangeResult` (or None) per requested benchmark; all
+        dirty ones among them are re-bootstrapped in one batched call."""
+        todo = [b for b in benchmarks if b in self._dirty and b in self._buf]
+        if todo:
+            fresh = detect_changes_batch(
+                ((b,) + self._buf[b].views() for b in todo),
+                confidence=self.confidence, n_boot=self.n_boot,
+                seed=self.seed, min_results=self.min_results)
+            for b in todo:
+                self._cache[b] = fresh.get(b)
+                self._dirty.discard(b)
+        return {b: self._cache.get(b) for b in benchmarks}
 
     def analyze(self) -> Dict[str, ChangeResult]:
         """Batch-equivalent view of everything streamed so far."""
-        out: Dict[str, ChangeResult] = {}
-        for name in self._order:
-            res = self.result(name)
-            if res is not None:
-                out[name] = res
-        return out
+        res = self.results(self._order)
+        return {name: r for name, r in res.items() if r is not None}

@@ -168,14 +168,31 @@ class SimFaaSBackend:
         if wl.fs_write:
             return InvocationOutcome([], dur + 0.1, ok=False,
                                      benchmark_failure=True)
+        # batched noise: the whole invocation's lognormal draws in one RNG
+        # call instead of one Python-level call per timing.  Filling an
+        # array consumes the bit stream exactly like repeated scalar draws,
+        # so the simulation replays the historical per-draw stream
+        # bit-for-bit; on an early break (timeout) the state is rewound and
+        # re-advanced by only the draws the scalar path would have used.
+        # Unstable workloads interleave uniform draws per timing and keep
+        # the scalar path.
+        batched = not wl.unstable_pct
+        if batched:
+            state = rng.bit_generator.state
+            noise_vec = rng.lognormal(0.0, wl.run_sigma,
+                                      size=2 * len(inv.version_order))
+        used = 0
         ok = True
         timed_out = False
         out_pairs: List[DuetPair] = []
         for order in inv.version_order:
             res = {}
             for ver in order:
-                noise = float(rng.lognormal(0.0, wl.run_sigma))
-                if wl.unstable_pct:
+                if batched:
+                    noise = float(noise_vec[used])
+                    used += 1
+                else:
+                    noise = float(rng.lognormal(0.0, wl.run_sigma))
                     noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
                                                      wl.unstable_pct)) / 100.0
                 secs = (wl.true_seconds(ver) * noise * instance.speed
@@ -194,6 +211,12 @@ class SimFaaSBackend:
                 benchmark=wl.name, v1_seconds=res["v1"],
                 v2_seconds=res["v2"], instance_id=instance.iid,
                 call_index=inv.call_index, cold_start=cold))
+        if batched and used < len(noise_vec):
+            # early break: rewind and consume exactly what the historical
+            # scalar path would have, keeping later invocations aligned
+            rng.bit_generator.state = state
+            if used:
+                rng.lognormal(0.0, wl.run_sigma, size=used)
         return InvocationOutcome(out_pairs, dur, ok=ok, timed_out=timed_out)
 
     def finalize(self, billed_seconds: List[float],
@@ -273,13 +296,23 @@ class VMBackend:
         rng = self._rng
         wl = self.workloads[inv.benchmark]
         dur = c.trial_overhead_s
+        # one batched draw per invocation (stream-identical to the scalar
+        # per-timing draws; no early exits here, so no rewind needed)
+        batched = not wl.unstable_pct
+        if batched:
+            noise_vec = rng.lognormal(0.0, wl.run_sigma * c.run_sigma_scale,
+                                      size=2 * len(inv.version_order))
+        used = 0
         out_pairs: List[DuetPair] = []
         for order in inv.version_order:
             res = {}
             for ver in order:
-                noise = float(rng.lognormal(0.0, wl.run_sigma
-                                            * c.run_sigma_scale))
-                if wl.unstable_pct:
+                if batched:
+                    noise = float(noise_vec[used])
+                    used += 1
+                else:
+                    noise = float(rng.lognormal(0.0, wl.run_sigma
+                                                * c.run_sigma_scale))
                     noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
                                                      wl.unstable_pct)) / 100.0
                 drift = 1.0 + c.diurnal_amplitude * math.sin(

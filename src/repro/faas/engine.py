@@ -207,8 +207,24 @@ class ExecutionEngine:
         # used to have.
         slots: List[Tuple[float, int]] = [(0.0, i)
                                           for i in range(cfg.parallelism)]
-        warm: List[Tuple[float, Instance]] = []   # (idle_since, inst) FIFO
+        # Warm pool as two heaps instead of the historical list that was
+        # rebuilt (O(pool)) on every acquire.  The historical pick was
+        # "first entry in append order that is idle and unexpired", i.e.
+        # the idle, unexpired entry with the smallest append sequence
+        # number — so `warm_ready` is a min-heap on seq of entries already
+        # idle, `warm_busy` a min-heap on idle_since of entries whose
+        # instance is still running.  Dispatch times are non-decreasing,
+        # which makes both the busy->ready promotion and the lazy expiry
+        # drop exact: O(log pool) per acquire, same picks as the seed.
+        warm_busy: List[Tuple[float, int, Instance]] = []   # (idle_since,..)
+        warm_ready: List[Tuple[int, float, Instance]] = []  # (seq,..)
+        warm_seq = 0
         pinned: Dict[int, Instance] = {}          # slot -> fixed instance
+
+        def release(inst: Instance, idle_since: float):
+            nonlocal warm_seq
+            heapq.heappush(warm_busy, (idle_since, warm_seq, inst))
+            warm_seq += 1
 
         def acquire(inv: Invocation, slot: int, t: float):
             """Warm-pool reuse (elastic platforms) or slot-pinned instances
@@ -221,13 +237,14 @@ class ExecutionEngine:
                     pinned[slot] = inst
                 return inst, 0.0
             keep = be.keep_alive_s
-            # reap instances idle beyond keep-alive; entries whose idle time
-            # lies in the future belong to still-busy instances
-            warm[:] = [w for w in warm if t - w[0] <= keep or w[0] > t]
-            for j, (idle_since, inst) in enumerate(warm):
-                if idle_since <= t:
-                    warm.pop(j)
-                    return inst, 0.0
+            while warm_busy and warm_busy[0][0] <= t:
+                idle_since, seq, inst = heapq.heappop(warm_busy)
+                heapq.heappush(warm_ready, (seq, idle_since, inst))
+            while warm_ready:
+                _, idle_since, inst = heapq.heappop(warm_ready)
+                if t - idle_since > keep:
+                    continue                      # reaped (stays expired)
+                return inst, 0.0
             inst, overhead = be.spawn_instance(inv, t, slot)
             cold_starts += 1
             return inst, overhead
@@ -239,7 +256,7 @@ class ExecutionEngine:
             t_end = t + out.duration_s
             heapq.heappush(slots, (t_end, slot))
             if not be.pinned:
-                warm.append((t_end, inst))
+                release(inst, t_end)
             return CompletedInvocation(inv, out, t, t_end, attempt, inst)
 
         # completed invocations are delivered to the observer in virtual
@@ -389,6 +406,10 @@ class ExecutionEngine:
                         skipped += 1
                         continue
                     f = pool.submit(attempt, inv, cfg.max_retries)
+                    # straggler clock starts at submit: hedging used to
+                    # stamp this when the future was first *seen* pending,
+                    # deferring every hedge by up to one wait cycle
+                    f._repro_t0 = time.monotonic()
                     futs[f] = i
                     outstanding[i] = outstanding.get(i, 0) + 1
                     pending.add(f)
@@ -458,13 +479,12 @@ class ExecutionEngine:
                 if threshold is not None:
                     for f in list(pending):
                         idx = futs[f]
-                        if getattr(f, "_repro_t0", None) is None:
-                            f._repro_t0 = now    # first seen pending
-                        elif (now - f._repro_t0 > threshold
-                              and not getattr(f, "_repro_hedged", False)):
+                        if (now - f._repro_t0 > threshold
+                                and not getattr(f, "_repro_hedged", False)):
                             f._repro_hedged = True
                             hedged += 1
                             nf = pool.submit(attempt, invocations[idx], 0)
+                            nf._repro_t0 = time.monotonic()
                             futs[nf] = idx
                             outstanding[idx] = outstanding.get(idx, 0) + 1
                             pending.add(nf)

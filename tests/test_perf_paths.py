@@ -1,0 +1,191 @@
+"""Simulator hot paths: batched RNG draws replay the historical per-draw
+stream bit-for-bit (including timeout rewinds), plan construction replays
+`rng.sample`, the heap warm pool stays deterministic, and the realtime
+straggler-hedge clock starts at submit time."""
+import math
+import random
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmit
+from repro.core.duet import DuetPair, DuetRunnable
+from repro.core.rmit import Invocation, SuitePlan
+from repro.faas.backends import (LocalDuetBackend, PROVIDER_PROFILES,
+                                 ProviderProfile, SimFaaSBackend, VMBackend)
+from repro.faas.engine import EngineConfig, ExecutionEngine, InvocationOutcome
+from repro.faas.platform import SimWorkload
+
+
+# ----------------------------------------------------- rmit stream parity
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=8))
+def test_plan_version_orders_replay_rng_sample(seed, n_bench, n_calls):
+    """The inlined `_randbelow` duet-order draw must consume random.Random
+    exactly like the historical ``rng.sample(("v1","v2"), 2)`` — this is
+    what keeps every seeded plan (and thus every golden simulation)
+    replaying bit-for-bit.  If a CPython release ever changes `sample`'s
+    small-population algorithm, this property catches it."""
+    benchmarks = [f"b{i}" for i in range(n_bench)]
+
+    def reference_plan():
+        rng = random.Random(seed)
+        inv = []
+        for b in benchmarks:
+            for c in range(n_calls):
+                order = tuple(tuple(rng.sample(("v1", "v2"), 2))
+                              for _ in range(3))
+                inv.append(Invocation(benchmark=b, call_index=c, repeats=3,
+                                      version_order=order, timeout_s=20.0))
+        rng.shuffle(inv)
+        return SuitePlan(invocations=tuple(inv), n_calls=n_calls,
+                         repeats_per_call=3)
+
+    assert rmit.make_plan(benchmarks, n_calls=n_calls, repeats_per_call=3,
+                          seed=seed) == reference_plan()
+
+
+# ------------------------------------------------ batched simulator draws
+def _seed_simulate(be, inv, instance, t, overhead_s):
+    """Verbatim pre-batching SimFaaSBackend.simulate: one scalar RNG draw
+    per timing, stream consumed lazily (stops at a timeout)."""
+    p = be.profile
+    rng = be._rng
+    wl = be.workloads[inv.benchmark]
+    dur = overhead_s
+    cold = overhead_s > 0
+    if p.failure_rate > 0.0 and float(rng.random()) < p.failure_rate:
+        return InvocationOutcome([], dur + 0.05, ok=False,
+                                 platform_failure=True)
+    if wl.fs_write:
+        return InvocationOutcome([], dur + 0.1, ok=False,
+                                 benchmark_failure=True)
+    ok = True
+    timed_out = False
+    out_pairs = []
+    for order in inv.version_order:
+        res = {}
+        for ver in order:
+            noise = float(rng.lognormal(0.0, wl.run_sigma))
+            if wl.unstable_pct:
+                noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
+                                                 wl.unstable_pct)) / 100.0
+            secs = (wl.true_seconds(ver) * noise * instance.speed
+                    * be._diurnal(t + dur) / be.cpu_factor)
+            if secs > p.benchmark_timeout_s:
+                ok = False
+                timed_out = True
+                dur += p.benchmark_timeout_s
+                break
+            res[ver] = secs
+            dur += secs
+        if not ok or dur > p.function_timeout_s:
+            ok = ok and dur <= p.function_timeout_s
+            break
+        out_pairs.append(DuetPair(
+            benchmark=wl.name, v1_seconds=res["v1"], v2_seconds=res["v2"],
+            instance_id=instance.iid, call_index=inv.call_index,
+            cold_start=cold))
+    return InvocationOutcome(out_pairs, dur, ok=ok, timed_out=timed_out)
+
+
+def test_batched_draws_replay_scalar_stream_through_timeouts():
+    """Drive two identical backends invocation-by-invocation — one through
+    the batched-draw simulate, one through the seed scalar replica.  With
+    a workload that times out mid-invocation, the batched path must rewind
+    its RNG to exactly the draws the scalar path consumed, keeping every
+    later invocation identical."""
+    suite = {
+        "hot": SimWorkload(name="hot", base_seconds=14.0, effect_pct=5.0,
+                           run_sigma=0.35),           # frequent timeouts
+        "cool": SimWorkload(name="cool", base_seconds=0.5, effect_pct=0.0),
+        "wob": SimWorkload(name="wob", base_seconds=1.0, effect_pct=3.0,
+                           unstable_pct=6.0),         # scalar path
+    }
+    profile = ProviderProfile(name="flaky99", failure_rate=0.05, rng_tag=99)
+    a = SimFaaSBackend(suite, profile, seed=5)
+    b = SimFaaSBackend(suite, profile, seed=5)
+    a.begin_run(4)
+    b.begin_run(4)
+    plan = rmit.make_plan(sorted(suite), n_calls=40, repeats_per_call=3,
+                          seed=2)
+    timeouts = 0
+    for i, inv in enumerate(plan.invocations):
+        inst_a, ov_a = a.spawn_instance(inv, float(i), 0)
+        inst_b, ov_b = b.spawn_instance(inv, float(i), 0)
+        assert (inst_a.speed, ov_a) == (inst_b.speed, ov_b)
+        out_a = a.simulate(inv, inst_a, float(i), ov_a)
+        out_b = _seed_simulate(b, inv, inst_b, float(i), ov_b)
+        assert out_a == out_b
+        timeouts += out_a.timed_out
+    assert timeouts > 0          # the rewind path was actually exercised
+
+
+def test_vm_batched_draws_replay_scalar_stream():
+    suite = {"x": SimWorkload(name="x", base_seconds=1.0, effect_pct=4.0),
+             "u": SimWorkload(name="u", base_seconds=1.0, effect_pct=2.0,
+                              unstable_pct=5.0)}
+    plan = rmit.make_plan(sorted(suite), n_calls=10, repeats_per_call=2,
+                          seed=3)
+    backend = VMBackend(suite, seed=4)
+    rep1 = ExecutionEngine(backend, EngineConfig(
+        parallelism=backend.cfg.n_vms)).run(plan)
+    rep2 = ExecutionEngine(VMBackend(suite, seed=4), EngineConfig(
+        parallelism=backend.cfg.n_vms)).run(plan)
+    assert [(p.v1_seconds, p.v2_seconds) for p in rep1.pairs] == \
+           [(p.v1_seconds, p.v2_seconds) for p in rep2.pairs]
+
+
+# -------------------------------------------------------- heap warm pool
+def test_warm_pool_reuses_and_reaps_deterministically():
+    suite = {f"b{i}": SimWorkload(name=f"b{i}", base_seconds=0.4 + 0.2 * i,
+                                  effect_pct=0.0, setup_seconds=1.0)
+             for i in range(5)}
+    plan = rmit.make_plan(sorted(suite), n_calls=8, seed=1)
+    short = ProviderProfile(name="short", keep_alive_s=5.0, rng_tag=77)
+    reps = [ExecutionEngine(SimFaaSBackend(suite, short, seed=2),
+                            EngineConfig(parallelism=3)).run(plan)
+            for _ in range(2)]
+    assert reps[0].cold_starts == reps[1].cold_starts
+    assert reps[0].wall_seconds == reps[1].wall_seconds
+    # the pool reuses warm instances (fewer cold starts than invocations)
+    # but the 5 s keep-alive forces periodic re-provisioning
+    assert 3 <= reps[0].cold_starts < len(plan.invocations)
+
+
+# --------------------------------------------------- hedge clock at submit
+def test_realtime_hedge_clock_starts_at_submit():
+    """A straggler submitted in a later wave used to get its hedge clock
+    stamped only when first *seen* pending — up to one 0.5 s wait cycle
+    after submit — so short stragglers finished before ever being hedged.
+    With the clock at submit time, this straggler is hedged on the first
+    wake after the threshold."""
+    def fast():
+        time.sleep(0.01)
+        return 0.01
+
+    def straggle():
+        time.sleep(0.85)
+        return 0.85
+
+    duets = {"fast": DuetRunnable("fast", fast, fast),
+             "slow": DuetRunnable("slow", straggle, straggle)}
+    # 4 fast invocations fill the pool (parallelism 4); the straggler
+    # lands in wave 2, right after the fast ones complete
+    inv = [Invocation(benchmark="fast", call_index=c, repeats=1,
+                      version_order=(("v1", "v2"),), timeout_s=20.0)
+           for c in range(4)]
+    inv.append(Invocation(benchmark="slow", call_index=0, repeats=1,
+                          version_order=(("v1", "v2"),), timeout_s=20.0))
+    plan = SuitePlan(invocations=tuple(inv), n_calls=1, repeats_per_call=1)
+    backend = LocalDuetBackend(duets, benchmark_timeout_s=30.0)
+    cfg = EngineConfig(parallelism=4, hedge_after_factor=3.0,
+                       hedge_min_samples=4, hedge_min_s=0.1)
+    rep = ExecutionEngine(backend, cfg).run(plan)
+    assert rep.hedged >= 1
+    assert rep.invocations_done == 5
+    assert len(rep.pairs) == 5       # hedge twin never double-counted
