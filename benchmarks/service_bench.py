@@ -1,0 +1,122 @@
+"""Benchmarking-as-a-service smoke harness — the service's perf
+trajectory point.
+
+Runs the `multi_tenant_throughput` scenario (N concurrent commit-stream
+tenants on one shared fleet) on all three provider profiles and records
+the service-level metrics:
+
+  * p95 job latency (virtual seconds)  — queueing + execution
+  * makespan (virtual seconds)         — last job completion
+  * billed cost (USD)                  — across all tenants
+  * Jain fairness                      — per-tenant billed-seconds share
+  * schedule digest                    — seed-reproducibility fingerprint
+
+All metrics are *virtual-time* quantities: they are pure functions of the
+seed, so runner speed cancels out entirely and the regression gate can
+compare values directly.  ``--check-baseline`` compares against the
+committed ``BENCH_service.json`` and exits non-zero when p95 latency,
+makespan, or cost regressed by more than the gate factor (2x), or when
+fairness collapsed below 0.8.
+
+Usage:
+    PYTHONPATH=src python benchmarks/service_bench.py [--tenants 8]
+        [--out BENCH_service.json] [--check-baseline BENCH_service.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+
+from repro.core.experiment import run_multi_tenant_experiment
+
+PROVIDERS = ("lambda", "gcf", "azure")
+GATE_FACTOR = 2.0
+MIN_FAIRNESS = 0.8
+
+
+def run_profile(n_tenants: int, seed: int) -> dict:
+    out = {}
+    for provider in PROVIDERS:
+        t0 = time.perf_counter()
+        r = run_multi_tenant_experiment(n_tenants, provider=provider,
+                                        seed=seed)
+        out[provider] = {
+            "tenants": r.n_tenants,
+            "jobs": r.jobs,
+            "p95_latency_s": round(r.p95_latency_s, 3),
+            "mean_latency_s": round(r.mean_latency_s, 3),
+            "makespan_s": round(r.makespan_s, 3),
+            "cost_usd": round(r.total_cost_usd, 6),
+            "fairness_jain": round(r.fairness, 4),
+            "invocations": r.total_invocations,
+            "cold_starts": r.cold_starts,
+            "digest": r.digest,
+            "harness_s": round(time.perf_counter() - t0, 2),
+        }
+    return out
+
+
+def check_baseline(current: dict, baseline_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)["providers"]
+    failures = []
+    for provider, cur in current.items():
+        base = baseline.get(provider)
+        if base is None:
+            continue
+        for metric in ("p95_latency_s", "makespan_s", "cost_usd"):
+            b, c = base[metric], cur[metric]
+            if b > 0 and c / b > GATE_FACTOR:
+                failures.append(
+                    f"{provider}.{metric}: {c} vs baseline {b} "
+                    f"(>{GATE_FACTOR}x)")
+        if cur["fairness_jain"] < MIN_FAIRNESS:
+            failures.append(f"{provider}.fairness_jain: "
+                            f"{cur['fairness_jain']} < {MIN_FAIRNESS}")
+    if failures:
+        print("service perf regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"service perf gate OK ({len(current)} providers, "
+          f"gate {GATE_FACTOR}x)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=34)
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--check-baseline", default=None, metavar="FILE")
+    args = ap.parse_args(argv)
+
+    providers = run_profile(args.tenants, args.seed)
+    doc = {
+        "schema": 1,
+        "scenario": "multi_tenant_throughput",
+        "tenants": args.tenants,
+        "seed": args.seed,
+        "python": platform.python_version(),
+        "providers": providers,
+    }
+    if args.out:
+        import os
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+    print(json.dumps(providers, indent=1, sort_keys=True))
+    if args.check_baseline:
+        return check_baseline(providers, args.check_baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

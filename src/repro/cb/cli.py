@@ -8,16 +8,114 @@ smoke job runs exactly this and uploads the history as a build artifact.
     PYTHONPATH=src python -m repro.cb.cli --commits 6 \
         --providers lambda,gcf,azure --mode selective_cached \
         --history out/history.jsonl --seed 1
+
+Service mode (benchmarking-as-a-service): `--jobs N` submits N concurrent
+tenant commit streams to one shared `BenchmarkService` per provider
+instead of running inline; `--deadline` / `--budget` route every
+commit-job through the deadline/cost planner, which picks the provider,
+memory, fleet size, and repeat plan — and **fails loudly** (exit code 2)
+when no candidate configuration is feasible:
+
+    PYTHONPATH=src python -m repro.cb.cli --commits 6 --jobs 8 \
+        --providers lambda --seed 1
+    PYTHONPATH=src python -m repro.cb.cli --commits 6 \
+        --deadline 900 --budget 0.25 --seed 1
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 from repro.cb.commits import StreamConfig, synthetic_stream
 from repro.cb.history import HistoryStore
 from repro.cb.pipeline import MODES, Pipeline, PipelineConfig
 from repro.cb.registry import SyntheticSuite, get_suite
+
+EXIT_INFEASIBLE = 2
+
+
+def _stream_for(args, suite, seed: int):
+    names = suite.benchmark_names()
+    eff = suite.measurable_names() if isinstance(suite, SyntheticSuite) \
+        else names
+    quiet = suite.quiet_names() if isinstance(suite, SyntheticSuite) \
+        else eff
+    return synthetic_stream(
+        names, StreamConfig(n_commits=args.commits, seed=seed),
+        effectable=eff, drift_candidates=quiet)
+
+
+def _run_service(args, history, providers, modes) -> int:
+    """--jobs/--deadline/--budget: the service path.  Returns exit code."""
+    from repro.service import (AdmissionError, BenchmarkService,
+                               DeadlineCostPlanner, PlannerConfig,
+                               ServiceConfig)
+    if args.suite == "kernels":
+        print("service mode needs a simulated suite (kernels run "
+              "realtime); drop --jobs/--deadline/--budget", file=sys.stderr)
+        return EXIT_INFEASIBLE
+    n_tenants = max(args.jobs, 1)
+    planned = args.deadline is not None or args.budget is not None
+    for provider in providers:
+        # the planner is constrained to the loop's provider so each
+        # summary line answers "what would this provider cost" instead of
+        # re-running one global choice once per listed provider
+        planner = DeadlineCostPlanner(PlannerConfig(
+            providers=(provider,), include_vm=False)) if planned else None
+        for mode in modes:
+            service = BenchmarkService(
+                ServiceConfig(parallelism=args.parallelism,
+                              seed=args.seed), planner=planner)
+            pipelines = []
+            try:
+                for t in range(n_tenants):
+                    seed = args.seed + 7919 * t
+                    tenant = f"tenant{t:02d}"
+                    suite = get_suite(args.suite)
+                    commits, drift = _stream_for(args, suite, seed)
+                    cfg = PipelineConfig(
+                        suite=args.suite, provider=provider, mode=mode,
+                        n_calls=args.n_calls,
+                        repeats_per_call=args.repeats,
+                        parallelism=args.parallelism, seed=seed,
+                        max_staleness=args.max_staleness)
+                    tenant_suite = get_suite(args.suite)
+                    # the shared history store is scanned per (suite,
+                    # provider, mode): tag the suite per tenant so the
+                    # regression detector never sums unrelated tenant
+                    # streams into one CUSUM series
+                    tenant_suite.name = f"{tenant_suite.name}@{tenant}"
+                    pipe = Pipeline(tenant_suite, cfg, history=history)
+                    pending = pipe.submit_stream(
+                        commits, service, tenant=tenant,
+                        deadline_s=args.deadline, budget_usd=args.budget)
+                    pipelines.append((pipe, pending))
+            except AdmissionError as exc:
+                print(f"infeasible: {exc}", file=sys.stderr)
+                return EXIT_INFEASIBLE
+            rep = service.run()
+            reports = [p.collect_service(pend) for p, pend in pipelines]
+            summary = {
+                "suite": args.suite, "provider": provider, "mode": mode,
+                "service": True, "tenants": n_tenants,
+                "jobs": len(rep.results),
+                "invocations": rep.total_invocations,
+                "cost_usd": round(rep.total_cost_usd, 4),
+                "makespan_min": round(rep.makespan_s / 60.0, 2),
+                "p95_latency_min": round(rep.p95_latency_s() / 60.0, 2),
+                "fairness_jain": round(rep.fairness, 3),
+                "cold_starts": rep.cold_starts,
+                "preempted": rep.preempted_jobs,
+                "flagged": sum(r.total_flagged for r in reports),
+                "digest": rep.digest(),
+            }
+            if planned and rep.results:
+                r0 = rep.results[0]
+                summary["planned_provider"] = r0.provider
+                summary["planned_memory_mb"] = r0.memory_mb
+            print(json.dumps(summary, sort_keys=True))
+    return 0
 
 
 def main(argv=None) -> int:
@@ -36,13 +134,25 @@ def main(argv=None) -> int:
     ap.add_argument("--adaptive", action="store_true",
                     help="CI-width early stopping inside each commit run")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--jobs", type=int, default=0, metavar="N",
+                    help="submit N concurrent tenant streams to the "
+                         "benchmarking service instead of running inline")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-commit-job virtual-time deadline (seconds); "
+                         "the planner picks the configuration; exit 2 "
+                         "when no feasible plan exists")
+    ap.add_argument("--budget", type=float, default=None, metavar="USD",
+                    help="per-commit-job billing budget; over-budget jobs "
+                         "are preempted; exit 2 when no feasible plan")
     ap.add_argument("--history", default=None,
                     help="history-store JSONL path (appended across runs)")
     ap.add_argument("--sqlite", default=None,
                     help="also export the history to this SQLite file")
     args = ap.parse_args(argv)
 
-    if args.suite == "kernels":
+    service_mode = args.jobs > 0 or args.deadline is not None \
+        or args.budget is not None
+    if args.suite == "kernels" and not service_mode:
         # the kernel suite registers on import of the benchmarks package
         # (repo root on sys.path, e.g. `python -m repro.cb.cli` from there)
         try:
@@ -51,51 +161,52 @@ def main(argv=None) -> int:
             ap.error(f"--suite kernels needs the repo root on sys.path "
                      f"(run from the repo checkout): {exc}")
         commits, drift = kernel_commits(), None
-    else:
-        suite = get_suite(args.suite)
-        names = suite.benchmark_names()
-        eff = suite.measurable_names() if isinstance(suite, SyntheticSuite) \
-            else names
-        quiet = suite.quiet_names() if isinstance(suite, SyntheticSuite) \
-            else eff
-        commits, drift = synthetic_stream(
-            names, StreamConfig(n_commits=args.commits, seed=args.seed),
-            effectable=eff, drift_candidates=quiet)
+    elif not service_mode:
+        commits, drift = _stream_for(args, get_suite(args.suite), args.seed)
     history = HistoryStore(args.history)
 
     modes = MODES if args.mode == "all" else (args.mode,)
     providers = (["local"] if args.suite == "kernels"
                  else args.providers.split(","))
-    for provider in providers:
-        for mode in modes:
-            cfg = PipelineConfig(
-                suite=args.suite, provider=provider, mode=mode,
-                n_calls=args.n_calls, repeats_per_call=args.repeats,
-                parallelism=args.parallelism, seed=args.seed,
-                max_staleness=args.max_staleness, adaptive=args.adaptive)
-            rep = Pipeline(get_suite(args.suite), cfg,
-                           history=history).run_stream(commits)
-            summary = {
-                "suite": args.suite, "provider": provider, "mode": mode,
-                "commits": len(rep.commits),
-                "invocations": rep.total_invocations,
-                "cost_usd": round(rep.total_cost, 4),
-                "wall_min": round(rep.total_wall_seconds / 60.0, 2),
-                "cache_hits": rep.cache_hits,
-                "flagged": rep.total_flagged,
-                "events": [str(e) for e in rep.events],
-            }
-            if drift is not None:
-                summary["drift_ground_truth"] = (
-                    f"{drift.benchmark} +{drift.total_pct:.1f}% over "
-                    f"commits {drift.start}..{drift.end}")
-            print(json.dumps(summary, sort_keys=True))
+
+    code = 0
+    if service_mode:
+        if args.adaptive:
+            ap.error("--adaptive is an inline-run feature; drop it in "
+                     "service mode")
+        code = _run_service(args, history, providers, modes)
+    else:
+        for provider in providers:
+            for mode in modes:
+                cfg = PipelineConfig(
+                    suite=args.suite, provider=provider, mode=mode,
+                    n_calls=args.n_calls, repeats_per_call=args.repeats,
+                    parallelism=args.parallelism, seed=args.seed,
+                    max_staleness=args.max_staleness,
+                    adaptive=args.adaptive)
+                rep = Pipeline(get_suite(args.suite), cfg,
+                               history=history).run_stream(commits)
+                summary = {
+                    "suite": args.suite, "provider": provider, "mode": mode,
+                    "commits": len(rep.commits),
+                    "invocations": rep.total_invocations,
+                    "cost_usd": round(rep.total_cost, 4),
+                    "wall_min": round(rep.total_wall_seconds / 60.0, 2),
+                    "cache_hits": rep.cache_hits,
+                    "flagged": rep.total_flagged,
+                    "events": [str(e) for e in rep.events],
+                }
+                if drift is not None:
+                    summary["drift_ground_truth"] = (
+                        f"{drift.benchmark} +{drift.total_pct:.1f}% over "
+                        f"commits {drift.start}..{drift.end}")
+                print(json.dumps(summary, sort_keys=True))
     if args.history:
         print(f"history: {len(history)} records -> {args.history}")
     if args.sqlite:
         history.to_sqlite(args.sqlite)
         print(f"sqlite export -> {args.sqlite}")
-    return 0
+    return code
 
 
 if __name__ == "__main__":

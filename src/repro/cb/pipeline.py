@@ -35,7 +35,7 @@ from repro.cb.commits import Commit
 from repro.cb.detect import DetectorConfig, RegressionDetector, RegressionEvent
 from repro.cb.history import (HistoryRecord, HistoryStore, SOURCE_BASELINE,
                               SOURCE_CACHE, SOURCE_RUN, SOURCE_SKIP)
-from repro.cb.registry import BenchmarkSuite, get_suite
+from repro.cb.registry import BenchmarkSuite, _commit_seed, get_suite
 from repro.cb.select import BenchmarkSelector, SelectorConfig
 
 MODES = ("full", "selective", "selective_cached")
@@ -145,6 +145,12 @@ class Pipeline:
             select_all=self.cfg.mode == "full"))
         self._cfg_digest = self.cfg.config_digest()
         self._parent: Optional[Commit] = None
+        # authoritative record of the last commit each benchmark truly
+        # produced a result at — written at finalize time, in commit
+        # order.  The selector's optimistic prepare-time marks are rolled
+        # back against THIS (not the prepare-time snapshot, which may
+        # itself be an optimistic mark from an earlier preempted commit).
+        self._measured_truth: Dict[str, int] = {}
 
     # ------------------------------------------------------------- stream
     def run_stream(self, commits: List[Commit]) -> PipelineReport:
@@ -162,10 +168,142 @@ class Pipeline:
 
     # ------------------------------------------------------------- commit
     def run_commit(self, commit: Commit) -> Optional[CommitRun]:
-        """Process one commit; returns None for the stream's baseline."""
+        """Process one commit inline; returns None for the baseline."""
+        cfg = self.cfg
+        work = self._prepare(commit)
+        if work is None:
+            return None
+
+        meter = _BenchmarkMeter()
+        invocations = 0
+        billed = 0.0
+        cost = 0.0
+        wall = 0.0
+        changes: Dict[str, ChangeResult] = {}
+        if work.to_measure:
+            result = self.suite.run(
+                work.to_measure, work.run_commit, provider=cfg.provider,
+                n_calls=cfg.n_calls, repeats_per_call=cfg.repeats_per_call,
+                parallelism=cfg.parallelism, memory_mb=cfg.memory_mb,
+                seed=cfg.seed, min_results=cfg.min_results,
+                adaptive=cfg.adaptive, observer=meter)
+            changes = result.changes
+            rep = result.report
+            invocations = len(rep.billed_seconds)
+            billed = float(sum(rep.billed_seconds))
+            cost = rep.cost_dollars
+            wall = rep.wall_seconds
+        return self._finalize(commit, work, changes, meter.invocations,
+                              meter.billed_s, invocations=invocations,
+                              billed=billed, cost=cost, wall=wall)
+
+    # ------------------------------------------------------------ service
+    def submit_stream(self, commits: List[Commit], service, *,
+                      tenant: str = "tenant0", priority: float = 1.0,
+                      deadline_s: Optional[float] = None,
+                      budget_usd: Optional[float] = None
+                      ) -> List[_PendingCommit]:
+        """Submit a whole commit stream as service jobs (one job per
+        commit that needs measurement) instead of running inline.  The
+        returned pending list is consumed by `collect_service` after
+        `service.run()`; the service delivers each tenant's results in
+        submission order, so history stays causally consistent.
+
+        Selection and cache lookups happen at submission time (they
+        depend only on fingerprints); measurements produced by jobs in
+        the same batch therefore cannot serve later submissions from the
+        cache — they land in the cache at delivery time for future
+        streams."""
+        from repro.service.jobs import Job
+        if self.cfg.adaptive:
+            raise ValueError("adaptive stopping is an inline-run feature; "
+                             "service jobs run fixed plans chosen by the "
+                             "planner")
+        cfg = self.cfg
+        pending: List[_PendingCommit] = []
+        for commit in commits:
+            work = self._prepare(commit)
+            entry = _PendingCommit(commit, work)
+            if work is not None and work.to_measure:
+                job = Job(
+                    job_id=f"{tenant}/{commit.commit_id}", tenant=tenant,
+                    workloads=self.suite.job_workloads(work.to_measure,
+                                                       work.run_commit),
+                    n_calls=cfg.n_calls,
+                    repeats_per_call=cfg.repeats_per_call,
+                    priority=priority, deadline_s=deadline_s,
+                    budget_usd=budget_usd,
+                    seed=_job_seed(cfg.seed, commit),
+                    min_results=cfg.min_results,
+                    metadata={"suite": self.suite.name,
+                              "commit_id": commit.commit_id,
+                              "commit_index": commit.index},
+                    callback=entry.deliver)
+                service.submit(job, provider=cfg.provider,
+                               memory_mb=cfg.memory_mb,
+                               parallelism=cfg.parallelism)
+            pending.append(entry)
+        return pending
+
+    def collect_service(self, pending: List[_PendingCommit]
+                        ) -> PipelineReport:
+        """Finalize delivered jobs into the history (commit order) and
+        build the stream report — the service-mode tail of `run_stream`."""
+        runs: List[CommitRun] = []
+        for entry in pending:
+            if entry.work is None:
+                continue                     # stream baseline
+            if entry.work.to_measure and entry.result is None:
+                raise RuntimeError(
+                    f"commit {entry.commit.commit_id} was submitted but "
+                    f"never delivered — call service.run() first")
+            r = entry.result
+            if r is None:
+                runs.append(self._finalize(entry.commit, entry.work, {},
+                                           {}, {}, invocations=0,
+                                           billed=0.0, cost=0.0, wall=0.0))
+                continue
+            runs.append(self._finalize(
+                entry.commit, entry.work, r.changes,
+                r.benchmark_invocations, r.benchmark_billed_s,
+                invocations=r.invocations, billed=r.billed_seconds,
+                cost=r.cost_dollars, wall=r.end_s - r.start_s,
+                fully_measured=not r.preempted))
+        events = RegressionDetector(self.cfg.detector).scan(
+            self.history, provider=self.cfg.provider, mode=self.cfg.mode)
+        return PipelineReport(
+            suite=self.suite.name, provider=self.cfg.provider,
+            mode=self.cfg.mode, commits=runs, events=events,
+            cache_hits=self.cache.hits, cache_misses=self.cache.misses)
+
+    def run_stream_service(self, commits: List[Commit], service, *,
+                           tenant: str = "tenant0", priority: float = 1.0,
+                           deadline_s: Optional[float] = None,
+                           budget_usd: Optional[float] = None
+                           ) -> PipelineReport:
+        """`run_stream` through the service: submit every commit as a job,
+        execute the service, collect.  With a shared service instance the
+        caller submits several pipelines first and calls `service.run()`
+        once — this convenience wrapper is the single-tenant path."""
+        pending = self.submit_stream(commits, service, tenant=tenant,
+                                     priority=priority,
+                                     deadline_s=deadline_s,
+                                     budget_usd=budget_usd)
+        service.run()
+        return self.collect_service(pending)
+
+    # ------------------------------------------------- prepare / finalize
+    def _prepare(self, commit: Commit) -> Optional["_CommitWork"]:
+        """Everything before the platform run: selection, cache lookups,
+        selector bookkeeping.  Depends only on fingerprints (never on
+        measurement results), so a whole stream can be prepared up front
+        and its measurements submitted as concurrent service jobs.
+        Returns None for the stream's baseline commit."""
         cfg = self.cfg
         if self._parent is None:
             self.selector.observe_baseline(commit)
+            self._measured_truth = {b: commit.index
+                                    for b in commit.fingerprints}
             self._parent = commit
             self.history.append([HistoryRecord.from_change(
                 None, suite=self.suite.name, provider=cfg.provider,
@@ -206,69 +344,131 @@ class Pipeline:
             to_measure.append(b)
             sources[b] = SOURCE_RUN
 
-        meter = _BenchmarkMeter()
-        invocations = 0
-        billed = 0.0
-        cost = 0.0
-        wall = 0.0
+        # revalidations measure A/A: the suite sees a zero step effect
+        # for them, which is exactly what an unchanged benchmark is
+        reval = set(sel.revalidate) & set(to_measure)
+        run_commit = commit if not reval else _strip_steps(commit, reval)
+        # selector bookkeeping is fingerprint-only — marking at prepare
+        # time (before the measurement) is indistinguishable from the
+        # historical post-run marking for the inline path.  A preempted
+        # service job can falsify the optimism for benchmarks that never
+        # ran, so the pre-mark staleness entries are kept for rollback at
+        # finalize time.
+        prev_measured = {b: self.selector.last_measured(b)
+                         for b in to_measure}
         if to_measure:
-            # revalidations measure A/A: the suite sees a zero step effect
-            # for them, which is exactly what an unchanged benchmark is
-            reval = set(sel.revalidate) & set(to_measure)
-            run_commit = commit if not reval else _strip_steps(commit, reval)
-            result = self.suite.run(
-                to_measure, run_commit, provider=cfg.provider,
-                n_calls=cfg.n_calls, repeats_per_call=cfg.repeats_per_call,
-                parallelism=cfg.parallelism, memory_mb=cfg.memory_mb,
-                seed=cfg.seed, min_results=cfg.min_results,
-                adaptive=cfg.adaptive, observer=meter)
-            changes.update(result.changes)
-            rep = result.report
-            invocations = len(rep.billed_seconds)
-            billed = float(sum(rep.billed_seconds))
-            cost = rep.cost_dollars
-            wall = rep.wall_seconds
             self.selector.mark_measured(to_measure, commit.index)
-            for b in to_measure:
-                fp1, fp2 = pair_fps(b)
-                self.cache.put(
-                    b, fp1, fp2, self._cfg_digest,
-                    change=changes.get(b),
-                    invocations=meter.invocations.get(b, 0),
-                    billed_seconds=meter.billed_s.get(b, 0.0),
-                    cost_dollars=_prorate(cost, billed,
-                                          meter.billed_s.get(b, 0.0)))
         if cache_hits:
             self.selector.mark_measured(cache_hits, commit.index)
+        self._parent = commit
+        return _CommitWork(parent=parent, sel=sel, cached_changes=changes,
+                           cache_hits=cache_hits, to_measure=to_measure,
+                           sources=sources, run_commit=run_commit,
+                           pair_fps={b: pair_fps(b) for b in sel.selected},
+                           prev_measured=prev_measured)
+
+    def _finalize(self, commit: Commit, work: "_CommitWork",
+                  run_changes: Dict[str, ChangeResult],
+                  meter_inv: Dict[str, int], meter_billed: Dict[str, float],
+                  *, invocations: int, billed: float, cost: float,
+                  wall: float, fully_measured: bool = True) -> CommitRun:
+        """Everything after the measurement: cache fills, history records,
+        the CommitRun.  Called inline right after the suite run, or at
+        service delivery time (causally ordered per tenant).
+
+        `fully_measured=False` (a preempted service job) suppresses cache
+        fills for benchmarks that never ran: caching their empty result
+        would make every future selective_cached stream skip re-measuring
+        the fingerprint pair, permanently hiding a real change."""
+        cfg = self.cfg
+        changes = dict(work.cached_changes)
+        changes.update(run_changes)
+        for b in work.cache_hits:
+            self._measured_truth[b] = commit.index
+        for b in work.to_measure:
+            if not fully_measured and meter_inv.get(b, 0) < cfg.n_calls:
+                # preempted before this benchmark got its full plan: a
+                # partial (or empty) measurement must not enter the cache
+                # as a change=None "result" — a later selective_cached
+                # stream would skip re-measuring the pair and hide a real
+                # change — and the staleness clock must not credit it
+                self.selector.unmark_measured(
+                    b, self._measured_truth.get(b,
+                                                work.prev_measured.get(b)),
+                    commit.index)
+                continue
+            self._measured_truth[b] = commit.index
+            fp1, fp2 = work.pair_fps[b]
+            self.cache.put(
+                b, fp1, fp2, self._cfg_digest,
+                change=changes.get(b),
+                invocations=meter_inv.get(b, 0),
+                billed_seconds=meter_billed.get(b, 0.0),
+                cost_dollars=_prorate(cost, billed,
+                                      meter_billed.get(b, 0.0)))
 
         records = []
         for b in sorted(commit.fingerprints):
-            src = sources.get(b, SOURCE_SKIP)
+            src = work.sources.get(b, SOURCE_SKIP)
             inv_b, billed_b = 0, 0.0
             if src == SOURCE_RUN:
-                inv_b = meter.invocations.get(b, 0)
-                billed_b = meter.billed_s.get(b, 0.0)
+                inv_b = meter_inv.get(b, 0)
+                billed_b = meter_billed.get(b, 0.0)
             records.append(HistoryRecord.from_change(
                 changes.get(b), suite=self.suite.name, provider=cfg.provider,
                 mode=cfg.mode, commit_id=commit.commit_id,
                 commit_index=commit.index, benchmark=b,
                 fingerprint=commit.fingerprints[b],
                 code_changed=commit.fingerprints[b]
-                != parent.fingerprints.get(b, ""),
+                != work.parent.fingerprints.get(b, ""),
                 source=src, invocations=inv_b, billed_seconds=billed_b,
                 cost_dollars=_prorate(cost, billed, billed_b)))
         self.history.append(records)
 
-        self._parent = commit
+        sel = work.sel
         return CommitRun(
             commit_id=commit.commit_id, commit_index=commit.index,
-            ran=[b for b in sel.run if sources.get(b) == SOURCE_RUN],
+            ran=[b for b in sel.run if work.sources.get(b) == SOURCE_RUN],
             revalidated=[b for b in sel.revalidate
-                         if sources.get(b) == SOURCE_RUN],
-            cache_hits=cache_hits, skipped=sel.skipped, changes=changes,
+                         if work.sources.get(b) == SOURCE_RUN],
+            cache_hits=work.cache_hits, skipped=sel.skipped, changes=changes,
             flagged=sorted(b for b, c in changes.items() if c.changed),
             invocations=invocations, billed_seconds=billed,
             cost_dollars=cost, wall_seconds=wall)
+
+
+def _job_seed(seed: int, commit: Commit) -> int:
+    """Service jobs reuse the registry's per-commit seed stream, so a
+    commit measured through the service draws the same RMIT plan as the
+    same commit measured inline."""
+    return _commit_seed(seed, commit)
+
+
+@dataclass
+class _CommitWork:
+    """Prepared (pre-measurement) state of one non-baseline commit."""
+    parent: Commit
+    sel: object                             # SelectorResult
+    cached_changes: Dict[str, ChangeResult]
+    cache_hits: List[str]
+    to_measure: List[str]
+    sources: Dict[str, str]
+    run_commit: Commit                      # A/A-stripped view for the run
+    pair_fps: Dict[str, tuple]
+    prev_measured: Dict[str, object] = field(default_factory=dict)
+
+
+@dataclass
+class _PendingCommit:
+    """One commit travelling through the service: prepared work plus the
+    JobResult the service delivers (None for the baseline and for
+    commits with nothing to measure)."""
+    commit: Commit
+    work: Optional[_CommitWork]
+    result: object = None                   # repro.service.JobResult
+
+    def deliver(self, result) -> None:
+        self.result = result
 
 
 def _prorate(total_cost: float, total_billed: float, billed_b: float) -> float:

@@ -53,6 +53,13 @@ class BenchmarkSuite:
             observer: Optional[EngineObserver] = None) -> SuiteRunResult:
         raise NotImplementedError
 
+    def job_workloads(self, benchmarks: List[str], commit: Commit) -> Dict:
+        """The SimWorkload dict a service job needs to measure
+        `benchmarks` for `commit` (parent->commit duets).  Only simulated
+        suites can run as service jobs; realtime suites raise."""
+        raise NotImplementedError(
+            f"suite {self.name!r} cannot run as service jobs")
+
 
 def _commit_seed(seed: int, commit: Commit) -> int:
     """Each commit's run gets its own deterministic RNG/plan stream."""
@@ -121,6 +128,9 @@ class SyntheticSuite(BenchmarkSuite):
                              * commit.parent_level(b),
                              effect_pct=commit.step_effect(b))
         return out
+
+    def job_workloads(self, benchmarks: List[str], commit: Commit) -> Dict:
+        return self._commit_workloads(benchmarks, commit)
 
     def run(self, benchmarks: List[str], commit: Commit, *,
             provider: str = "lambda", n_calls: int = 15,

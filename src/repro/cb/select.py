@@ -71,3 +71,20 @@ class BenchmarkSelector:
     def mark_measured(self, benchmarks: List[str], commit_index: int) -> None:
         for b in benchmarks:
             self._last_measured[b] = commit_index
+
+    def last_measured(self, benchmark: str):
+        """Current staleness-clock entry (None if never marked)."""
+        return self._last_measured.get(benchmark)
+
+    def unmark_measured(self, benchmark: str, previous,
+                        commit_index: int) -> None:
+        """Roll back an optimistic `mark_measured` that never produced a
+        result (a preempted service job): restore the pre-mark value so
+        the staleness clock does not credit a measurement that never
+        happened.  No-op if a later commit has re-marked the benchmark."""
+        if self._last_measured.get(benchmark) != commit_index:
+            return
+        if previous is None:
+            self._last_measured.pop(benchmark, None)
+        else:
+            self._last_measured[benchmark] = previous

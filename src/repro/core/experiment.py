@@ -251,6 +251,187 @@ def pipeline_detection_accuracy(commits, report, measurable: List[str], *,
     return float(np.mean(per_commit))
 
 
+# --------------------------------------------- benchmarking-as-a-service
+@dataclass
+class ParetoRow:
+    """One executed candidate of the service Pareto sweep."""
+    label: str
+    provider: str
+    predicted_wall_s: float
+    predicted_cost_usd: float
+    actual_wall_s: float
+    actual_cost_usd: float
+    executed: int
+    chosen: bool = False
+
+
+@dataclass
+class ServiceParetoResult:
+    """`service_pareto`: planner candidates vs the measured VM baseline.
+
+    The acceptance claim of the experiment: the planner-chosen FaaS
+    configuration actually meets the virtual-time deadline at strictly
+    lower billed cost than the VM baseline — the paper's headline corner
+    (<=15 min / $0.49 FaaS vs ~4 h / $1.18 VM) found by search instead of
+    by hand."""
+    deadline_s: float
+    n_candidates: int
+    rows: List[ParetoRow]               # executed frontier, cheapest first
+    chosen: ParetoRow
+    vm_wall_s: float
+    vm_cost_usd: float
+    chosen_accuracy: int                # detection accuracy of chosen run
+    vm_accuracy: int
+
+    @property
+    def meets_deadline(self) -> bool:
+        return self.chosen.actual_wall_s <= self.deadline_s
+
+    @property
+    def cheaper_than_vm(self) -> bool:
+        return self.chosen.actual_cost_usd < self.vm_cost_usd
+
+
+def _execute_candidate(cand, suite: Dict[str, SimWorkload], *,
+                       seed: int) -> ExperimentResult:
+    """Run one planner candidate on the platform model it priced."""
+    from repro.faas.backends import PROVIDER_PROFILES
+    from repro.service.planner import VM_PROVIDER
+    if cand.provider == VM_PROVIDER:
+        plan = rmit.make_plan(sorted(suite), n_calls=cand.n_calls,
+                              repeats_per_call=cand.repeats_per_call,
+                              seed=seed)
+        platform = SimulatedVM(suite, VMPlatformConfig(
+            n_vms=cand.parallelism), seed=seed)
+        report = platform.run_suite(plan)
+    else:
+        profile = PROVIDER_PROFILES[cand.provider]
+        backend = SimFaaSBackend(suite, profile,
+                                 memory_mb=cand.memory_mb or 2048,
+                                 memory_map=cand.memory_map_dict(),
+                                 seed=seed)
+        plan = rmit.make_plan(sorted(suite), n_calls=cand.n_calls,
+                              repeats_per_call=cand.repeats_per_call,
+                              seed=seed)
+        engine = ExecutionEngine(backend,
+                                 EngineConfig(parallelism=cand.parallelism))
+        report = SimReport.from_engine(engine.run(plan))
+    changes = analyze(report.pairs, seed=seed)
+    return ExperimentResult(name=cand.label, report=report, changes=changes)
+
+
+def run_service_pareto_experiment(*, deadline_s: float = 900.0,
+                                  seed: int = 0, suite_seed: int = 42,
+                                  max_rows: int = 10
+                                  ) -> ServiceParetoResult:
+    """Sweep the planner's candidate space, execute the (cost, makespan)
+    frontier plus the chosen plan, and compare against the measured VM
+    baseline."""
+    from repro.service.planner import DeadlineCostPlanner, pareto_frontier
+    suite = victoriametrics_like_suite(seed=suite_seed)
+    planner = DeadlineCostPlanner()
+    cands = planner.candidates(suite, seed=seed)
+    chosen_cand = planner.choose(cands, deadline_s=deadline_s)
+    frontier = pareto_frontier(cands)
+    to_run = [c for c in frontier if c.provider != "vm"][:max_rows]
+    if chosen_cand not in to_run:
+        to_run.append(chosen_cand)
+
+    vm = run_vm_experiment("vm_baseline", suite, seed=seed + 1)
+    rows: List[ParetoRow] = []
+    chosen_row = None
+    chosen_res = None
+    for cand in to_run:
+        res = _execute_candidate(cand, suite, seed=seed)
+        row = ParetoRow(
+            label=cand.label, provider=cand.provider,
+            predicted_wall_s=cand.predicted_wall_s,
+            predicted_cost_usd=cand.predicted_cost_usd,
+            actual_wall_s=res.report.wall_seconds,
+            actual_cost_usd=res.report.cost_dollars,
+            executed=res.n_executed, chosen=cand == chosen_cand)
+        rows.append(row)
+        if row.chosen:
+            chosen_row = row
+            chosen_res = res
+    rows.sort(key=lambda r: (r.actual_cost_usd, r.actual_wall_s))
+    return ServiceParetoResult(
+        deadline_s=deadline_s, n_candidates=len(cands), rows=rows,
+        chosen=chosen_row, vm_wall_s=vm.report.wall_seconds,
+        vm_cost_usd=vm.report.cost_dollars,
+        chosen_accuracy=detection_accuracy(suite, chosen_res.changes),
+        vm_accuracy=detection_accuracy(suite, vm.changes))
+
+
+@dataclass
+class MultiTenantResult:
+    """`multi_tenant_throughput` at one concurrency level: N tenants each
+    running a commit-stream through one shared service."""
+    n_tenants: int
+    provider: str
+    jobs: int
+    makespan_s: float
+    p95_latency_s: float
+    mean_latency_s: float
+    fairness: float                     # Jain over per-tenant billed s
+    total_cost_usd: float
+    total_invocations: int
+    cold_starts: int
+    flagged: int                        # pairwise detections across tenants
+    digest: str                         # deterministic schedule digest
+
+
+def run_multi_tenant_experiment(n_tenants: int, *,
+                                provider: str = "lambda",
+                                n_commits: int = 4, n_calls: int = 10,
+                                repeats_per_call: int = 3,
+                                parallelism: int = 150,
+                                seed: int = 0) -> MultiTenantResult:
+    """N concurrent commit-stream tenants sharing one service fleet.
+
+    Every tenant owns an independent synthetic commit stream (distinct
+    seed) over the shared suite shape and submits each commit as a job to
+    the same `BenchmarkService`; the weighted-fair queue interleaves the
+    streams across the fleet.  Deterministic: the returned digest is a
+    pure function of (n_tenants, provider, knobs, seed)."""
+    from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
+                          SyntheticSuite, synthetic_stream)
+    from repro.service import BenchmarkService, ServiceConfig
+    base = SyntheticSuite()
+    service = BenchmarkService(ServiceConfig(parallelism=parallelism,
+                                             seed=seed))
+    pipelines = []
+    for t in range(n_tenants):
+        stream_seed = seed + 7919 * (t + 1)
+        commits, _ = synthetic_stream(
+            base.benchmark_names(),
+            StreamConfig(n_commits=n_commits, seed=stream_seed),
+            effectable=base.measurable_names(),
+            drift_candidates=base.quiet_names())
+        pipe = Pipeline(SyntheticSuite(base.workloads), PipelineConfig(
+            provider=provider, mode="selective", n_calls=n_calls,
+            repeats_per_call=repeats_per_call, parallelism=parallelism,
+            seed=stream_seed))
+        pending = pipe.submit_stream(commits, service,
+                                     tenant=f"tenant{t:02d}")
+        pipelines.append((pipe, pending))
+    report = service.run()
+    flagged = 0
+    for pipe, pending in pipelines:
+        flagged += pipe.collect_service(pending).total_flagged
+    lats = report.latencies_s()
+    return MultiTenantResult(
+        n_tenants=n_tenants, provider=provider, jobs=len(report.results),
+        makespan_s=report.makespan_s,
+        p95_latency_s=report.p95_latency_s(),
+        mean_latency_s=float(np.mean(lats)) if lats else 0.0,
+        fairness=report.fairness,
+        total_cost_usd=report.total_cost_usd,
+        total_invocations=report.total_invocations,
+        cold_starts=report.cold_starts, flagged=flagged,
+        digest=report.digest())
+
+
 def run_pipeline_experiment(provider: str = "lambda", *, n_commits: int = 20,
                             seed: int = 0, n_calls: int = 15,
                             repeats_per_call: int = 3,

@@ -22,6 +22,7 @@ class Invocation:
     repeats: int                    # duet pairs inside this call
     version_order: tuple            # per-repeat: ("v1","v2") or ("v2","v1")
     timeout_s: float = 20.0         # per-microbenchmark timeout (paper §6.1)
+    job_id: str = ""                # service job tag ("" = standalone run)
 
 
 @dataclass(frozen=True)
@@ -83,6 +84,19 @@ def make_plan(benchmarks: Sequence[str], *, n_calls: int = 15,
         rng.shuffle(inv)
     return SuitePlan(invocations=tuple(inv), n_calls=n_calls,
                      repeats_per_call=repeats_per_call)
+
+
+def tag_plan(plan: SuitePlan, job_id: str) -> SuitePlan:
+    """The same plan with every invocation tagged as belonging to `job_id`
+    (service multiplexing: one engine run interleaves many jobs, and the
+    job tag is how backends and observers route work back to its job).
+    Tagging does not touch the RNG, so a tagged plan replays the untagged
+    plan's schedule bit-for-bit."""
+    from dataclasses import replace
+    return SuitePlan(
+        invocations=tuple(replace(inv, job_id=job_id)
+                          for inv in plan.invocations),
+        n_calls=plan.n_calls, repeats_per_call=plan.repeats_per_call)
 
 
 def extra_invocations(benchmark: str, *, n_calls: int,

@@ -81,6 +81,14 @@ changepoint detection across commits.  It drives suites through the same
 meter with the adaptive controller behind the engine's single observer
 slot, and ``make_provider_backend`` (platform.py) resolves provider
 profiles by name for it and for core/experiment.py alike.
+
+Above both sits the benchmarking-as-a-service layer (``repro.service``):
+many tenants' jobs multiplexed onto shared per-provider fleets.  Two
+engine features exist for it: ``WarmPool`` can be passed into
+``ExecutionEngine.run`` so consecutive or concurrent jobs reuse each
+other's warm instances, and every ``rmit.Invocation`` carries a
+``job_id`` tag that backends and observers use to route work (RNG
+streams, memory configs, billing) back to its job.
 """
 from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
                                  GCF_PROFILE, GCFLikeBackend,
@@ -89,7 +97,8 @@ from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
                                  ProviderProfile, SimFaaSBackend, VMBackend)
 from repro.faas.engine import (CompletedInvocation, EngineConfig,
                                EngineObserver, EngineReport, ExecutionEngine,
-                               FanoutObserver, Instance, InvocationOutcome)
+                               FanoutObserver, Instance, InvocationOutcome,
+                               WarmPool)
 from repro.faas.platform import (FaaSPlatformConfig, SimReport, SimWorkload,
                                  SimulatedFaaS, SimulatedVM, VMPlatformConfig,
                                  make_provider_backend)
@@ -101,5 +110,6 @@ __all__ = [
     "Instance", "InvocationOutcome", "LAMBDA_PROFILE", "LambdaLikeBackend",
     "LocalDuetBackend", "PROVIDER_PROFILES", "ProviderProfile",
     "SimFaaSBackend", "SimReport", "SimWorkload", "SimulatedFaaS",
-    "SimulatedVM", "VMBackend", "VMPlatformConfig", "make_provider_backend",
+    "SimulatedVM", "VMBackend", "VMPlatformConfig", "WarmPool",
+    "make_provider_backend",
 ]

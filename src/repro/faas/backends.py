@@ -30,7 +30,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -75,6 +75,40 @@ class ProviderProfile:
     # refactored runs replay the original SimulatedFaaS bit-for-bit
     rng_tag: int = 7
 
+    # ----- memory-parameterized platform model (pure, planner-callable):
+    # everything the deadline/cost planner needs to predict a candidate
+    # configuration without instantiating a backend.
+    def cpu_share(self, memory_mb: float) -> float:
+        """Fraction of a vCPU a function gets at this memory size."""
+        return min(1.0, (memory_mb / self.cpu_nominal_mb)
+                   ** self.cpu_exponent)
+
+    def cold_overhead_s(self, image_gb: float) -> float:
+        """Container pull + runtime init for one cold start."""
+        return self.cold_start_base_s + self.cold_start_per_gb_s * image_gb
+
+    def round_billed(self, billed_s: float) -> float:
+        """One invocation's billed duration after granularity/minimum."""
+        g, m = self.billing_granularity_s, self.min_billed_s
+        b = max(billed_s, m)
+        return math.ceil(b / g) * g if g else b
+
+    def billed_cost(self, billed_seconds: Sequence[float],
+                    memory_mb: float) -> float:
+        """Total bill for a list of invocation durations at one memory
+        size: GB-s + per-request (+ GHz-s where the provider prices CPU
+        separately)."""
+        if self.billing_granularity_s or self.min_billed_s:
+            total = float(sum(self.round_billed(b) for b in billed_seconds))
+        else:
+            total = float(sum(billed_seconds))
+        cost = (total * memory_mb / 1024.0 * self.per_gb_second
+                + len(billed_seconds) * self.per_request)
+        if self.per_ghz_second:
+            cost += (total * self.cpu_base_ghz * self.cpu_share(memory_mb)
+                     * self.per_ghz_second)
+        return cost
+
 
 LAMBDA_PROFILE = ProviderProfile(name="lambda")
 
@@ -107,7 +141,14 @@ PROVIDER_PROFILES: Dict[str, ProviderProfile] = {
 # ------------------------------------------------------- simulated backends
 class SimFaaSBackend:
     """Virtual-time FaaS provider model (elastic warm pool, cold starts,
-    restricted filesystem, per-benchmark/function timeouts, GB-s billing)."""
+    restricted filesystem, per-benchmark/function timeouts, GB-s billing).
+
+    `memory_map` optionally right-sizes individual benchmarks (the
+    autotuner's output): a mapped benchmark runs — and is billed — at its
+    own memory size; unmapped benchmarks use the uniform `memory_mb`.
+    Execution speed scales through the profile's memory→vCPU curve, so an
+    under-sized benchmark can hit the 20 s timeout exactly as on the real
+    platform (paper §7.1's caution)."""
 
     realtime = False
     pinned = False
@@ -115,15 +156,19 @@ class SimFaaSBackend:
     def __init__(self, workloads: Dict[str, "SimWorkload"],
                  profile: ProviderProfile = LAMBDA_PROFILE, *,
                  memory_mb: int = 2048, image_gb: float = 1.0,
-                 seed: int = 0, start_time_s: float = 0.0):
+                 seed: int = 0, start_time_s: float = 0.0,
+                 memory_map: Optional[Dict[str, int]] = None):
         self.workloads = workloads
         self.profile = profile
         self.memory_mb = memory_mb
         self.image_gb = image_gb
         self.seed = seed
         self.start = start_time_s
+        self.memory_map = memory_map
         self._rng: Optional[np.random.Generator] = None
         self._inst_counter = 0
+        self._sim_mem: List[float] = []     # memory per simulate() call,
+        #                                     aligned with the billed list
 
     @property
     def keep_alive_s(self) -> float:
@@ -131,13 +176,18 @@ class SimFaaSBackend:
 
     @property
     def cpu_factor(self) -> float:
-        p = self.profile
-        return min(1.0, (self.memory_mb / p.cpu_nominal_mb) ** p.cpu_exponent)
+        return self.profile.cpu_share(self.memory_mb)
+
+    def memory_for(self, benchmark: str) -> float:
+        if self.memory_map is None:
+            return self.memory_mb
+        return self.memory_map.get(benchmark, self.memory_mb)
 
     def begin_run(self, parallelism: int) -> None:
         self._rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, self.profile.rng_tag]))
         self._inst_counter = 0
+        self._sim_mem = []
 
     def _diurnal(self, t: float) -> float:
         p = self.profile
@@ -159,6 +209,12 @@ class SimFaaSBackend:
         p = self.profile
         rng = self._rng
         wl = self.workloads[inv.benchmark]
+        cpu_factor = self.cpu_factor
+        if self.memory_map is not None:
+            mem = self.memory_for(inv.benchmark)
+            cpu_factor = p.cpu_share(mem)
+            self._sim_mem.append(mem)   # one entry per simulate call: the
+            #                             engine bills in the same order
         dur = overhead_s
         cold = overhead_s > 0
         if p.failure_rate > 0.0 and float(rng.random()) < p.failure_rate:
@@ -196,7 +252,7 @@ class SimFaaSBackend:
                     noise *= 1.0 + float(rng.uniform(-wl.unstable_pct,
                                                      wl.unstable_pct)) / 100.0
                 secs = (wl.true_seconds(ver) * noise * instance.speed
-                        * self._diurnal(t + dur) / self.cpu_factor)
+                        * self._diurnal(t + dur) / cpu_factor)
                 if secs > p.benchmark_timeout_s:
                     ok = False
                     timed_out = True
@@ -222,18 +278,15 @@ class SimFaaSBackend:
     def finalize(self, billed_seconds: List[float],
                  wall_seconds: float) -> float:
         p = self.profile
-        g, m = p.billing_granularity_s, p.min_billed_s
-        if g or m:
-            rounded = [math.ceil(max(b, m) / g) * g if g else max(b, m)
-                       for b in billed_seconds]
-        else:
-            rounded = billed_seconds
-        total = float(sum(rounded))
-        cost = (total * self.memory_mb / 1024.0 * p.per_gb_second
-                + len(billed_seconds) * p.per_request)
-        if p.per_ghz_second:
-            cost += total * p.cpu_base_ghz * self.cpu_factor * p.per_ghz_second
-        return cost
+        if self.memory_map is not None \
+                and len(self._sim_mem) == len(billed_seconds):
+            # per-invocation memory: price each bill at the memory the
+            # invocation actually ran with (the engine bills in simulate
+            # order, so the two lists are aligned)
+            return float(sum(p.billed_cost([b], mem)
+                             for b, mem in zip(billed_seconds,
+                                               self._sim_mem)))
+        return p.billed_cost(billed_seconds, self.memory_mb)
 
 
 class LambdaLikeBackend(SimFaaSBackend):

@@ -56,6 +56,49 @@ class Instance:
     speed: float = 1.0                   # heterogeneity factor (1 = nominal)
 
 
+class WarmPool:
+    """Warm-instance pool as two heaps instead of the historical list that
+    was rebuilt (O(pool)) on every acquire.  The historical pick was
+    "first entry in append order that is idle and unexpired", i.e. the
+    idle, unexpired entry with the smallest append sequence number — so
+    `_ready` is a min-heap on seq of entries already idle, `_busy` a
+    min-heap on idle_since of entries whose instance is still running.
+    Dispatch times are non-decreasing, which makes both the busy->ready
+    promotion and the lazy expiry drop exact: O(log pool) per acquire.
+
+    A pool may outlive one engine run: the service scheduler keeps one
+    pool per provider fleet and passes it to every job's engine run, so
+    consecutive jobs reuse each other's warm instances (fewer cold
+    starts) exactly like concurrent suites sharing a real fleet.  The
+    non-decreasing-time requirement then spans runs: callers sharing a
+    pool must share one virtual clock."""
+
+    def __init__(self):
+        self._busy: List[Tuple[float, int, Instance]] = []  # (idle_since,..)
+        self._ready: List[Tuple[int, float, Instance]] = []  # (seq,..)
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._busy) + len(self._ready)
+
+    def release(self, inst: Instance, idle_since: float) -> None:
+        heapq.heappush(self._busy, (idle_since, self._seq, inst))
+        self._seq += 1
+
+    def acquire(self, t: float, keep_alive_s: float) -> Optional[Instance]:
+        """The warm, unexpired instance that has been idle since the
+        earliest append, or None (caller cold-starts)."""
+        while self._busy and self._busy[0][0] <= t:
+            idle_since, seq, inst = heapq.heappop(self._busy)
+            heapq.heappush(self._ready, (seq, idle_since, inst))
+        while self._ready:
+            _, idle_since, inst = heapq.heappop(self._ready)
+            if t - idle_since > keep_alive_s:
+                continue                  # reaped (stays expired)
+            return inst
+        return None
+
+
 @dataclass
 class InvocationOutcome:
     """What a backend reports for one attempted invocation."""
@@ -182,14 +225,22 @@ class ExecutionEngine:
         self._lock = threading.Lock()
 
     def run(self, plan: SuitePlan,
-            observer: Optional[EngineObserver] = None) -> EngineReport:
+            observer: Optional[EngineObserver] = None, *,
+            warm_pool: Optional[WarmPool] = None,
+            start_s: float = 0.0) -> EngineReport:
+        """`warm_pool` lets a caller share warm instances across runs (the
+        service scheduler's per-fleet pools); `start_s` starts every
+        concurrency slot at that virtual time instead of 0 so a shared
+        pool's non-decreasing-clock requirement holds across runs."""
         if getattr(self.backend, "realtime", False):
             return self._run_realtime(plan, observer)
-        return self._run_virtual(plan, observer)
+        return self._run_virtual(plan, observer, warm_pool, start_s)
 
     # ------------------------------------------------------------- virtual
     def _run_virtual(self, plan: SuitePlan,
-                     observer: Optional[EngineObserver]) -> EngineReport:
+                     observer: Optional[EngineObserver],
+                     warm_pool: Optional[WarmPool] = None,
+                     start_s: float = 0.0) -> EngineReport:
         cfg, be = self.cfg, self.backend
         be.begin_run(cfg.parallelism)
 
@@ -205,26 +256,10 @@ class ExecutionEngine:
         # slot = one concurrency lane; (free_time, slot_idx) min-heap gives
         # O(log P) selection with the lowest-index tie-break the O(P) scan
         # used to have.
-        slots: List[Tuple[float, int]] = [(0.0, i)
+        slots: List[Tuple[float, int]] = [(start_s, i)
                                           for i in range(cfg.parallelism)]
-        # Warm pool as two heaps instead of the historical list that was
-        # rebuilt (O(pool)) on every acquire.  The historical pick was
-        # "first entry in append order that is idle and unexpired", i.e.
-        # the idle, unexpired entry with the smallest append sequence
-        # number — so `warm_ready` is a min-heap on seq of entries already
-        # idle, `warm_busy` a min-heap on idle_since of entries whose
-        # instance is still running.  Dispatch times are non-decreasing,
-        # which makes both the busy->ready promotion and the lazy expiry
-        # drop exact: O(log pool) per acquire, same picks as the seed.
-        warm_busy: List[Tuple[float, int, Instance]] = []   # (idle_since,..)
-        warm_ready: List[Tuple[int, float, Instance]] = []  # (seq,..)
-        warm_seq = 0
+        pool = warm_pool if warm_pool is not None else WarmPool()
         pinned: Dict[int, Instance] = {}          # slot -> fixed instance
-
-        def release(inst: Instance, idle_since: float):
-            nonlocal warm_seq
-            heapq.heappush(warm_busy, (idle_since, warm_seq, inst))
-            warm_seq += 1
 
         def acquire(inv: Invocation, slot: int, t: float):
             """Warm-pool reuse (elastic platforms) or slot-pinned instances
@@ -236,14 +271,8 @@ class ExecutionEngine:
                     inst, _ = be.spawn_instance(inv, t, slot)
                     pinned[slot] = inst
                 return inst, 0.0
-            keep = be.keep_alive_s
-            while warm_busy and warm_busy[0][0] <= t:
-                idle_since, seq, inst = heapq.heappop(warm_busy)
-                heapq.heappush(warm_ready, (seq, idle_since, inst))
-            while warm_ready:
-                _, idle_since, inst = heapq.heappop(warm_ready)
-                if t - idle_since > keep:
-                    continue                      # reaped (stays expired)
+            inst = pool.acquire(t, be.keep_alive_s)
+            if inst is not None:
                 return inst, 0.0
             inst, overhead = be.spawn_instance(inv, t, slot)
             cold_starts += 1
@@ -256,7 +285,7 @@ class ExecutionEngine:
             t_end = t + out.duration_s
             heapq.heappush(slots, (t_end, slot))
             if not be.pinned:
-                release(inst, t_end)
+                pool.release(inst, t_end)
             return CompletedInvocation(inv, out, t, t_end, attempt, inst)
 
         # completed invocations are delivered to the observer in virtual
@@ -292,19 +321,40 @@ class ExecutionEngine:
             comp = dispatch(inv, attempt)
             out = comp.outcome
             billed.append(out.duration_s)
-            wall = max(wall, comp.t_end)
+            end_s = comp.t_end
 
-            # straggler hedging: a known-long invocation is re-issued on the
-            # next free slot; the earlier (virtual) completion wins, both
-            # attempts are billed
+            # straggler hedging: a known-long invocation is re-issued on
+            # the next free slot; the earlier (virtual) successful
+            # completion wins and the losing twin is *cancelled* at that
+            # moment — the platform bills the loser only until the cancel
+            # signal, never for the duration it would have run.  (The
+            # loser's slot still frees at its originally modeled end: a
+            # cancel does not reschedule work already dispatched behind
+            # it, so the schedule stays identical and only billing/wall
+            # accounting sees the cancellation.)
             thr = hedge.threshold()
             if thr is not None and out.duration_s > thr:
                 hedged += 1
                 alt = dispatch(inv, attempt)
-                billed.append(alt.outcome.duration_s)
-                wall = max(wall, alt.t_end)
+                alt_billed = alt.outcome.duration_s
+                alt_end = alt.t_end
                 if alt.outcome.ok and (not out.ok or alt.t_end < comp.t_end):
+                    if alt.t_end < comp.t_end:
+                        # the twin wins while the original is still
+                        # running: cancel the original at the twin's end
+                        billed[-1] = max(0.0, min(out.duration_s,
+                                                  alt.t_end - comp.t_start))
+                        end_s = alt.t_end
                     comp, out = alt, alt.outcome
+                elif out.ok:
+                    # the original won: the twin is cancelled at the
+                    # original's end (0 s billed if not yet started)
+                    alt_billed = max(0.0, min(alt_billed,
+                                              comp.t_end - alt.t_start))
+                    alt_end = min(alt_end, max(comp.t_end, alt.t_start))
+                billed.append(alt_billed)
+                wall = max(wall, alt_end)
+            wall = max(wall, end_s)
 
             if out.platform_failure and attempt < cfg.max_retries:
                 retries += 1

@@ -1,0 +1,40 @@
+"""Benchmarking-as-a-service (beyond-paper, Japke et al. 2025 direction).
+
+The paper evaluates one suite for one user; its natural deployment is a
+shared service many CI pipelines submit to.  This package is that service
+layer, stacked on the PR-1 engine and the PR-2 pipeline:
+
+    jobs.py       suite-run jobs (tenant, priority, deadline, budget) and
+                  admission control
+    queue.py      multi-tenant weighted-fair queue over one virtual-time
+                  clock (WFQ: per-tenant share of the fleet, no starvation)
+    planner.py    deadline/cost planner: enumerate provider x memory x
+                  fleet x repeat-plan candidates, predict duration/cost
+                  from the billing model + measured memory curves
+                  (core/autotune.py), pick the cheapest plan meeting the
+                  deadline or the fastest within budget
+    scheduler.py  the service scheduler: many concurrent jobs multiplexed
+                  onto per-provider engine fleets with shared warm pools,
+                  over-budget preemption, and causally ordered result
+                  delivery back to each tenant
+
+Everything is deterministic: the same seed produces identical plans,
+schedules, and bills (golden-digest tested).
+"""
+from repro.service.jobs import (AdmissionConfig, AdmissionError, Job,
+                                JobResult, JOB_COMPLETED, JOB_PREEMPTED,
+                                JOB_QUEUED, JOB_REJECTED)
+from repro.service.planner import (CandidatePlan, DeadlineCostPlanner,
+                                   InfeasiblePlanError, PlannerConfig,
+                                   pareto_frontier)
+from repro.service.queue import FairQueue
+from repro.service.scheduler import (BenchmarkService, ServiceConfig,
+                                     ServiceReport)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionError", "Job", "JobResult",
+    "JOB_COMPLETED", "JOB_PREEMPTED", "JOB_QUEUED", "JOB_REJECTED",
+    "CandidatePlan", "DeadlineCostPlanner", "InfeasiblePlanError",
+    "PlannerConfig", "pareto_frontier", "FairQueue",
+    "BenchmarkService", "ServiceConfig", "ServiceReport",
+]

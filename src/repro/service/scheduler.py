@@ -1,0 +1,506 @@
+"""The service scheduler: many concurrent jobs on shared engine fleets.
+
+One `BenchmarkService` owns a set of per-provider *fleets*.  Each fleet
+is one `ExecutionEngine` (PR-1) plus a persistent `WarmPool` and a
+`FairQueue`: submitted jobs are expanded into job-tagged RMIT
+invocations, interleaved across tenants in weighted-fair order, and
+executed as one virtual-time schedule — concurrent jobs genuinely share
+the fleet's slots and each other's warm instances, exactly like CI
+pipelines sharing a real deployment.
+
+A `_JobRouterBackend` multiplexes the platform model per job: every job
+keeps its own RNG stream (seeded by the job seed), memory configuration
+(uniform or autotuned map), and billing.  Cold starts and warm reuse
+reflect the *combined* load — like a real shared fleet, co-tenancy
+changes which invocations pay cold starts and which instances (drawn
+from whichever job spawned them) a job's work lands on, so a job's raw
+timings are not identical to a solo run of the same job.  What IS
+guaranteed is batch-level determinism: the same set of submissions with
+the same seeds replays the identical schedule, timings, and bills.
+
+Service-level policies on top of the engine:
+
+  * admission control (jobs.py) — a rejected job schedules nothing;
+  * over-budget preemption — a job whose metered bill exceeds its budget
+    is cancelled mid-run (its remaining invocations are skipped, its
+    partial results still delivered, marked `preempted`);
+  * causally ordered delivery — each tenant receives its JobResults in
+    submission order, at virtual times that never precede the results
+    they contain (a tenant's commit N+1 can never land before commit N).
+
+Determinism: same submissions + same seeds => identical dispatch order,
+schedules, bills, and delivery order (`ServiceReport.digest()` is golden-
+tested at 16+ concurrent jobs).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import rmit
+from repro.core.results import analyze
+from repro.core.rmit import SuitePlan
+from repro.faas.backends import (PROVIDER_PROFILES, ProviderProfile,
+                                 SimFaaSBackend)
+from repro.faas.engine import (CompletedInvocation, EngineConfig,
+                               EngineObserver, EngineReport, ExecutionEngine,
+                               WarmPool)
+from repro.service.jobs import (AdmissionConfig, AdmissionError, Job,
+                                JobResult, JOB_COMPLETED, JOB_PREEMPTED,
+                                check_admission)
+from repro.service.planner import (CandidatePlan, DeadlineCostPlanner,
+                                   VM_PROVIDER)
+from repro.service.queue import FairQueue
+
+
+@dataclass
+class ServiceConfig:
+    parallelism: int = 150              # slots per fleet (paper §6.1)
+    memory_mb: int = 2048               # default uniform function memory
+    preempt_over_budget: bool = True
+    max_retries: int = 0
+    tenant_weights: Dict[str, float] = field(default_factory=dict)
+    admission: AdmissionConfig = field(default_factory=AdmissionConfig)
+    seed: int = 0
+
+
+@dataclass
+class SubmitReceipt:
+    """What `submit` hands back: where the job will run."""
+    job_id: str
+    provider: str
+    memory_mb: int
+    parallelism: int
+    n_invocations: int
+    plan: Optional[CandidatePlan] = None    # set when the planner chose
+
+
+class _JobExec:
+    """Internal per-job execution state."""
+
+    def __init__(self, job: Job, backend: SimFaaSBackend, provider: str,
+                 memory_mb: int, submit_seq: int, enqueue_clock_s: float,
+                 n_invocations: int, plan: Optional[CandidatePlan]):
+        self.job = job
+        self.backend = backend
+        self.provider = provider
+        self.memory_mb = memory_mb
+        self.submit_seq = submit_seq
+        self.enqueue_clock_s = enqueue_clock_s
+        self.pending = n_invocations
+        self.n_planned = n_invocations
+        self.plan = plan
+        self.cancelled = False
+        self.preempted = False
+        self.n_done = 0
+        self.n_skipped = 0
+        self.pairs: List = []
+        self.executed: set = set()
+        self.failed: set = set()
+        self.infra_failed: set = set()
+        self.bench_inv: Dict[str, int] = {}
+        self.bench_billed: Dict[str, float] = {}
+        self.billed_s = 0.0
+        self.cost_est = 0.0             # metered incrementally (preemption)
+        self.cost_final = 0.0           # from the backend's billing model
+        self.start_s = float("inf")
+        self.end_s = 0.0
+        self.result: Optional[JobResult] = None
+
+
+class _JobRouterBackend:
+    """Backend multiplexer: routes every engine callback to the backend
+    of the invocation's job (rmit.Invocation.job_id).  All jobs in one
+    fleet share the provider profile — and through the engine, the slots
+    and the warm pool — but keep private RNG streams, memory configs,
+    and bills."""
+
+    realtime = False
+    pinned = False
+
+    def __init__(self, profile: ProviderProfile):
+        self.profile = profile
+        self.backends: Dict[str, SimFaaSBackend] = {}
+        self._sim_jobs: List[str] = []      # job id per simulate() call,
+        #                                     aligned with the billed list
+        self.billed_by_job: Dict[str, List[float]] = {}
+        self.cost_by_job: Dict[str, float] = {}
+
+    @property
+    def keep_alive_s(self) -> float:
+        return self.profile.keep_alive_s
+
+    def add_job(self, job_id: str, backend: SimFaaSBackend) -> None:
+        self.backends[job_id] = backend
+
+    def begin_run(self, parallelism: int) -> None:
+        self._sim_jobs = []
+        for jid in sorted(self.backends):
+            self.backends[jid].begin_run(parallelism)
+
+    def spawn_instance(self, inv, t, slot):
+        return self.backends[inv.job_id].spawn_instance(inv, t, slot)
+
+    def simulate(self, inv, instance, t, overhead_s):
+        self._sim_jobs.append(inv.job_id)
+        return self.backends[inv.job_id].simulate(inv, instance, t,
+                                                  overhead_s)
+
+    def finalize(self, billed_seconds: List[float],
+                 wall_seconds: float) -> float:
+        """Per-job billing: the engine bills in simulate order, so the
+        recorded job ids partition the billed list exactly (including
+        hedge-cancellation caps applied by the engine)."""
+        grouped: Dict[str, List[float]] = {}
+        for b, jid in zip(billed_seconds, self._sim_jobs):
+            grouped.setdefault(jid, []).append(b)
+        total = 0.0
+        for jid, billed in sorted(grouped.items()):
+            cost = self.backends[jid].finalize(billed, wall_seconds)
+            self.billed_by_job[jid] = billed
+            self.cost_by_job[jid] = cost
+            total += cost
+        return total
+
+
+class _FleetObserver(EngineObserver):
+    """Routes engine results to jobs; meters per-job billing; preempts
+    jobs that exceed their budget (their remaining invocations are
+    skipped before dispatch, so they are neither executed nor billed)."""
+
+    def __init__(self, jobs: Dict[str, _JobExec], profile: ProviderProfile,
+                 preempt: bool):
+        self.jobs = jobs
+        self.profile = profile
+        self.preempt = preempt
+
+    def should_skip(self, inv) -> bool:
+        ex = self.jobs[inv.job_id]
+        if ex.cancelled:
+            ex.n_skipped += 1
+            ex.pending -= 1
+            return True
+        return False
+
+    def on_result(self, done: CompletedInvocation) -> None:
+        ex = self.jobs[done.invocation.job_id]
+        out = done.outcome
+        b = done.invocation.benchmark
+        ex.pending -= 1
+        ex.n_done += 1
+        ex.start_s = min(ex.start_s, done.t_start)
+        ex.end_s = max(ex.end_s, done.t_end)
+        ex.bench_inv[b] = ex.bench_inv.get(b, 0) + 1
+        ex.bench_billed[b] = ex.bench_billed.get(b, 0.0) + out.duration_s
+        ex.billed_s += out.duration_s
+        ex.cost_est += self.profile.billed_cost(
+            [out.duration_s], ex.backend.memory_for(b))
+        if out.ok:
+            ex.executed.add(b)
+            ex.pairs.extend(out.pairs)
+        elif out.platform_failure:
+            ex.infra_failed.add(b)      # transient: condemned only if the
+            #                             benchmark never succeeds at all
+        else:
+            ex.failed.add(b)
+        budget = ex.job.budget_usd
+        if (self.preempt and budget is not None and not ex.cancelled
+                and ex.cost_est > budget):
+            ex.cancelled = True
+            ex.preempted = True
+
+
+class _Fleet:
+    """One provider fleet: engine + persistent warm pool + fair queue."""
+
+    def __init__(self, provider: str, parallelism: int, cfg: ServiceConfig):
+        if provider == VM_PROVIDER:
+            raise ValueError("the service schedules elastic FaaS fleets; "
+                             "the VM baseline runs standalone")
+        self.provider = provider
+        self.parallelism = parallelism
+        self.profile = PROVIDER_PROFILES[provider]
+        self.router = _JobRouterBackend(self.profile)
+        self.engine = ExecutionEngine(
+            self.router, EngineConfig(parallelism=parallelism,
+                                      max_retries=cfg.max_retries))
+        self.warm_pool = WarmPool()
+        self.queue = FairQueue(weights=dict(cfg.tenant_weights))
+        self.jobs: Dict[str, _JobExec] = {}
+        self.clock_s = 0.0              # carried across run batches so the
+        #                                 shared warm pool's time stays
+        #                                 non-decreasing
+        self.cold_starts = 0
+        self.reports: List[EngineReport] = []
+
+    def enqueue(self, ex: _JobExec, plan: SuitePlan) -> None:
+        self.router.add_job(ex.job.job_id, ex.backend)
+        self.jobs[ex.job.job_id] = ex
+        repeats = ex.job.repeats_per_call
+        for inv in rmit.tag_plan(plan, ex.job.job_id).invocations:
+            wl = ex.job.workloads[inv.benchmark]
+            est_s = 2.0 * repeats * getattr(wl, "base_seconds", 1.0)
+            self.queue.push(ex.job.tenant, inv, size=est_s,
+                            weight_scale=ex.job.priority)
+
+    def run(self, cfg: ServiceConfig) -> List[_JobExec]:
+        """Execute everything queued; returns the jobs of this batch."""
+        order = [inv for _, inv in self.queue.drain()]
+        batch = [ex for ex in self.jobs.values() if ex.result is None]
+        if not order:
+            return batch
+        plan = SuitePlan(invocations=tuple(order), n_calls=0,
+                         repeats_per_call=0)
+        observer = _FleetObserver(self.jobs, self.profile,
+                                  cfg.preempt_over_budget)
+        rep = self.engine.run(plan, observer=observer,
+                              warm_pool=self.warm_pool,
+                              start_s=self.clock_s)
+        self.clock_s = max(self.clock_s, rep.wall_seconds)
+        self.cold_starts += rep.cold_starts
+        self.reports.append(rep)
+        for ex in batch:
+            ex.cost_final = self.router.cost_by_job.get(ex.job.job_id, 0.0)
+            billed = self.router.billed_by_job.get(ex.job.job_id, [])
+            # exact bill (includes retried attempts the observer never saw)
+            ex.billed_s = float(sum(billed))
+        return batch
+
+
+def jain_fairness(values: Sequence[float]) -> float:
+    """Jain's fairness index over per-tenant service: 1.0 = perfectly
+    even, 1/n = one tenant got everything."""
+    vals = [v for v in values]
+    if not vals or all(v == 0 for v in vals):
+        return 1.0
+    s = sum(vals)
+    return s * s / (len(vals) * sum(v * v for v in vals))
+
+
+@dataclass
+class ServiceReport:
+    """One `run()` batch: results in causal delivery order + accounting."""
+    results: List[JobResult]
+    makespan_s: float
+    total_cost_usd: float
+    total_billed_s: float
+    total_invocations: int
+    skipped_invocations: int
+    cold_starts: int
+    preempted_jobs: List[str]
+    tenant_billed_s: Dict[str, float]
+
+    @property
+    def fairness(self) -> float:
+        return jain_fairness(list(self.tenant_billed_s.values()))
+
+    def latencies_s(self) -> List[float]:
+        return [r.latency_s for r in self.results]
+
+    def p95_latency_s(self) -> float:
+        lats = sorted(self.latencies_s())
+        if not lats:
+            return 0.0
+        # nearest-rank percentile: ceil(p*n)-1 (int(p*n) returns the max
+        # whenever p*n is integral)
+        import math
+        return lats[min(len(lats) - 1,
+                        max(0, math.ceil(0.95 * len(lats)) - 1))]
+
+    def digest(self) -> str:
+        """Canonical schedule digest: job identity, completion times,
+        bills, and delivery order.  Seed-reproducible — two runs of the
+        same submissions must produce the same digest."""
+        h = hashlib.sha256()
+        for r in self.results:
+            h.update((f"{r.job_id}|{r.status}|{r.start_s:.6f}|"
+                      f"{r.end_s:.6f}|{r.billed_seconds:.6f}|"
+                      f"{r.cost_dollars:.9f}|{r.invocations}|"
+                      f"{r.skipped_invocations}\n").encode())
+        h.update(f"makespan={self.makespan_s:.6f}\n".encode())
+        return h.hexdigest()[:16]
+
+
+class BenchmarkService:
+    """Multi-tenant benchmarking service facade: submit jobs, run, get
+    causally ordered results.  `planner` (optional) turns deadline/budget
+    asks into concrete configurations at admission time."""
+
+    def __init__(self, cfg: Optional[ServiceConfig] = None, *,
+                 planner: Optional[DeadlineCostPlanner] = None):
+        self.cfg = cfg or ServiceConfig()
+        self.planner = planner
+        self._fleets: Dict[Tuple[str, int], _Fleet] = {}
+        self._submit_seq = 0
+        self._queued_total = 0
+        self._queued_tenant: Dict[str, int] = {}
+        self.rejected: List[Tuple[str, str]] = []   # (job_id, reason)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, job: Job, *, provider: str = "lambda",
+               memory_mb: Optional[int] = None,
+               memory_map: Optional[Dict[str, int]] = None,
+               parallelism: Optional[int] = None,
+               providers: Optional[Sequence[str]] = None) -> SubmitReceipt:
+        """Admit + plan + enqueue one job.  When the job carries a
+        deadline or budget and the service has a planner, the planner
+        chooses (provider, memory, fleet, repeat plan) among the service's
+        FaaS profiles; an infeasible ask raises AdmissionError (and is
+        recorded in `rejected`) without scheduling anything."""
+        from dataclasses import replace
+        cfg = self.cfg
+        chosen: Optional[CandidatePlan] = None
+        try:
+            # cheap capacity gate first (don't plan for a full queue) ...
+            check_admission(job, cfg.admission,
+                            queued_total=self._queued_total,
+                            queued_tenant=self._queued_tenant.get(job.tenant,
+                                                                  0))
+            if (self.planner is not None
+                    and (job.deadline_s is not None
+                         or job.budget_usd is not None)):
+                from repro.service.planner import InfeasiblePlanError
+                faas = tuple(p for p in (providers
+                                         or self.planner.cfg.providers)
+                             if p != VM_PROVIDER)
+                try:
+                    chosen = self.planner.plan(
+                        job.workloads, deadline_s=job.deadline_s,
+                        budget_usd=job.budget_usd, seed=cfg.seed,
+                        providers=faas)
+                except InfeasiblePlanError as exc:
+                    if cfg.admission.require_feasible:
+                        raise AdmissionError(job.job_id, str(exc)) from exc
+            if chosen is not None and (chosen.n_calls,
+                                       chosen.repeats_per_call) \
+                    != (job.n_calls, job.repeats_per_call):
+                # the caller's Job stays untouched (it may be resubmitted
+                # elsewhere); the chosen repeat plan is re-validated
+                # against the invocation cap it may have grown past
+                job = replace(job, n_calls=chosen.n_calls,
+                              repeats_per_call=chosen.repeats_per_call)
+                check_admission(job, cfg.admission,
+                                queued_total=self._queued_total,
+                                queued_tenant=self._queued_tenant.get(
+                                    job.tenant, 0))
+        except AdmissionError as exc:
+            self.rejected.append((exc.job_id, exc.reason))
+            raise
+        if chosen is not None:
+            provider = chosen.provider
+            memory_mb = chosen.memory_mb or cfg.memory_mb
+            memory_map = chosen.memory_map_dict()
+            parallelism = chosen.parallelism
+
+        mem = memory_mb if memory_mb is not None else cfg.memory_mb
+        par = parallelism if parallelism is not None else cfg.parallelism
+        fleet = self._fleet(provider, par)
+        backend = SimFaaSBackend(job.workloads, fleet.profile,
+                                 memory_mb=mem, seed=job.seed,
+                                 memory_map=memory_map)
+        suite_plan = rmit.make_plan(sorted(job.workloads),
+                                    n_calls=job.n_calls,
+                                    repeats_per_call=job.repeats_per_call,
+                                    seed=job.seed)
+        ex = _JobExec(job, backend, provider, mem, self._submit_seq,
+                      fleet.clock_s, len(suite_plan.invocations), chosen)
+        self._submit_seq += 1
+        fleet.enqueue(ex, suite_plan)
+        self._queued_total += 1
+        self._queued_tenant[job.tenant] = \
+            self._queued_tenant.get(job.tenant, 0) + 1
+        return SubmitReceipt(job_id=job.job_id, provider=provider,
+                             memory_mb=mem, parallelism=par,
+                             n_invocations=len(suite_plan.invocations),
+                             plan=chosen)
+
+    def _fleet(self, provider: str, parallelism: int) -> _Fleet:
+        key = (provider, parallelism)
+        if key not in self._fleets:
+            self._fleets[key] = _Fleet(provider, parallelism, self.cfg)
+        return self._fleets[key]
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> ServiceReport:
+        """Execute every queued job to completion (virtual time), then
+        deliver results: per tenant in submission order, at delivery
+        times that never precede the underlying completions."""
+        batch: List[_JobExec] = []
+        for key in sorted(self._fleets):
+            batch.extend(self._fleets[key].run(self.cfg))
+        for ex in batch:
+            ex.result = self._job_result(ex)
+            self._queued_total -= 1
+            self._queued_tenant[ex.job.tenant] -= 1
+        # retire delivered jobs: a long-lived service must not re-seed or
+        # rescan every backend it ever saw on the next batch (the
+        # _JobExec itself stays alive only through the returned results)
+        for fleet in self._fleets.values():
+            for jid in [j for j, ex in fleet.jobs.items()
+                        if ex.result is not None]:
+                del fleet.jobs[jid]
+                fleet.router.backends.pop(jid, None)
+                fleet.router.billed_by_job.pop(jid, None)
+                fleet.router.cost_by_job.pop(jid, None)
+
+        # causal delivery: a tenant's jobs arrive in submission order, at
+        # a time >= every earlier result of that tenant (commit N+1 of a
+        # pipeline can never land before commit N); across tenants,
+        # deliveries interleave in virtual-time order
+        deliveries: List[Tuple[float, int, _JobExec]] = []
+        by_tenant: Dict[str, List[_JobExec]] = {}
+        for ex in batch:
+            by_tenant.setdefault(ex.job.tenant, []).append(ex)
+        for tenant in sorted(by_tenant):
+            t_causal = 0.0
+            for ex in sorted(by_tenant[tenant], key=lambda e: e.submit_seq):
+                t_causal = max(t_causal, ex.result.end_s)
+                deliveries.append((t_causal, ex.submit_seq, ex))
+        deliveries.sort(key=lambda d: (d[0], d[1]))
+
+        results = []
+        tenant_billed: Dict[str, float] = {}
+        for _, _, ex in deliveries:
+            results.append(ex.result)
+            tenant_billed[ex.job.tenant] = \
+                tenant_billed.get(ex.job.tenant, 0.0) + ex.billed_s
+            if ex.job.callback is not None:
+                ex.job.callback(ex.result)
+
+        return ServiceReport(
+            results=results,
+            makespan_s=max((r.end_s for r in results), default=0.0),
+            total_cost_usd=sum(r.cost_dollars for r in results),
+            total_billed_s=sum(r.billed_seconds for r in results),
+            total_invocations=sum(r.invocations for r in results),
+            skipped_invocations=sum(r.skipped_invocations for r in results),
+            cold_starts=sum(f.cold_starts for f in self._fleets.values()),
+            preempted_jobs=[r.job_id for r in results if r.preempted],
+            tenant_billed_s=tenant_billed)
+
+    # -------------------------------------------------------------- build
+    def _job_result(self, ex: _JobExec) -> JobResult:
+        job = ex.job
+        changes = analyze(ex.pairs, seed=job.seed,
+                          min_results=job.min_results)
+        start = 0.0 if ex.start_s == float("inf") else ex.start_s
+        end = max(ex.end_s, start)
+        latency = end - ex.enqueue_clock_s
+        failed = ex.failed | (ex.infra_failed - ex.executed)
+        return JobResult(
+            job_id=job.job_id, tenant=job.tenant,
+            status=JOB_PREEMPTED if ex.preempted else JOB_COMPLETED,
+            changes=changes,
+            executed_benchmarks=sorted(ex.executed - failed),
+            failed_benchmarks=sorted(failed),
+            invocations=ex.n_done, skipped_invocations=ex.n_skipped,
+            billed_seconds=ex.billed_s, cost_dollars=ex.cost_final,
+            start_s=start, end_s=end, latency_s=latency,
+            met_deadline=None if job.deadline_s is None
+            else latency <= job.deadline_s,
+            within_budget=None if job.budget_usd is None
+            else ex.cost_final <= job.budget_usd,
+            provider=ex.provider, memory_mb=ex.memory_mb,
+            benchmark_invocations=dict(ex.bench_inv),
+            benchmark_billed_s=dict(ex.bench_billed))

@@ -162,3 +162,100 @@ def test_cli_smoke(tmp_path, capsys):
     from repro.cb import HistoryStore
     assert len(HistoryStore(hpath)) > 0
     assert (tmp_path / "history.sqlite").exists()
+
+
+# --------------------------------------------------------------- service
+def test_service_mode_matches_inline_selection(stream):
+    """A stream run through the service makes the same selection
+    decisions, runs the same invocation counts, and flags the same
+    benchmarks as the inline run (measurement order differs, platform
+    draws are per-job — detections agree on this quiet stream)."""
+    from repro.service import BenchmarkService, ServiceConfig
+    w, commits, _ = stream
+    cfg = dict(provider="gcf", mode="selective", n_calls=8, seed=5)
+    inline = Pipeline(SyntheticSuite(dict(w)),
+                      PipelineConfig(**cfg)).run_stream(commits)
+    svc = BenchmarkService(ServiceConfig())
+    service = Pipeline(SyntheticSuite(dict(w)), PipelineConfig(**cfg)) \
+        .run_stream_service(commits, svc, tenant="t0")
+    assert [c.ran for c in inline.commits] == \
+           [c.ran for c in service.commits]
+    assert [c.skipped for c in inline.commits] == \
+           [c.skipped for c in service.commits]
+    assert inline.total_invocations == service.total_invocations
+    # detections agree up to borderline CIs (service delivers pairs in
+    # completion order, inline in dispatch order; the bootstrap is
+    # order-sensitive, so a near-threshold flag may flip either way)
+    disagree = sum(
+        len(set(a.flagged) ^ set(b.flagged))
+        for a, b in zip(inline.commits, service.commits))
+    assert disagree <= 2
+    # commits share the fleet's warm pool in service mode: never dearer
+    assert service.total_cost <= inline.total_cost
+
+
+def test_cli_service_mode_smoke(capsys):
+    rc = cli_main(["--commits", "3", "--n-calls", "6", "--providers",
+                   "lambda", "--mode", "selective", "--seed", "3",
+                   "--jobs", "2"])
+    assert rc == 0
+    summary = json.loads(capsys.readouterr().out.strip().splitlines()[0])
+    assert summary["service"] is True
+    assert summary["tenants"] == 2
+    assert summary["jobs"] >= 2
+    assert 0.0 < summary["fairness_jain"] <= 1.0
+    assert summary["digest"]
+
+
+def test_cli_infeasible_plan_exits_nonzero(capsys):
+    """--deadline nobody can meet: loud failure, exit code 2 (this used
+    to be silently impossible to even ask for)."""
+    rc = cli_main(["--commits", "3", "--n-calls", "6", "--providers",
+                   "lambda", "--mode", "selective", "--seed", "3",
+                   "--deadline", "0.5"])
+    assert rc == 2
+    assert "infeasible" in capsys.readouterr().err
+
+
+def test_preempted_job_neither_caches_nor_marks_unrun_benchmarks(stream):
+    """A budget-preempted commit job must not poison future streams: the
+    benchmarks it never ran get no cache entry (a later selective_cached
+    run would skip re-measuring the pair) and no staleness credit (the
+    A/A revalidation clock must not count a measurement that never
+    happened)."""
+    from repro.service import BenchmarkService, ServiceConfig
+    w, commits, _ = stream
+    # parallelism 4: the jobs run in waves, so the budget preemption has
+    # undispatched work left to cancel (in-flight work is never retracted)
+    pipe = Pipeline(SyntheticSuite(dict(w)), PipelineConfig(
+        provider="lambda", mode="selective_cached", n_calls=8, seed=5,
+        parallelism=4))
+    svc = BenchmarkService(ServiceConfig(parallelism=4))
+    rep = pipe.run_stream_service(commits[:4], svc, tenant="t0",
+                                  budget_usd=1e-5)    # preempts instantly
+    preempted = [c for c in rep.commits if c.invocations < 8 * len(c.ran)]
+    assert preempted                      # the tiny budget actually bit
+    for c in preempted:
+        run = next(cc for cc in commits if cc.commit_id == c.commit_id)
+        for b in c.ran:
+            if b in c.changes:
+                continue                  # measured before the preemption
+            # not cached: a rerun of the same fingerprint pair re-measures
+            fp2 = run.fingerprints[b]
+            fp1 = next(p for p in commits
+                       if p.index == run.index - 1).fingerprints.get(b, "")
+            assert pipe.cache.get(b, fp1, fp2,
+                                  pipe.cfg.config_digest()) is None
+            # staleness clock rolled back to the pre-mark value
+            assert pipe.selector.last_measured(b) != run.index
+
+
+def test_cli_planned_deadline_smoke(capsys):
+    rc = cli_main(["--commits", "3", "--n-calls", "6", "--providers",
+                   "lambda,azure", "--mode", "selective", "--seed", "3",
+                   "--deadline", "1800"])
+    assert rc == 0
+    lines = capsys.readouterr().out.strip().splitlines()
+    summary = json.loads(lines[0])
+    assert summary["service"] is True
+    assert "planned_provider" in summary

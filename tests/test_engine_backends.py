@@ -151,6 +151,53 @@ def test_virtual_hedging_reissues_stragglers():
     assert len(grouped["slowpoke"]) == 6 * plan.repeats_per_call
 
 
+def test_hedged_twin_is_billed_only_until_cancellation():
+    """Regression: a hedged invocation's losing twin used to be billed at
+    its full modeled duration; real platforms cancel the loser the moment
+    the winner completes, billing it only until then.  The schedule and
+    results are unchanged — only billing (and the wall contribution of a
+    cancelled loser) shrink.  Total billed ms is pinned: the pre-fix
+    engine billed 1,149,752 ms on this exact run."""
+    suite = _suite(6)
+    suite["slowpoke"] = SimWorkload(name="slowpoke", base_seconds=15.0,
+                                    effect_pct=0.0, setup_seconds=2.0)
+    plan = rmit.make_plan(sorted(suite), n_calls=6, seed=8)
+    cfg = EngineConfig(parallelism=4, hedge_after_factor=3.0,
+                       hedge_min_samples=4, hedge_min_s=0.5)
+    rep = ExecutionEngine(LambdaLikeBackend(suite, seed=8), cfg).run(plan)
+    assert rep.hedged == 5
+    total_billed_ms = round(sum(rep.billed_seconds) * 1000)
+    assert total_billed_ms == 1_072_552          # < 1,149,752 pre-fix
+    assert total_billed_ms < 1_149_752
+    # the cancellation never drops results: same pairs as the pinned run
+    assert sum(1 for p in rep.pairs if p.benchmark == "slowpoke") == 18
+    # unhedged runs are untouched by the cancellation logic
+    rep2 = ExecutionEngine(LambdaLikeBackend(suite, seed=8),
+                           EngineConfig(parallelism=4)).run(plan)
+    assert rep2.hedged == 0
+    assert len(rep2.billed_seconds) == len(plan.invocations)
+
+
+def test_engine_accepts_shared_warm_pool():
+    """Two engine runs sharing one WarmPool (with a carried virtual
+    clock) reuse each other's instances: the second run cold-starts less
+    than a cold fleet would."""
+    from repro.faas.engine import WarmPool
+    suite = _suite(5)
+    plan = rmit.make_plan(sorted(suite), n_calls=6, seed=9)
+    pool = WarmPool()
+    be = LambdaLikeBackend(suite, seed=9)
+    eng = ExecutionEngine(be, EngineConfig(parallelism=8))
+    r1 = eng.run(plan, warm_pool=pool)
+    assert r1.cold_starts > 0
+    r2 = eng.run(plan, warm_pool=pool, start_s=r1.wall_seconds)
+    assert r2.cold_starts == 0       # fully served from the shared pool
+    # isolated control: a fresh pool pays the cold starts again
+    r3 = ExecutionEngine(LambdaLikeBackend(suite, seed=9),
+                         EngineConfig(parallelism=8)).run(plan)
+    assert r3.cold_starts == r1.cold_starts
+
+
 # ------------------------------------------------------------- VM backend
 def test_vm_backend_pins_instances_to_slots():
     suite = _suite(4)

@@ -1,0 +1,106 @@
+"""Weighted-fair queue: proportional share, per-tenant FIFO, and the WFQ
+starvation-freedom guarantee under adversarial load."""
+import pytest
+
+from repro.service.queue import FairQueue
+
+
+def test_equal_weights_interleave_fairly():
+    q = FairQueue()
+    for i in range(6):
+        q.push("a", f"a{i}", size=1.0)
+        q.push("b", f"b{i}", size=1.0)
+    order = [t for t, _ in q.drain()]
+    # equal weights, equal sizes: strict alternation (ties by push seq)
+    assert order == ["a", "b"] * 6
+
+
+def test_weighted_share_is_proportional():
+    q = FairQueue(weights={"heavy": 3.0, "light": 1.0})
+    for i in range(30):
+        q.push("heavy", f"h{i}", size=1.0)
+    for i in range(10):
+        q.push("light", f"l{i}", size=1.0)
+    first = [t for t, _ in [q.pop() for _ in range(12)]]
+    # over any prefix the 3:1 weight ratio shows up in service order
+    assert first.count("heavy") == 9
+    assert first.count("light") == 3
+
+
+def test_per_tenant_fifo():
+    q = FairQueue()
+    for i in range(5):
+        q.push("a", i, size=float(1 + i % 3))
+    out = [item for t, item in q.drain()]
+    assert out == [0, 1, 2, 3, 4]
+
+
+def test_priority_scale_shrinks_virtual_size():
+    q = FairQueue()
+    q.push("a", "slow", size=4.0)
+    q.push("b", "prio", size=4.0, weight_scale=4.0)
+    assert q.pop()[1] == "prio"
+
+
+def test_starvation_freedom_under_flood():
+    """A light tenant's single item must be served within a bounded
+    number of pops no matter how much a heavy tenant queued before it —
+    and no matter how much it keeps queueing afterwards."""
+    q = FairQueue()
+    for i in range(500):
+        q.push("heavy", f"h{i}", size=1.0)
+    # drain part of the backlog so the virtual clock has advanced
+    for _ in range(100):
+        q.pop()
+    q.push("light", "the-one", size=1.0)
+    # the flood continues *after* the light item arrived
+    for i in range(500):
+        q.push("heavy", f"h2-{i}", size=1.0)
+    pops_until_light = 0
+    while True:
+        tenant, item = q.pop()
+        pops_until_light += 1
+        if item == "the-one":
+            break
+    # its finish tag was assigned on push and never grows: only the
+    # (bounded) set of items with smaller tags can precede it, none of
+    # the 500 later arrivals can
+    assert pops_until_light <= 3
+    assert len(q) >= 500
+
+
+def test_late_tenant_gets_no_retroactive_credit():
+    """A tenant arriving mid-run starts at the current virtual horizon:
+    it cannot claim the service it 'missed' and monopolize the fleet."""
+    q = FairQueue()
+    for i in range(50):
+        q.push("a", f"a{i}", size=1.0)
+    for _ in range(40):
+        q.pop()
+    for i in range(10):
+        q.push("late", f"l{i}", size=1.0)
+    order = [t for t, _ in q.drain()]
+    # the late tenant interleaves with the remaining backlog instead of
+    # flushing all ten items first
+    assert order[:4].count("late") <= 2
+    assert set(order) == {"a", "late"}
+
+
+def test_weight_validation():
+    q = FairQueue()
+    with pytest.raises(ValueError):
+        q.set_weight("a", 0.0)
+    with pytest.raises(ValueError):
+        FairQueue(weights={"a": -1.0})
+    with pytest.raises(IndexError):
+        q.pop()
+
+
+def test_drain_is_deterministic():
+    def build():
+        q = FairQueue(weights={"x": 2.0})
+        for i in range(20):
+            q.push("x" if i % 3 else "y", i, size=0.5 + (i % 4))
+        return [t for t, _ in q.drain()]
+
+    assert build() == build()

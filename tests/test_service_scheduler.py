@@ -1,0 +1,228 @@
+"""Benchmarking-as-a-service scheduler: deterministic multiplexed
+schedules (golden digest at 16 concurrent commit-stream tenants), shared
+warm pools, over-budget preemption, causal delivery, and admission."""
+import pytest
+
+from repro.core import rmit
+from repro.core.experiment import (run_multi_tenant_experiment,
+                                   victoriametrics_like_suite)
+from repro.faas.backends import PROVIDER_PROFILES, SimFaaSBackend
+from repro.faas.engine import EngineConfig, ExecutionEngine
+from repro.faas.platform import SimWorkload
+from repro.service import (AdmissionConfig, AdmissionError, BenchmarkService,
+                           Job, ServiceConfig)
+
+# seed-pinned digest of the N=16-tenant multi-tenant experiment (48
+# concurrent commit-stream jobs on one lambda fleet).  The whole virtual
+# schedule — dispatch order, completion times, per-job bills, delivery
+# order — must replay bit-for-bit from the seed.
+GOLDEN_16_TENANT_DIGEST = "65e8852bf2dce3a7"
+
+
+def _suite(n=10):
+    full = victoriametrics_like_suite()
+    return {k: v for k, v in sorted(full.items())[:2 * n]
+            if not v.fs_write and v.base_seconds < 10.0}
+
+
+def _job(jid, tenant, workloads, **kw):
+    kw.setdefault("n_calls", 5)
+    kw.setdefault("repeats_per_call", 2)
+    kw.setdefault("seed", sum(ord(c) for c in jid) % 1000)
+    return Job(job_id=jid, tenant=tenant, workloads=workloads, **kw)
+
+
+# ------------------------------------------------------------ determinism
+def test_sixteen_concurrent_streams_golden_digest():
+    """Acceptance: >=16 concurrent commit-stream jobs, seed-reproducible
+    schedule.  Two fresh services must produce identical digests, and the
+    digest must match the pinned golden value."""
+    r1 = run_multi_tenant_experiment(16, provider="lambda", seed=34)
+    assert r1.jobs >= 16
+    assert r1.fairness > 0.9
+    r2 = run_multi_tenant_experiment(16, provider="lambda", seed=34)
+    assert r1.digest == r2.digest
+    assert r1.digest == GOLDEN_16_TENANT_DIGEST
+
+
+def test_single_job_replays_standalone_engine_run():
+    """One job alone on a fleet is exactly an engine run of its tagged
+    plan: same pairs, same billing — multiplexing adds nothing when there
+    is nothing to multiplex."""
+    wl = _suite(6)
+    svc = BenchmarkService(ServiceConfig(parallelism=8))
+    svc.submit(_job("solo", "a", wl, seed=7), provider="gcf")
+    rep = svc.run()
+    res = rep.results[0]
+
+    backend = SimFaaSBackend(wl, PROVIDER_PROFILES["gcf"], memory_mb=2048,
+                             seed=7)
+    plan = rmit.make_plan(sorted(wl), n_calls=5, repeats_per_call=2, seed=7)
+    ref = ExecutionEngine(backend, EngineConfig(parallelism=8)).run(plan)
+    assert res.billed_seconds == pytest.approx(sum(ref.billed_seconds))
+    assert res.cost_dollars == pytest.approx(ref.cost_dollars)
+    assert res.invocations == len(ref.billed_seconds)
+    assert res.executed_benchmarks == ref.executed_benchmarks
+
+
+# ------------------------------------------------------ shared warm pools
+def test_shared_warm_pool_saves_cold_starts():
+    """Jobs sharing a fleet reuse each other's warm instances: the
+    fleet's total cold starts must be well below the sum of the same
+    jobs run on isolated fleets."""
+    wl = _suite(8)
+
+    def submit_all(svc):
+        for i in range(4):
+            svc.submit(_job(f"j{i}", f"t{i}", wl, seed=50 + i),
+                       provider="lambda")
+
+    shared = BenchmarkService(ServiceConfig(parallelism=20))
+    submit_all(shared)
+    shared.run()
+    shared_cold = sum(f.cold_starts for f in shared._fleets.values())
+
+    isolated_cold = 0
+    for i in range(4):
+        svc = BenchmarkService(ServiceConfig(parallelism=20))
+        svc.submit(_job(f"j{i}", f"t{i}", wl, seed=50 + i),
+                   provider="lambda")
+        svc.run()
+        isolated_cold += sum(f.cold_starts for f in svc._fleets.values())
+
+    assert shared_cold < isolated_cold / 2
+
+
+# ------------------------------------------------------------- preemption
+def test_over_budget_job_is_preempted():
+    wl = _suite(8)
+    svc = BenchmarkService(ServiceConfig(parallelism=10))
+    svc.submit(_job("rich", "a", wl, seed=1), provider="lambda")
+    svc.submit(_job("poor", "b", wl, seed=2, budget_usd=0.0005),
+               provider="lambda")
+    rep = svc.run()
+    assert rep.preempted_jobs == ["poor"]
+    poor = next(r for r in rep.results if r.job_id == "poor")
+    rich = next(r for r in rep.results if r.job_id == "rich")
+    assert poor.status == "preempted"
+    assert poor.skipped_invocations > 0
+    assert poor.within_budget is False
+    # the preempted job's unexecuted work is neither billed nor run, and
+    # the co-tenant is unaffected
+    assert poor.invocations + poor.skipped_invocations == rich.invocations
+    assert poor.cost_dollars < rich.cost_dollars
+
+
+def test_preemption_frees_capacity_for_other_jobs():
+    wl = _suite(8)
+
+    def run(with_poor):
+        svc = BenchmarkService(ServiceConfig(parallelism=4))
+        svc.submit(_job("rich", "a", wl, seed=1), provider="lambda")
+        if with_poor:
+            svc.submit(_job("poor", "b", wl, seed=2, budget_usd=0.0005),
+                       provider="lambda")
+        rep = svc.run()
+        return next(r for r in rep.results if r.job_id == "rich")
+
+    alone = run(with_poor=False)
+    shared = run(with_poor=True)
+    # the rich job still finishes (skips release slots), within 2x of its
+    # isolated makespan on this narrow fleet
+    assert shared.end_s < 2.0 * alone.end_s
+
+
+# -------------------------------------------------------- causal delivery
+def test_tenant_results_delivered_in_submission_order():
+    """A tenant's small second job can complete before its big first job
+    in virtual time, but must never be *delivered* first (pipeline
+    commits rely on this)."""
+    big = {f"slow{i}": SimWorkload(name=f"slow{i}", base_seconds=6.0 + i,
+                                   effect_pct=0.0, setup_seconds=1.0)
+           for i in range(4)}
+    small = {"fast": SimWorkload(name="fast", base_seconds=0.2,
+                                 effect_pct=0.0, setup_seconds=0.5)}
+    svc = BenchmarkService(ServiceConfig(parallelism=6))
+    svc.submit(_job("first-big", "t", big, n_calls=8, seed=3),
+               provider="lambda")
+    svc.submit(_job("second-small", "t", small, n_calls=2, seed=4),
+               provider="lambda")
+    rep = svc.run()
+    order = [r.job_id for r in rep.results]
+    assert order == ["first-big", "second-small"]
+    first = rep.results[0]
+    second = rep.results[1]
+    # the small job genuinely finished earlier — delivery was held back
+    assert second.end_s < first.end_s
+
+
+def test_fair_share_across_tenants():
+    wl = _suite(8)
+    svc = BenchmarkService(ServiceConfig(parallelism=12))
+    for t in range(4):
+        svc.submit(_job(f"job{t}", f"tenant{t}", wl, seed=60 + t),
+                   provider="lambda")
+    rep = svc.run()
+    assert rep.fairness > 0.95
+    # equal demand, equal weights: per-tenant bills within 25% of mean
+    bills = list(rep.tenant_billed_s.values())
+    mean = sum(bills) / len(bills)
+    assert all(abs(b - mean) / mean < 0.25 for b in bills)
+
+
+# --------------------------------------------------------------- admission
+def test_admission_rejects_over_capacity():
+    wl = _suite(4)
+    svc = BenchmarkService(ServiceConfig(
+        admission=AdmissionConfig(max_queued_jobs=1)))
+    svc.submit(_job("ok", "a", wl), provider="lambda")
+    with pytest.raises(AdmissionError):
+        svc.submit(_job("overflow", "b", wl), provider="lambda")
+    assert svc.rejected == [("overflow",
+                             svc.rejected[0][1])]  # reason recorded
+    rep = svc.run()
+    assert [r.job_id for r in rep.results] == ["ok"]
+
+
+def test_admission_rejects_tenant_flood():
+    wl = _suite(4)
+    svc = BenchmarkService(ServiceConfig(
+        admission=AdmissionConfig(max_jobs_per_tenant=2)))
+    svc.submit(_job("a1", "loud", wl), provider="lambda")
+    svc.submit(_job("a2", "loud", wl), provider="lambda")
+    with pytest.raises(AdmissionError):
+        svc.submit(_job("a3", "loud", wl), provider="lambda")
+    # other tenants are unaffected
+    svc.submit(_job("b1", "quiet", wl), provider="lambda")
+
+
+def test_vm_fleet_rejected():
+    with pytest.raises(ValueError):
+        BenchmarkService(ServiceConfig())._fleet("vm", 3)
+
+
+def test_empty_job_rejected():
+    with pytest.raises(ValueError):
+        Job(job_id="x", tenant="t", workloads={})
+
+
+# -------------------------------------------------- per-benchmark memory
+def test_job_with_memory_map_is_billed_per_benchmark():
+    """A job carrying an autotuned memory map must be billed at the
+    mapped sizes — cheaper than the same job at uniform 2048 MB (all its
+    benchmarks sit above the Lambda vCPU knee at 1792 MB)."""
+    wl = {k: v for k, v in _suite(8).items()}
+    base = BenchmarkService(ServiceConfig(parallelism=10))
+    base.submit(_job("uniform", "a", wl, seed=5), provider="lambda",
+                memory_mb=2048)
+    uniform = base.run().results[0]
+
+    tuned_svc = BenchmarkService(ServiceConfig(parallelism=10))
+    tuned_svc.submit(_job("tuned", "a", wl, seed=5), provider="lambda",
+                     memory_mb=2048,
+                     memory_map={b: 1792 for b in wl})
+    tuned = tuned_svc.run().results[0]
+    assert tuned.invocations == uniform.invocations
+    assert tuned.cost_dollars < uniform.cost_dollars
+    # same detections: above the knee the speed is identical
+    assert set(tuned.executed_benchmarks) == set(uniform.executed_benchmarks)
