@@ -134,7 +134,11 @@ class KernelSuite(BenchmarkSuite):
             provider: str = "local", n_calls: int = 12,
             repeats_per_call: int = 1, parallelism: int = 1,
             memory_mb: int = 0, seed: int = 0, min_results: int = 10,
-            adaptive: bool = False, observer=None) -> SuiteRunResult:
+            adaptive: bool = False, chaos=None,
+            observer=None) -> SuiteRunResult:
+        if chaos is not None:
+            raise ValueError("fault injection wraps virtual-time backends; "
+                             "the kernel suite runs real host timings")
         duets = {b: self._build()[b] for b in benchmarks}
         plan = rmit.make_plan(sorted(duets), n_calls=n_calls,
                               repeats_per_call=repeats_per_call, seed=seed)

@@ -65,6 +65,15 @@ class DetectorConfig:
     z_threshold: float = 3.5        # |z| above which a window is an event
     min_cumulative_pct: float = 2.0  # ignore windows below the noise floor
     max_se_floor: float = 1e-6      # windows need at least one measured step
+    # robust opt-in: clip each commit's step estimate to +/- this many of
+    # its own standard errors before the window scan (0 disables, the
+    # bit-identical historical behavior).  One chaos-corrupted commit
+    # (billing anomaly, contaminated run) can otherwise carry a whole
+    # window past the threshold on its own; Huber-style clipping bounds
+    # any single commit's pull at step_clip_z standard errors while
+    # leaving genuine multi-commit drifts (many small same-sign steps)
+    # untouched.
+    step_clip_z: float = 0.0
 
 
 def record_to_point(r: HistoryRecord) -> SeriesPoint:
@@ -103,6 +112,9 @@ class RegressionDetector:
             return None
         med = np.array([p.median for p in pts])
         se = np.array([p.se for p in pts])
+        if cfg.step_clip_z > 0.0:
+            bound = cfg.step_clip_z * se       # se==0 -> unchanged step 0
+            med = np.clip(med, -bound, bound)
         # shifted layout: row i, column t -> commit i+t (0.0 past the end,
         # which leaves the running sums unchanged, like the loop stopping)
         ii = np.arange(m)[:, None] + np.arange(m)[None, :]
@@ -127,11 +139,13 @@ class RegressionDetector:
         i, t = divmod(int(flat), m)
         j = i + t
         s_best = float(s[i, t])
-        window = pts[i:j + 1]
         # a window is a *step* if individually-flagged commits already
         # explain most of its mass; otherwise the change only exists in
-        # aggregate — a drift
-        flagged_mass = sum(p.median for p in window if p.flagged)
+        # aggregate — a drift.  Uses the (possibly clipped) step values:
+        # comparing raw flagged magnitudes against a clipped window sum
+        # would let one corrupted flagged commit claim the whole window.
+        flagged_mass = sum(float(med[k]) for k in range(i, j + 1)
+                           if pts[k].flagged)
         kind = "step" if abs(flagged_mass) >= 0.5 * abs(s_best) else "drift"
         return RegressionEvent(
             benchmark=benchmark,

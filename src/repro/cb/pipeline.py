@@ -55,15 +55,26 @@ class PipelineConfig:
     max_staleness: int = 5
     adaptive: bool = False          # attach the AdaptiveController per run
     detector: DetectorConfig = field(default_factory=DetectorConfig)
+    chaos: object = None            # faas/chaos.py ChaosConfig (None = calm;
+    #                                 zero intensity is a tested identity)
 
     def config_digest(self) -> str:
-        """Cache comparability key: every knob that shapes a measurement."""
-        return config_digest(suite=self.suite, provider=self.provider,
-                             n_calls=self.n_calls,
-                             repeats_per_call=self.repeats_per_call,
-                             memory_mb=self.memory_mb,
-                             min_results=self.min_results,
-                             adaptive=self.adaptive)
+        """Cache comparability key: every knob that shapes a measurement.
+
+        An active chaos scenario shapes measurements too — calm cached
+        results must never serve a chaos run (or vice versa), so the
+        scenario repr joins the digest.  Inactive chaos (None or zero
+        intensity) measures identically to calm (the tested identity)
+        and keeps the historical digest."""
+        kw = dict(suite=self.suite, provider=self.provider,
+                  n_calls=self.n_calls,
+                  repeats_per_call=self.repeats_per_call,
+                  memory_mb=self.memory_mb,
+                  min_results=self.min_results,
+                  adaptive=self.adaptive)
+        if self.chaos is not None and getattr(self.chaos, "active", True):
+            kw["chaos"] = repr(self.chaos)
+        return config_digest(**kw)
 
 
 class _BenchmarkMeter(EngineObserver):
@@ -186,7 +197,7 @@ class Pipeline:
                 n_calls=cfg.n_calls, repeats_per_call=cfg.repeats_per_call,
                 parallelism=cfg.parallelism, memory_mb=cfg.memory_mb,
                 seed=cfg.seed, min_results=cfg.min_results,
-                adaptive=cfg.adaptive, observer=meter)
+                adaptive=cfg.adaptive, chaos=cfg.chaos, observer=meter)
             changes = result.changes
             rep = result.report
             invocations = len(rep.billed_seconds)

@@ -49,8 +49,10 @@ class BenchmarkSuite:
             provider: str = "lambda", n_calls: int = 15,
             repeats_per_call: int = 3, parallelism: int = 150,
             memory_mb: int = 2048, seed: int = 0, min_results: int = 10,
-            adaptive: bool = False,
+            adaptive: bool = False, chaos=None,
             observer: Optional[EngineObserver] = None) -> SuiteRunResult:
+        """`chaos` is a faas/chaos.py ChaosConfig for simulated suites;
+        realtime suites must reject a non-None value."""
         raise NotImplementedError
 
     def job_workloads(self, benchmarks: List[str], commit: Commit) -> Dict:
@@ -136,7 +138,7 @@ class SyntheticSuite(BenchmarkSuite):
             provider: str = "lambda", n_calls: int = 15,
             repeats_per_call: int = 3, parallelism: int = 150,
             memory_mb: int = 2048, seed: int = 0, min_results: int = 10,
-            adaptive: bool = False,
+            adaptive: bool = False, chaos=None,
             observer: Optional[EngineObserver] = None) -> SuiteRunResult:
         from repro.faas.platform import make_provider_backend
         run_seed = _commit_seed(seed, commit)
@@ -146,7 +148,7 @@ class SyntheticSuite(BenchmarkSuite):
         backend = make_provider_backend(
             self._commit_workloads(benchmarks, commit), provider,
             memory_mb=memory_mb, seed=run_seed,
-            start_time_s=commit.timestamp_s)
+            start_time_s=commit.timestamp_s, chaos=chaos)
         return run_plan(backend, plan, parallelism=parallelism,
                         seed=run_seed, min_results=min_results,
                         adaptive=adaptive, observer=observer)

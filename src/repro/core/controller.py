@@ -114,6 +114,12 @@ class AdaptiveConfig:
     reallocate_frac     fraction of the *saved* invocations that may be
                         re-spent on noisy benchmarks (<=1 guarantees the
                         adaptive run never exceeds the fixed plan's count)
+    robust              "none" | "trim" | "winsor": the outlier-fenced CI
+                        variants (core/stats.py) for every interim check
+                        *and* the final analysis — on a chaos-perturbed
+                        platform (faas/chaos.py) contaminated pairs
+                        otherwise keep CIs wide and the controller never
+                        stops early
     """
     target_ci_pct: float = 2.0
     margin_pct: float = 1.25
@@ -126,6 +132,7 @@ class AdaptiveConfig:
     fail_skip_after: int = 3
     reallocate_frac: float = 0.25
     seed: int = 0
+    robust: str = "none"
 
 
 @dataclass
@@ -147,7 +154,7 @@ class AdaptiveController(EngineObserver):
         self.plan = plan
         self._analyzer = StreamingAnalyzer(
             n_boot=self.cfg.check_n_boot, seed=self.cfg.seed,
-            min_results=self.cfg.min_results)
+            min_results=self.cfg.min_results, robust=self.cfg.robust)
         self._pending = Counter(inv.benchmark for inv in plan.invocations)
         self._next_call: Dict[str, int] = {
             b: plan.n_calls for b in self._pending}

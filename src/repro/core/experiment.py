@@ -196,6 +196,158 @@ def run_vm_experiment(name: str, suite: Dict[str, SimWorkload], *,
     return ExperimentResult(name=name, report=report, changes=changes)
 
 
+# ------------------------------------------------------- chaos robustness
+@dataclass
+class ChaosExperimentResult:
+    """One suite run on a chaos-perturbed platform, analyzed twice over
+    the *same* pairs: the naive CI path and the outlier-robust path."""
+    name: str
+    report: SimReport
+    engine_report: EngineReport
+    changes_naive: Dict[str, stats.ChangeResult]
+    changes_robust: Dict[str, stats.ChangeResult]
+    chaos_stats: Dict[str, int]
+
+
+def run_chaos_experiment(name: str, suite: Dict[str, SimWorkload], *,
+                         provider: str = "lambda", chaos=None,
+                         robust: str = "trim", robust_k: float = 3.5,
+                         n_calls: int = 12,
+                         repeats_per_call: int = 3, parallelism: int = 150,
+                         memory_mb: int = 2048, seed: int = 0,
+                         start_time_s: float = 0.0, min_results: int = 10,
+                         max_retries: int = 1) -> ChaosExperimentResult:
+    """`run_faas_experiment` on a chaos-wrapped platform model.
+
+    The engine runs with retries enabled (losses, zombie hits, and storm
+    timeouts are transient platform failures) and the identical result
+    pairs are analyzed by both the naive and the robust CI path — any
+    accuracy gap between the two is attributable to the statistics, not
+    to the run."""
+    from repro.faas.chaos import ChaosBackend
+    plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
+                          repeats_per_call=repeats_per_call, seed=seed)
+    backend = _make_backend(suite, provider, memory_mb, seed, start_time_s)
+    chaos_stats: Dict[str, int] = {}
+    if chaos is not None:
+        backend = ChaosBackend(backend, chaos)
+    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism,
+                                                   max_retries=max_retries))
+    engine_report = engine.run(plan)
+    if chaos is not None:
+        chaos_stats = dict(backend.stats)
+    report = SimReport.from_engine(engine_report)
+    naive = analyze(report.pairs, seed=seed, min_results=min_results)
+    robust_changes = analyze(report.pairs, seed=seed,
+                             min_results=min_results, robust=robust,
+                             robust_k=robust_k)
+    return ChaosExperimentResult(
+        name=name, report=report, engine_report=engine_report,
+        changes_naive=naive, changes_robust=robust_changes,
+        chaos_stats=chaos_stats)
+
+
+@dataclass
+class ChaosCell:
+    """One (provider, intensity) cell of the chaos_robustness sweep,
+    averaged over `n_seeds` independently seeded runs (accuracy is a
+    small-count statistic — 106 benchmarks — so single-run cells are
+    +-2 benchmarks noisy; the mean over a few seeds is stable)."""
+    provider: str
+    intensity: float
+    n_seeds: int
+    accuracy_naive: float               # mean correct / 106
+    accuracy_robust: float
+    accuracy_naive_pct: float
+    accuracy_robust_pct: float
+    n_executed: float
+    ci_width_naive: float               # median CI width, mean over seeds
+    ci_width_robust: float
+    retries: int                        # totals over all seeds
+    lost: int
+    duplicates_dropped: int
+    timeouts: int
+    cost_usd: float
+    wall_s: float                       # mean makespan per run
+    chaos_stats: Dict[str, int]         # totals over all seeds
+
+
+def _median_ci_width(changes: Dict[str, stats.ChangeResult]) -> float:
+    widths = [c.ci_size for c in changes.values()]
+    return float(np.median(widths)) if widths else float("nan")
+
+
+def run_chaos_robustness_experiment(*, providers=("lambda", "gcf", "azure"),
+                                    intensities=(0.0, 1.0, 2.0),
+                                    seed: int = 0, suite_seed: int = 42,
+                                    n_calls: int = 12, seeds_per_cell: int = 3,
+                                    robust: str = "trim",
+                                    robust_k: float = 3.5,
+                                    max_retries: int = 1
+                                    ) -> List[ChaosCell]:
+    """Sweep fault intensity x provider and score detection accuracy of
+    the naive vs the robust statistics path against the suite's ground
+    truth — both paths analyze the *identical* chaos-perturbed pairs, so
+    the gap is attributable to the statistics alone.
+
+    Intensity 1 is the `moderate_chaos` scenario; 0 is the calm platform
+    (and, through the zero-intensity identity, a live conformance check
+    that the wrapper changes nothing); 2 doubles every fault rate and
+    regime amplitude.  Each cell averages `seeds_per_cell` runs."""
+    from repro.faas.chaos import moderate_chaos
+    suite = victoriametrics_like_suite(seed=suite_seed)
+    cells: List[ChaosCell] = []
+    for provider in providers:
+        for intensity in intensities:
+            acc_n: List[int] = []
+            acc_r: List[int] = []
+            execd: List[int] = []
+            wn: List[float] = []
+            wr: List[float] = []
+            walls: List[float] = []
+            retries = lost = dups = timeouts = 0
+            cost = 0.0
+            agg: Dict[str, int] = {}
+            for s in range(seeds_per_cell):
+                run_seed = seed + 101 * s
+                chaos = moderate_chaos(seed=run_seed).scaled(intensity)
+                res = run_chaos_experiment(
+                    f"chaos_{provider}_{intensity:g}_{run_seed}", suite,
+                    provider=provider, chaos=chaos, robust=robust,
+                    robust_k=robust_k, n_calls=n_calls, seed=run_seed,
+                    max_retries=max_retries)
+                rep = res.engine_report
+                acc_n.append(detection_accuracy(suite, res.changes_naive))
+                acc_r.append(detection_accuracy(suite, res.changes_robust))
+                execd.append(len(rep.executed_benchmarks))
+                wn.append(_median_ci_width(res.changes_naive))
+                wr.append(_median_ci_width(res.changes_robust))
+                walls.append(rep.wall_seconds)
+                retries += rep.retries
+                lost += rep.lost
+                dups += rep.duplicates_dropped
+                timeouts += rep.timeouts
+                cost += rep.cost_dollars
+                for k, v in res.chaos_stats.items():
+                    agg[k] = agg.get(k, 0) + v
+            n_bench = len(suite)
+            mean_n = float(np.mean(acc_n))
+            mean_r = float(np.mean(acc_r))
+            cells.append(ChaosCell(
+                provider=provider, intensity=float(intensity),
+                n_seeds=seeds_per_cell,
+                accuracy_naive=mean_n, accuracy_robust=mean_r,
+                accuracy_naive_pct=mean_n / n_bench * 100.0,
+                accuracy_robust_pct=mean_r / n_bench * 100.0,
+                n_executed=float(np.mean(execd)),
+                ci_width_naive=float(np.mean(wn)),
+                ci_width_robust=float(np.mean(wr)),
+                retries=retries, lost=lost, duplicates_dropped=dups,
+                timeouts=timeouts, cost_usd=cost,
+                wall_s=float(np.mean(walls)), chaos_stats=agg))
+    return cells
+
+
 # ----------------------------------------------- continuous benchmarking (cb)
 @dataclass
 class PipelineExperimentResult:
@@ -386,7 +538,8 @@ def run_multi_tenant_experiment(n_tenants: int, *,
                                 n_commits: int = 4, n_calls: int = 10,
                                 repeats_per_call: int = 3,
                                 parallelism: int = 150,
-                                seed: int = 0) -> MultiTenantResult:
+                                seed: int = 0,
+                                chaos=None) -> MultiTenantResult:
     """N concurrent commit-stream tenants sharing one service fleet.
 
     Every tenant owns an independent synthetic commit stream (distinct
@@ -399,7 +552,7 @@ def run_multi_tenant_experiment(n_tenants: int, *,
     from repro.service import BenchmarkService, ServiceConfig
     base = SyntheticSuite()
     service = BenchmarkService(ServiceConfig(parallelism=parallelism,
-                                             seed=seed))
+                                             seed=seed, chaos=chaos))
     pipelines = []
     for t in range(n_tenants):
         stream_seed = seed + 7919 * (t + 1)

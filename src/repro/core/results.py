@@ -86,11 +86,15 @@ def load_pairs(path: str) -> List[DuetPair]:
 
 def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE,
             n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
-            min_results: int = 10) -> Dict[str, ChangeResult]:
+            min_results: int = 10, robust: str = "none",
+            robust_k: float = 4.0) -> Dict[str, ChangeResult]:
     """Per-benchmark change detection over pair-aligned duet results.
 
     One `detect_changes_batch` call bootstraps the whole suite; identical
-    to a per-benchmark `detect_change` loop, several times faster."""
+    to a per-benchmark `detect_change` loop, several times faster.
+    ``robust="trim"``/``"winsor"`` opts into the outlier-fenced CI
+    variants (stats.py) — identical on outlier-free data, resistant to
+    chaos-contaminated pairs otherwise."""
     pairs = pairs if isinstance(pairs, list) else list(pairs)
     v1 = np.array([p.v1_seconds for p in pairs])
     v2 = np.array([p.v2_seconds for p in pairs])
@@ -104,7 +108,7 @@ def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE
         ((name, v1[ix], v2[ix])
          for name, ix in grouped.items()),
         confidence=confidence, n_boot=n_boot, seed=seed,
-        min_results=min_results)
+        min_results=min_results, robust=robust, robust_k=robust_k)
 
 
 class _PairBuffer:
@@ -144,11 +148,12 @@ class StreamingAnalyzer:
 
     def __init__(self, *, confidence: float = DEFAULT_CONFIDENCE,
                  n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
-                 min_results: int = 10):
+                 min_results: int = 10, robust: str = "none"):
         self.confidence = confidence
         self.n_boot = n_boot
         self.seed = seed
         self.min_results = min_results
+        self.robust = robust
         self._buf: Dict[str, _PairBuffer] = {}
         self._order: List[str] = []           # insertion order, like analyze()
         self._dirty: set = set()
@@ -186,7 +191,8 @@ class StreamingAnalyzer:
         v1, v2 = buf.views()
         res = detect_change(benchmark, v1, v2,
                             confidence=self.confidence, n_boot=self.n_boot,
-                            seed=self.seed, min_results=self.min_results)
+                            seed=self.seed, min_results=self.min_results,
+                            robust=self.robust)
         self._cache[benchmark] = res
         self._dirty.discard(benchmark)
         return res
@@ -200,7 +206,8 @@ class StreamingAnalyzer:
             fresh = detect_changes_batch(
                 ((b,) + self._buf[b].views() for b in todo),
                 confidence=self.confidence, n_boot=self.n_boot,
-                seed=self.seed, min_results=self.min_results)
+                seed=self.seed, min_results=self.min_results,
+                robust=self.robust)
             for b in todo:
                 self._cache[b] = fresh.get(b)
                 self._dirty.discard(b)

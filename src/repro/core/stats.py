@@ -130,14 +130,85 @@ def _boot_draw(n: int, n_boot: int, seed: int) -> _BootDraw:
     return draw
 
 
+# ------------------------------------------------------------- robust path
+# Contaminated samples (noisy-neighbor bursts, interference spikes — see
+# faas/chaos.py) carry a fraction of wildly asymmetric diffs.  The
+# bootstrap CI of the median is surprisingly sensitive to them: resample
+# medians shift by the per-resample *count imbalance* of tail points, so
+# a 20-30% contamination widens the CI enough to hide real 3-5% effects.
+# The robust variants fence outliers with the standard MAD rule before
+# resampling.  On outlier-free data (no point beyond the fence) both
+# variants are exact identities — bit-for-bit the plain CI, which is the
+# conformance contract the differential tests pin.
+
+ROBUST_MODES = ("none", "trim", "winsor")
+DEFAULT_ROBUST_K = 4.0
+
+
+def robust_fences(x: np.ndarray, k: float = DEFAULT_ROBUST_K) -> tuple:
+    """Outlier fences ``median +/- k * 1.4826 * MAD``.
+
+    A zero MAD (half the sample tied) falls back to the IQR-based scale;
+    if that is zero too, the fences are infinite (nothing is an outlier
+    in a constant-ish sample)."""
+    x = np.asarray(x, dtype=np.float64)
+    med = np.median(x)
+    scale = 1.4826 * float(np.median(np.abs(x - med)))
+    if scale == 0.0:
+        q1, q3 = np.percentile(x, [25.0, 75.0])
+        scale = float(q3 - q1) / 1.349
+    if scale == 0.0:
+        return -math.inf, math.inf
+    return float(med - k * scale), float(med + k * scale)
+
+
+def winsorize_outliers(x: np.ndarray,
+                       k: float = DEFAULT_ROBUST_K) -> np.ndarray:
+    """Clip points beyond the MAD fences to the fence value (same n)."""
+    x = np.asarray(x, dtype=np.float64)
+    if len(x) == 0 or not np.isfinite(x).all():
+        return x                    # NaN/inf propagate like the plain path
+    lo, hi = robust_fences(x, k)
+    if np.all((x >= lo) & (x <= hi)):
+        return x                    # outlier-free: exact identity
+    return np.clip(x, lo, hi)
+
+
+def trim_outliers(x: np.ndarray, k: float = DEFAULT_ROBUST_K) -> np.ndarray:
+    """Drop points beyond the MAD fences (outlier-free input is returned
+    unchanged, so the trimmed CI == the plain CI there)."""
+    x = np.asarray(x, dtype=np.float64)
+    if len(x) == 0 or not np.isfinite(x).all():
+        return x
+    lo, hi = robust_fences(x, k)
+    keep = (x >= lo) & (x <= hi)
+    if keep.all():
+        return x
+    return x[keep]
+
+
+def _robust_view(x: np.ndarray, robust: str,
+                 k: float = DEFAULT_ROBUST_K) -> np.ndarray:
+    if robust == "none":
+        return np.asarray(x, dtype=np.float64)
+    if robust == "trim":
+        return trim_outliers(x, k)
+    if robust == "winsor":
+        return winsorize_outliers(x, k)
+    raise ValueError(f"robust must be one of {ROBUST_MODES}, got {robust!r}")
+
+
 def bootstrap_median_ci(x: np.ndarray, *, confidence: float = DEFAULT_CONFIDENCE,
                         n_boot: int = DEFAULT_BOOTSTRAP,
-                        seed: int = 0) -> tuple:
+                        seed: int = 0, robust: str = "none",
+                        robust_k: float = DEFAULT_ROBUST_K) -> tuple:
     """Percentile-bootstrap CI for the median of x.
 
     Empty input has no median: returns (nan, nan, nan) instead of raising
-    from ``rng.integers(0, 0, ...)``."""
-    x = np.asarray(x, dtype=np.float64)
+    from ``rng.integers(0, 0, ...)``.  ``robust="trim"``/``"winsor"``
+    fence outliers first (see `robust_fences`); on outlier-free data the
+    result is bit-for-bit the plain CI."""
+    x = _robust_view(np.asarray(x, dtype=np.float64), robust, robust_k)
     n = len(x)
     if n == 0:
         return (float("nan"),) * 3
@@ -164,17 +235,22 @@ def bootstrap_median_ci(x: np.ndarray, *, confidence: float = DEFAULT_CONFIDENCE
 def detect_change(benchmark: str, v1: np.ndarray, v2: np.ndarray, *,
                   confidence: float = DEFAULT_CONFIDENCE,
                   n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
-                  min_results: int = 10) -> Optional[ChangeResult]:
+                  min_results: int = 10, robust: str = "none",
+                  robust_k: float = DEFAULT_ROBUST_K
+                  ) -> Optional[ChangeResult]:
     """Paper §6.1: benchmarks with fewer than `min_results` pairs are
     ignored (returns None); empty input is always None, whatever
-    `min_results` says."""
+    `min_results` says.  The `min_results` filter applies to the *raw*
+    pair count — robust trimming never drops a benchmark from the
+    analysis, it only refines its CI."""
     v1, v2 = np.asarray(v1), np.asarray(v2)
     n = min(len(v1), len(v2))
     if n == 0 or n < min_results:
         return None
     diffs = relative_diffs(v1[:n], v2[:n])
     med, lo, hi = bootstrap_median_ci(diffs, confidence=confidence,
-                                      n_boot=n_boot, seed=seed)
+                                      n_boot=n_boot, seed=seed,
+                                      robust=robust, robust_k=robust_k)
     changed = lo > 0 or hi < 0
     direction = 0 if not changed else (1 if med > 0 else -1)
     return ChangeResult(benchmark=benchmark, n_pairs=n, median_diff_pct=med,
@@ -339,15 +415,23 @@ def bootstrap_median_ci_batch(arrays: Sequence[np.ndarray], *,
                               confidence: float = DEFAULT_CONFIDENCE,
                               n_boot: int = DEFAULT_BOOTSTRAP,
                               seed: int = 0,
-                              backend: str = "numpy") -> tuple:
+                              backend: str = "numpy",
+                              robust: str = "none",
+                              robust_k: float = DEFAULT_ROBUST_K) -> tuple:
     """Vectorized `bootstrap_median_ci` over many (possibly ragged) arrays.
 
     Returns (med, lo, hi) float64 arrays aligned with `arrays`; empty
     inputs yield NaN entries.  The default NumPy backend is bit-for-bit
     equal to calling the scalar function per array with the same
-    (confidence, n_boot, seed); ``backend="jax"`` runs the same resamples
-    through the jitted accelerator kernel (kernels/stats_boot.py) and
-    agrees to float tolerance."""
+    (confidence, n_boot, seed, robust); ``backend="jax"`` runs the same
+    resamples through the jitted accelerator kernel
+    (kernels/stats_boot.py) and agrees to float tolerance.  The robust
+    fencing is applied per array *before* the length-grouping, so a
+    trimmed array simply joins the block of its trimmed length and the
+    scalar/batched parity carries over unchanged."""
+    if robust != "none":
+        arrays = [_robust_view(np.asarray(a, dtype=np.float64), robust,
+                               robust_k) for a in arrays]
     if backend == "jax":
         from repro.kernels.stats_boot import bootstrap_median_ci_batch_jax
         return bootstrap_median_ci_batch_jax(
@@ -391,7 +475,9 @@ def detect_changes_batch(items: Iterable[tuple], *,
                          confidence: float = DEFAULT_CONFIDENCE,
                          n_boot: int = DEFAULT_BOOTSTRAP, seed: int = 0,
                          min_results: int = 10,
-                         backend: str = "numpy") -> Dict[str, "ChangeResult"]:
+                         backend: str = "numpy", robust: str = "none",
+                         robust_k: float = DEFAULT_ROBUST_K
+                         ) -> Dict[str, "ChangeResult"]:
     """Vectorized `detect_change` over a whole suite.
 
     `items` yields ``(benchmark, v1, v2)`` triples; the returned dict (in
@@ -411,7 +497,8 @@ def detect_changes_batch(items: Iterable[tuple], *,
         diffs.append(relative_diffs(v1[:n], v2[:n]))
     med, lo, hi = bootstrap_median_ci_batch(diffs, confidence=confidence,
                                             n_boot=n_boot, seed=seed,
-                                            backend=backend)
+                                            backend=backend, robust=robust,
+                                            robust_k=robust_k)
     out: Dict[str, ChangeResult] = {}
     for i, name in enumerate(names):
         m, l, h = float(med[i]), float(lo[i]), float(hi[i])

@@ -51,6 +51,28 @@ curve, pricing, failure rate) and either register it in
 
 No scheduling code is involved: the engine stays untouched.
 
+Chaos layer (chaos.py, traces.py)
+---------------------------------
+
+``ChaosBackend`` wraps any virtual-time backend with seeded
+non-stationary performance regimes (diurnal drift, regional
+heterogeneity, cold-start spike windows, noisy-neighbor bursts —
+traces.py) and injectable faults (invocation loss, timeout storms,
+duplicate result delivery, zombie warm instances, billing anomalies —
+``FaultSpec``)::
+
+    from repro.faas.chaos import ChaosBackend, moderate_chaos
+    backend = ChaosBackend(SimFaaSBackend(workloads, seed=0),
+                           moderate_chaos(seed=0))
+
+The engine carries the matching obligations: duplicate completions are
+deduplicated (delivered once, billed once), losses retry without
+deadlock, and a dead instance never re-enters the warm pool (its retry
+re-draws cold-start state).  At ``intensity == 0`` the wrapper is an
+exact identity — every golden digest replays bit-for-bit — and every
+fault is a pure function of ``(seed, spec, invocation)``, which is what
+makes the whole subsystem conformance-testable (tests/test_chaos*.py).
+
 Adaptive stopping (core/controller.py)
 --------------------------------------
 

@@ -108,6 +108,11 @@ class InvocationOutcome:
     timed_out: bool = False              # hit the per-benchmark timeout
     platform_failure: bool = False       # transient infra error (retryable)
     benchmark_failure: bool = False      # deterministic (e.g. restricted FS)
+    # fault-injection channel (faas/chaos.py); stock backends leave these
+    # at their defaults, which keeps every historical code path identical
+    lost: bool = False                   # request vanished (platform_failure)
+    instance_dead: bool = False          # the instance died: never re-pool it
+    duplicates: int = 0                  # extra result deliveries to dedup
 
 
 @dataclass
@@ -119,6 +124,7 @@ class CompletedInvocation:
     t_end: float
     attempt: int
     instance: Optional[Instance] = None
+    delivered: bool = False              # dedup mark for duplicate delivery
 
 
 class EngineObserver:
@@ -184,6 +190,8 @@ class EngineReport:
     retries: int = 0
     hedged: int = 0
     skipped: int = 0
+    lost: int = 0                        # attempts that vanished (chaos)
+    duplicates_dropped: int = 0          # duplicate deliveries deduplicated
 
 
 class _HedgePolicy:
@@ -248,6 +256,7 @@ class ExecutionEngine:
         billed: List[float] = []
         cold_starts = timeouts = failures = 0
         done_n = failed_n = retries = hedged = skipped = 0
+        lost_n = dup_dropped = 0
         executed: set = set()
         failed: set = set()
         wall = 0.0
@@ -284,7 +293,10 @@ class ExecutionEngine:
             out = be.simulate(inv, inst, t, overhead)
             t_end = t + out.duration_s
             heapq.heappush(slots, (t_end, slot))
-            if not be.pinned:
+            if not be.pinned and not out.instance_dead:
+                # a dead instance never re-enters the warm pool: a retry
+                # of this invocation must re-draw cold-start state, not
+                # re-acquire the corpse's warm slot (it would fail again)
                 pool.release(inst, t_end)
             return CompletedInvocation(inv, out, t, t_end, attempt, inst)
 
@@ -296,8 +308,16 @@ class ExecutionEngine:
         comp_seq = 0
 
         def deliver_due(now: Optional[float]) -> None:
+            nonlocal dup_dropped
             while completions and (now is None or completions[0][0] <= now):
                 _, _, c = heapq.heappop(completions)
+                if c.delivered:
+                    # at-least-once platforms may deliver a completion
+                    # twice; the engine dedups so an observer sees every
+                    # result exactly once and nothing is double-counted
+                    dup_dropped += 1
+                    continue
+                c.delivered = True
                 observer.on_result(c)
 
         queue: deque = deque((inv, 0) for inv in plan.invocations)
@@ -356,6 +376,8 @@ class ExecutionEngine:
                 wall = max(wall, alt_end)
             wall = max(wall, end_s)
 
+            if out.lost:
+                lost_n += 1
             if out.platform_failure and attempt < cfg.max_retries:
                 retries += 1
                 queue.appendleft((inv, attempt + 1))
@@ -382,6 +404,15 @@ class ExecutionEngine:
             if observer is not None:
                 heapq.heappush(completions, (comp.t_end, comp_seq, comp))
                 comp_seq += 1
+                for _ in range(out.duplicates):
+                    # duplicate delivery: the same completion arrives
+                    # again; deliver_due drops it (exactly-once to the
+                    # observer, billed exactly once at dispatch)
+                    heapq.heappush(completions, (comp.t_end, comp_seq,
+                                                 comp))
+                    comp_seq += 1
+            else:
+                dup_dropped += out.duplicates
 
         cost = be.finalize(billed, wall)
         return EngineReport(
@@ -391,7 +422,8 @@ class ExecutionEngine:
             executed_benchmarks=sorted(executed - failed),
             failed_benchmarks=sorted(failed),
             invocations_done=done_n, invocations_failed=failed_n,
-            retries=retries, hedged=hedged, skipped=skipped)
+            retries=retries, hedged=hedged, skipped=skipped,
+            lost=lost_n, duplicates_dropped=dup_dropped)
 
     # ------------------------------------------------------------ realtime
     def _run_realtime(self, plan: SuitePlan,

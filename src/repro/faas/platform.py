@@ -124,21 +124,32 @@ class SimReport:
 
 def make_provider_backend(workloads: Dict[str, SimWorkload], provider: str,
                           *, memory_mb: int = 2048, seed: int = 0,
-                          start_time_s: float = 0.0) -> SimFaaSBackend:
+                          start_time_s: float = 0.0, chaos=None):
     """One simulated-provider backend by name ("lambda" / "gcf" / "azure").
 
     The Lambda path goes through `FaaSPlatformConfig.to_profile()` — the
     historical pricing and RNG stream — so results replay the original
     `SimulatedFaaS` bit-for-bit; the other providers use their registered
-    `ProviderProfile`s directly."""
+    `ProviderProfile`s directly.
+
+    `chaos` (a faas/chaos.py `ChaosConfig`) wraps the backend in the
+    fault-injection layer; a zero-intensity config is an exact identity
+    (conformance-tested), so callers can thread a chaos knob through
+    unconditionally."""
     from repro.faas.backends import PROVIDER_PROFILES
     if provider == "lambda":
-        return SimulatedFaaS(workloads, FaaSPlatformConfig(memory_mb=memory_mb),
-                             seed=seed, start_time_s=start_time_s)\
+        backend = SimulatedFaaS(workloads,
+                                FaaSPlatformConfig(memory_mb=memory_mb),
+                                seed=seed, start_time_s=start_time_s)\
             .make_backend()
-    profile = PROVIDER_PROFILES[provider]
-    return SimFaaSBackend(workloads, profile, memory_mb=memory_mb, seed=seed,
-                          start_time_s=start_time_s)
+    else:
+        profile = PROVIDER_PROFILES[provider]
+        backend = SimFaaSBackend(workloads, profile, memory_mb=memory_mb,
+                                 seed=seed, start_time_s=start_time_s)
+    if chaos is not None:
+        from repro.faas.chaos import ChaosBackend
+        backend = ChaosBackend(backend, chaos)
+    return backend
 
 
 class SimulatedFaaS:

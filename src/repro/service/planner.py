@@ -104,10 +104,24 @@ class PlannerConfig:
 
 
 class DeadlineCostPlanner:
-    """Enumerates + predicts + selects candidate plans for one suite."""
+    """Enumerates + predicts + selects candidate plans for one suite.
 
-    def __init__(self, cfg: Optional[PlannerConfig] = None):
+    With a `chaos` profile (faas/chaos.py `ChaosConfig`) the planner
+    prices *retry-inflated* plans: every FaaS candidate's invocation
+    count, billed seconds, and cost are scaled by the scenario's expected
+    attempts per invocation (losses / zombies / timeout storms at the
+    configured `max_retries`), durations by the mean regime slowdown,
+    storm timeouts by their expected full-timeout burns, and bills by
+    the metering-anomaly inflation.  A candidate that met a deadline on
+    a calm platform may be rejected (or priced over budget) under chaos
+    — which is the point.  The VM baseline is not chaos-priced (the
+    fault models are FaaS-platform phenomena)."""
+
+    def __init__(self, cfg: Optional[PlannerConfig] = None, *,
+                 chaos=None, max_retries: int = 0):
         self.cfg = cfg or PlannerConfig()
+        self.chaos_model = (None if chaos is None or not chaos.active
+                            else chaos.cost_model(max_retries=max_retries))
         self._curves: Dict[tuple, SuiteMemoryPlan] = {}
         self._vm_probe: Dict[tuple, Dict[str, float]] = {}
 
@@ -166,6 +180,18 @@ class DeadlineCostPlanner:
         tuned = memory_mb == MEMORY_AUTOTUNED
         mem_map = plan.memory_map if tuned else None
 
+        # chaos pricing: mean regime slowdown on every duration, expected
+        # attempts per planned invocation (retries of losses / zombies /
+        # storm timeouts), per-failed-attempt timeout burns, and the
+        # metering-anomaly inflation on the final bill
+        cm = self.chaos_model
+        slow = cm.slowdown if cm is not None else 1.0
+        attempts = cm.expected_attempts if cm is not None else 1.0
+        fail_bill_s = 0.0
+        if cm is not None and cm.retryable_rate > 0.0:
+            fail_bill_s = (cm.timeout_burn_rate / cm.retryable_rate
+                           * profile.benchmark_timeout_s)
+
         total_billed = 0.0
         total_cost = 0.0
         max_inv_s = 0.0
@@ -173,12 +199,16 @@ class DeadlineCostPlanner:
         mem_sum = 0.0
         for name, curve in sorted(plan.curves.items()):
             mem = mem_map[name] if tuned else memory_mb
-            if (curve.predict_run_s(profile, mem)
+            if (curve.predict_run_s(profile, mem) * slow
                     >= cfg.timeout_margin * profile.benchmark_timeout_s):
                 return None             # would lose this benchmark
-            inv_s = curve.predict_invocation_s(profile, mem, repeats)
-            total_billed += n_calls * inv_s
-            total_cost += n_calls * profile.billed_cost([inv_s], mem)
+            inv_s = curve.predict_invocation_s(profile, mem, repeats) * slow
+            per_call = inv_s + (attempts - 1.0) * fail_bill_s
+            total_billed += n_calls * per_call
+            total_cost += n_calls * (
+                profile.billed_cost([inv_s], mem)
+                + (attempts - 1.0) * profile.billed_cost([fail_bill_s],
+                                                         mem))
             max_inv_s = max(max_inv_s, inv_s)
             n_inv += n_calls
             mem_sum += mem
@@ -206,6 +236,9 @@ class DeadlineCostPlanner:
         cold_s = profile.cold_overhead_s(cfg.image_gb) + setup_mean
         total_billed += n_cold * cold_s
         total_cost += n_cold * profile.billed_cost([cold_s], mean_mem)
+        if cm is not None:
+            total_cost *= cm.billing_inflation
+            n_inv = int(round(n_inv * attempts))
         # makespan: perfectly elastic work sharing + the straggler tail
         wall = (total_billed / min(parallelism, n_inv)) + max_inv_s + cold_s
         return CandidatePlan(

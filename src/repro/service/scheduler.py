@@ -63,6 +63,11 @@ class ServiceConfig:
     tenant_weights: Dict[str, float] = field(default_factory=dict)
     admission: AdmissionConfig = field(default_factory=AdmissionConfig)
     seed: int = 0
+    chaos: object = None                # faas/chaos.py ChaosConfig: wraps
+    #                                     every fleet's router in the
+    #                                     fault-injection layer (None =
+    #                                     calm; zero intensity is a
+    #                                     tested identity)
 
 
 @dataclass
@@ -222,9 +227,17 @@ class _Fleet:
         self.parallelism = parallelism
         self.profile = PROVIDER_PROFILES[provider]
         self.router = _JobRouterBackend(self.profile)
+        backend = self.router
+        if cfg.chaos is not None:
+            # chaos wraps the whole fleet: faults hit jobs of every
+            # tenant through one shared (seeded) scenario, exactly like
+            # a real provider incident; the per-invocation fault RNG is
+            # keyed by job id so tenants stay mutually deterministic
+            from repro.faas.chaos import ChaosBackend
+            backend = ChaosBackend(self.router, cfg.chaos)
         self.engine = ExecutionEngine(
-            self.router, EngineConfig(parallelism=parallelism,
-                                      max_retries=cfg.max_retries))
+            backend, EngineConfig(parallelism=parallelism,
+                                  max_retries=cfg.max_retries))
         self.warm_pool = WarmPool()
         self.queue = FairQueue(weights=dict(cfg.tenant_weights))
         self.jobs: Dict[str, _JobExec] = {}

@@ -7,6 +7,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import attention_chunked, attention_dot
 
+# jax attention compile sweeps, ~1 min on CPU: tier-1 skips this module, the nightly CI job runs it
+pytestmark = pytest.mark.slow
+
 
 def _qkv(B=2, Sq=48, Skv=48, H=4, K=2, hd=32, seed=0, dtype=jnp.float32):
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)

@@ -1,0 +1,474 @@
+"""Chaos subsystem conformance: deterministic fault injection, engine
+fault-handling invariants (no double-billing, no deadlock, no corpse
+reuse), non-stationary trace models, robust statistics differentials,
+and chaos-aware planner pricing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rmit
+from repro.core.controller import AdaptiveConfig, AdaptiveController
+from repro.core.costmodel import LAMBDA_PER_REQUEST
+from repro.core.duet import DuetPair
+from repro.core.results import StreamingAnalyzer, analyze
+from repro.core.stats import (bootstrap_median_ci, detect_change,
+                              detect_changes_batch, relative_diffs,
+                              robust_fences, trim_outliers,
+                              winsorize_outliers)
+from repro.faas.backends import LocalDuetBackend, SimFaaSBackend
+from repro.faas.chaos import (BILLING, ChaosBackend, ChaosConfig, DUPLICATE,
+                              FaultSpec, LOSS, TIMEOUT_STORM, ZOMBIE,
+                              moderate_chaos)
+from repro.faas.engine import (CompletedInvocation, EngineConfig,
+                               EngineObserver, ExecutionEngine)
+from repro.faas.platform import SimWorkload
+from repro.faas.traces import (ColdSpikeTrace, DiurnalTrace,
+                               NoisyNeighborTrace, RegionTrace,
+                               instance_key)
+
+
+def _suite(n=4, **kw):
+    kw.setdefault("setup_seconds", 1.0)
+    return {f"b{i}": SimWorkload(name=f"b{i}", base_seconds=0.4 + 0.2 * i,
+                                 effect_pct=6.0 * (i % 2), **kw)
+            for i in range(n)}
+
+
+def _run(suite, chaos=None, *, n_calls=5, repeats=2, parallelism=4,
+         max_retries=0, seed=3, observer=None):
+    plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
+                          repeats_per_call=repeats, seed=seed)
+    backend = SimFaaSBackend(suite, seed=seed)
+    if chaos is not None:
+        backend = ChaosBackend(backend, chaos)
+    engine = ExecutionEngine(backend, EngineConfig(
+        parallelism=parallelism, max_retries=max_retries))
+    return engine.run(plan, observer=observer), backend
+
+
+def _only(kind, rate, **kw):
+    return ChaosConfig(intensity=1.0, seed=9,
+                       faults=(FaultSpec(kind, rate=rate, **kw),))
+
+
+# ----------------------------------------------------------------- traces
+def test_diurnal_trace_shape_and_zero_scaling():
+    tr = DiurnalTrace(amplitude=0.1, period_s=100.0)
+    assert tr.speed_factor(0.0) == pytest.approx(1.0)
+    assert tr.speed_factor(25.0) == pytest.approx(1.1)
+    assert tr.speed_factor(75.0) == pytest.approx(0.9)
+    assert tr.scaled(0.0).speed_factor(25.0) == 1.0
+
+
+def test_cold_spike_trace_windows():
+    tr = ColdSpikeTrace(multiplier=5.0, period_s=100.0, window_s=10.0)
+    assert tr.cold_factor(5.0) == 5.0
+    assert tr.cold_factor(50.0) == 1.0
+    assert tr.cold_factor(105.0) == 5.0
+    assert tr.scaled(0.0).cold_factor(5.0) == 1.0
+
+
+def test_region_trace_has_n_regions_distinct_factors():
+    tr = RegionTrace(n_regions=3, sigma=0.1, seed=4)
+    factors = {tr.speed_factor(0.0, k) for k in range(64)}
+    assert len(factors) == 3
+    assert tr.scaled(0.0).speed_factor(0.0, 7) == 1.0
+
+
+def test_noisy_neighbor_is_pure_function_of_seed_instance_time():
+    tr = NoisyNeighborTrace(burst_prob=0.8, epoch_s=100.0,
+                            mean_burst_s=50.0, slowdown=3.0, seed=11)
+    key = instance_key("i42")
+    probe = [tr.speed_factor(t, key) for t in np.linspace(0, 500, 101)]
+    # re-query in a different order: answers must not depend on history
+    again = [tr.speed_factor(t, key)
+             for t in reversed(np.linspace(0, 500, 101))]
+    assert probe == list(reversed(again))
+    assert set(probe) <= {1.0, 3.0}
+    assert 3.0 in probe                 # bursts actually happen
+    other = NoisyNeighborTrace(burst_prob=0.8, epoch_s=100.0,
+                               mean_burst_s=50.0, slowdown=3.0, seed=12)
+    assert [other.speed_factor(t, key) for t in np.linspace(0, 500, 101)] \
+        != probe
+    assert not tr.scaled(0.0).active(17.0, key)
+
+
+def test_bursts_can_already_be_running_at_time_zero():
+    """Negative epochs are real: over many instances, some burst windows
+    must cover t=0 (no artificial calm ramp at the start of a run)."""
+    tr = NoisyNeighborTrace(burst_prob=0.9, epoch_s=100.0,
+                            mean_burst_s=80.0, slowdown=2.0, seed=0)
+    assert any(tr.active(0.0, k) for k in range(200))
+
+
+# ------------------------------------------------- fault conformance basics
+def test_chaos_refuses_realtime_backends():
+    with pytest.raises(ValueError):
+        ChaosBackend(LocalDuetBackend({}), moderate_chaos())
+
+
+def test_fault_slots_are_independent():
+    """Metamorphic: enabling an extra fault kind must not change which
+    invocations another fault hits (fixed RNG slot per kind)."""
+    suite = _suite()
+    rep_loss, be_loss = _run(suite, _only(LOSS, 0.4))
+    both = ChaosConfig(intensity=1.0, seed=9,
+                       faults=(FaultSpec(LOSS, rate=0.4),
+                               FaultSpec(DUPLICATE, rate=0.5,
+                                         magnitude=1)))
+    rep_both, be_both = _run(suite, both)
+    assert be_loss.stats["lost"] == be_both.stats["lost"]
+    assert rep_loss.lost == rep_both.lost
+    assert rep_loss.billed_seconds == rep_both.billed_seconds
+    assert rep_both.duplicates_dropped > 0
+
+
+class _CountingObserver(EngineObserver):
+    def __init__(self):
+        self.deliveries = {}
+
+    def on_result(self, done: CompletedInvocation) -> None:
+        key = (done.invocation.benchmark, done.invocation.call_index)
+        self.deliveries[key] = self.deliveries.get(key, 0) + 1
+
+
+def test_duplicates_never_double_bill_or_double_deliver():
+    """At-least-once delivery: with a 100% duplicate fault the engine
+    must bill each invocation once, keep the pair set identical to the
+    calm run, deliver each completion to the observer exactly once, and
+    account every dropped duplicate."""
+    suite = _suite()
+    obs_plain = _CountingObserver()
+    rep_plain, _ = _run(suite, None, observer=obs_plain)
+    obs = _CountingObserver()
+    rep, be = _run(suite, _only(DUPLICATE, 1.0, magnitude=2), observer=obs)
+    assert rep.billed_seconds == rep_plain.billed_seconds
+    assert rep.cost_dollars == rep_plain.cost_dollars
+    assert [(p.benchmark, p.v1_seconds, p.v2_seconds) for p in rep.pairs] \
+        == [(p.benchmark, p.v1_seconds, p.v2_seconds)
+            for p in rep_plain.pairs]
+    assert obs.deliveries == obs_plain.deliveries
+    assert all(v == 1 for v in obs.deliveries.values())
+    assert rep.duplicates_dropped == 2 * rep.invocations_done
+    assert be.stats["duplicates_injected"] == rep.invocations_done
+
+
+def test_duplicates_dropped_without_observer_too():
+    suite = _suite()
+    rep, _ = _run(suite, _only(DUPLICATE, 1.0, magnitude=1))
+    assert rep.duplicates_dropped == rep.invocations_done
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_heavy_losses_never_deadlock_the_engine(seed):
+    """Losses + retries + an adaptive observer (skips, top-ups) must
+    always drain: the run returns with every invocation accounted."""
+    suite = _suite(3)
+    cfg = ChaosConfig(intensity=1.0, seed=seed,
+                      faults=(FaultSpec(LOSS, rate=0.6),))
+    plan = rmit.make_plan(sorted(suite), n_calls=6, repeats_per_call=2,
+                          seed=1)
+    backend = ChaosBackend(SimFaaSBackend(suite, seed=1), cfg)
+    controller = AdaptiveController(plan, AdaptiveConfig(
+        min_results=2, stop_min_results=4, seed=1))
+    rep = ExecutionEngine(backend, EngineConfig(
+        parallelism=3, max_retries=2)).run(plan, observer=controller)
+    dispatched = (rep.invocations_done + rep.invocations_failed
+                  + rep.skipped)
+    assert dispatched == len(plan.invocations) \
+        + controller.summary().invocations_added
+    if backend.stats.get("lost"):
+        assert rep.lost == backend.stats["lost"]
+
+
+def test_zombie_retry_redraws_cold_start_instead_of_reusing_corpse():
+    """Regression (engine retry path): a dead instance must never
+    re-enter the warm pool, so the retry of the failed invocation
+    cold-starts a fresh instance instead of re-acquiring the corpse and
+    failing forever.  With a 100% zombie rate every invocation after the
+    first hits a corpse once, retries on a fresh cold start, and
+    succeeds — pre-fix, the retry re-acquired the same dead instance and
+    the benchmark was lost."""
+    suite = {"b0": SimWorkload(name="b0", base_seconds=0.3, effect_pct=0.0,
+                               setup_seconds=0.5)}
+    rep, be = _run(suite, _only(ZOMBIE, 1.0), n_calls=4, parallelism=1,
+                   max_retries=1)
+    assert rep.invocations_done == 4
+    assert rep.invocations_failed == 0
+    assert rep.executed_benchmarks == ["b0"]
+    assert rep.failed_benchmarks == []
+    assert be.stats["zombie_hits"] == 3       # calls 2..4 hit the corpse
+    assert rep.cold_starts == 4               # every retry re-drew cold
+    assert rep.retries == 3
+
+
+def test_timeout_storms_are_transient_not_condemning():
+    """A storm timeout is interference, not a property of the benchmark:
+    with retries exhausted the invocations fail as platform failures and
+    no benchmark lands in the condemned (failed) set."""
+    suite = _suite(3)
+    rep, be = _run(suite, _only(TIMEOUT_STORM, 1.0), max_retries=0)
+    assert rep.invocations_done == 0
+    assert rep.executed_benchmarks == []
+    assert rep.failed_benchmarks == []        # transient, not condemned
+    assert rep.timeouts == rep.invocations_failed > 0
+    assert be.stats["storm_timeouts"] == rep.invocations_failed
+    # billed the full per-benchmark timeout each
+    assert all(b == 20.0 for b in rep.billed_seconds)
+
+
+def test_storm_windows_follow_period():
+    spec = FaultSpec(TIMEOUT_STORM, rate=1.0, period_s=100.0, window_s=10.0)
+    assert spec.in_window(5.0)
+    assert not spec.in_window(50.0)
+    assert spec.in_window(205.0)
+    assert spec.duty_cycle() == pytest.approx(0.1)
+
+
+def test_billing_anomalies_inflate_cost_not_durations():
+    """Metering anomalies change the bill, not the measured schedule:
+    billed durations, pairs, and wall time stay identical; only the
+    finalized cost moves — by exactly the anomaly multiplier on the
+    GB-seconds component (lambda pricing)."""
+    suite = _suite()
+    rep_plain, _ = _run(suite, None)
+    rep, be = _run(suite, _only(BILLING, 1.0, magnitude=3.0))
+    assert rep.billed_seconds == rep_plain.billed_seconds
+    assert rep.wall_seconds == rep_plain.wall_seconds
+    n_req = len(rep_plain.billed_seconds)
+    req_cost = n_req * LAMBDA_PER_REQUEST
+    expected = 3.0 * (rep_plain.cost_dollars - req_cost) + req_cost
+    assert rep.cost_dollars == pytest.approx(expected)
+    assert be.stats["billing_anomalies"] == n_req
+
+
+def test_neighbor_bursts_contaminate_pairs_asymmetrically():
+    """During a burst individual timings are hit independently, so some
+    duet diffs become wildly asymmetric — the raw material of the
+    robustness experiment — while the calm run's diffs stay tight."""
+    suite = _suite(2, run_sigma=0.02)
+    cfg = ChaosConfig(
+        intensity=1.0, seed=2,
+        neighbor=NoisyNeighborTrace(burst_prob=1.0, epoch_s=1e6,
+                                    mean_burst_s=1e6, slowdown=4.0,
+                                    seed=2),
+        neighbor_hit=0.5, neighbor_sigma=0.3)
+    rep, be = _run(suite, cfg, n_calls=8)
+    assert be.stats["contaminated_invocations"] > 0
+    diffs = relative_diffs(
+        np.array([p.v1_seconds for p in rep.pairs]),
+        np.array([p.v2_seconds for p in rep.pairs]))
+    assert np.abs(diffs).max() > 100.0       # one-sided 4x hits
+    rep_plain, _ = _run(suite, None, n_calls=8)
+    plain = relative_diffs(
+        np.array([p.v1_seconds for p in rep_plain.pairs]),
+        np.array([p.v2_seconds for p in rep_plain.pairs]))
+    assert np.abs(plain).max() < 40.0
+
+
+# ---------------------------------------------------------- robust stats
+def test_robust_cis_equal_plain_on_outlier_free_data():
+    """Differential: on data with no point beyond the MAD fences, the
+    trimmed and winsorized CIs are bit-for-bit the plain CI."""
+    rng = np.random.default_rng(0)
+    checked = 0
+    for _ in range(30):
+        x = rng.normal(rng.uniform(-5, 5), rng.uniform(0.5, 3.0),
+                       size=rng.integers(15, 80))
+        lo, hi = robust_fences(x)
+        if not ((x >= lo) & (x <= hi)).all():
+            continue        # a normal tail can graze the 4-MAD fence;
+            #                 "outlier-free" is defined BY the fence
+        checked += 1
+        plain = bootstrap_median_ci(x, seed=5)
+        assert bootstrap_median_ci(x, seed=5, robust="trim") == plain
+        assert bootstrap_median_ci(x, seed=5, robust="winsor") == plain
+    assert checked >= 15
+
+
+def test_trim_and_winsor_semantics_on_contaminated_data():
+    rng = np.random.default_rng(1)
+    x = np.concatenate([rng.normal(0, 1, 40), [300.0, -250.0, 400.0]])
+    lo, hi = robust_fences(x)
+    t = trim_outliers(x)
+    w = winsorize_outliers(x)
+    assert len(t) == 40 and np.abs(t).max() < 50
+    assert len(w) == len(x)
+    assert w.max() == pytest.approx(hi) and w.min() == pytest.approx(lo)
+    # and the trimmed CI is meaningfully tighter than the naive one
+    _, lo_n, hi_n = bootstrap_median_ci(x, seed=0)
+    _, lo_t, hi_t = bootstrap_median_ci(x, seed=0, robust="trim")
+    assert (hi_t - lo_t) <= (hi_n - lo_n)
+
+
+def test_robust_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        bootstrap_median_ci(np.arange(20.0), robust="huber")
+
+
+def test_robust_preserves_nan_propagation():
+    x = np.array([1.0, 2.0, np.nan, 4.0] * 5)
+    robust = bootstrap_median_ci(x, seed=1, robust="trim")
+    plain = bootstrap_median_ci(x, seed=1)
+    for a, b in zip(robust, plain):
+        assert np.isnan(a) and np.isnan(b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_robust_batch_equals_scalar_reference_on_contaminated_series(seed):
+    """Differential: the batched robust path == a scalar detect_change
+    loop on random contaminated series, field for field."""
+    rng = np.random.default_rng(seed)
+    items = []
+    for i in range(rng.integers(2, 8)):
+        n = int(rng.integers(10, 60))
+        v1 = rng.lognormal(0.0, 0.05, n) * rng.uniform(0.5, 3.0)
+        v2 = v1 * rng.uniform(0.9, 1.1)
+        # contaminate ~20% of one side with big multipliers
+        k = rng.random(n) < 0.2
+        v2 = np.where(k & (rng.random(n) < 0.5), v2 * 4.0, v2)
+        v1 = np.where(k & (rng.random(n) >= 0.5), v1 * 4.0, v1)
+        items.append((f"s{i}", v1, v2))
+    for robust in ("trim", "winsor"):
+        batch = detect_changes_batch(items, seed=3, robust=robust)
+        for name, v1, v2 in items:
+            ref = detect_change(name, v1, v2, seed=3, robust=robust)
+            assert (ref is None) == (name not in batch)
+            if ref is not None:
+                assert batch[name] == ref
+
+
+def test_adaptive_controller_robust_opt_in():
+    """AdaptiveConfig.robust reaches the controller's streaming analyzer
+    (interim stop checks and the final analysis share the robust CIs)."""
+    plan = rmit.make_plan(["b0", "b1"], n_calls=4, repeats_per_call=2,
+                          seed=0)
+    ctl = AdaptiveController(plan, AdaptiveConfig(robust="trim", seed=0))
+    assert ctl.analyzer.robust == "trim"
+
+
+def test_streaming_analyzer_robust_matches_batch_analyze():
+    rng = np.random.default_rng(7)
+    pairs = []
+    for i in range(120):
+        b = f"b{i % 3}"
+        v1 = float(rng.lognormal(0, 0.05))
+        v2 = v1 * (4.0 if rng.random() < 0.15 else 1.02)
+        pairs.append(DuetPair(benchmark=b, v1_seconds=v1, v2_seconds=v2))
+    sa = StreamingAnalyzer(seed=2, robust="trim")
+    sa.add_pairs(pairs)
+    assert sa.analyze() == analyze(pairs, seed=2, robust="trim")
+
+
+# ------------------------------------------------------- detector clipping
+def test_step_clip_z_bounds_single_corrupt_commit():
+    from repro.cb.detect import DetectorConfig, RegressionDetector, \
+        SeriesPoint
+    pts = [SeriesPoint(i, f"c{i}", 0.0, 1.0, True, False)
+           for i in range(6)]
+    corrupt = pts[:2] + [SeriesPoint(2, "c2", 50.0, 1.0, True, True)] \
+        + pts[3:]
+    base = RegressionDetector(DetectorConfig())
+    clipped = RegressionDetector(DetectorConfig(step_clip_z=3.0))
+    assert base.scan_series("b", corrupt) is not None
+    assert clipped.scan_series("b", corrupt) is None
+    # a genuine multi-commit drift (small same-sign steps) survives
+    drift = [SeriesPoint(i, f"c{i}", 1.5, 1.0, True, False)
+             for i in range(9)]
+    ev = clipped.scan_series("b", drift)
+    assert ev is not None and ev.kind == "drift"
+
+
+# ------------------------------------------------------- planner pricing
+def _plan_key(c):
+    return (c.provider, c.memory_mb, c.parallelism, c.n_calls,
+            c.repeats_per_call)
+
+
+def test_planner_prices_retry_inflated_plans_under_chaos():
+    from repro.service.planner import DeadlineCostPlanner, PlannerConfig
+    suite = _suite(6, run_sigma=0.03)
+    cfg = PlannerConfig(providers=("lambda", "gcf"),
+                        memory_mb=(1792, 2048), parallelism=(25, 150),
+                        autotune=False, include_vm=False)
+    calm = DeadlineCostPlanner(cfg).candidates(suite, seed=1)
+    zero = DeadlineCostPlanner(
+        cfg, chaos=moderate_chaos(0).scaled(0.0)).candidates(suite, seed=1)
+    assert zero == calm                     # inactive chaos: bit-identical
+    mod = {_plan_key(c): c for c in DeadlineCostPlanner(
+        cfg, chaos=moderate_chaos(0), max_retries=1).candidates(suite,
+                                                                seed=1)}
+    heavy = {_plan_key(c): c for c in DeadlineCostPlanner(
+        cfg, chaos=moderate_chaos(0).scaled(2.0),
+        max_retries=1).candidates(suite, seed=1)}
+    assert mod                              # chaos did not kill all plans
+    for c in calm:
+        m = mod.get(_plan_key(c))
+        if m is None:
+            continue                        # rejected under slowdown: fine
+        assert m.predicted_cost_usd > c.predicted_cost_usd
+        assert m.predicted_wall_s > c.predicted_wall_s
+        assert m.predicted_invocations >= c.predicted_invocations
+        h = heavy.get(_plan_key(c))
+        if h is not None:
+            assert h.predicted_cost_usd >= m.predicted_cost_usd
+            assert h.predicted_wall_s >= m.predicted_wall_s
+
+
+def test_chaos_cost_model_expectations():
+    cfg = ChaosConfig(intensity=1.0, faults=(
+        FaultSpec(LOSS, rate=0.1),
+        FaultSpec(BILLING, rate=0.5, magnitude=3.0)))
+    cm = cfg.cost_model(max_retries=0)
+    assert cm.expected_attempts == pytest.approx(1.0)   # no retries
+    cm1 = cfg.cost_model(max_retries=1)
+    assert cm1.expected_attempts == pytest.approx(1.1)
+    assert cm1.billing_inflation == pytest.approx(2.0)
+    assert cfg.scaled(0.0).cost_model(max_retries=3).expected_attempts \
+        == 1.0
+
+
+# ----------------------------------------------------- experiment + stack
+def test_chaos_robustness_quick_profile():
+    from repro.core.experiment import run_chaos_robustness_experiment
+    cells = run_chaos_robustness_experiment(
+        providers=("lambda",), intensities=(0.0, 1.0), seeds_per_cell=1,
+        n_calls=8)
+    calm, mod = cells
+    assert calm.intensity == 0.0 and mod.intensity == 1.0
+    assert calm.lost == 0 and calm.chaos_stats == {}
+    assert sum(mod.chaos_stats.values()) > 0
+    assert 0 <= mod.accuracy_naive <= 106
+    assert mod.accuracy_robust >= mod.accuracy_naive - 2
+    assert mod.ci_width_naive > calm.ci_width_naive
+
+
+def test_pipeline_runs_under_chaos():
+    from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
+                          SyntheticSuite, synthetic_stream)
+    base = SyntheticSuite()
+    commits, _ = synthetic_stream(
+        base.benchmark_names(), StreamConfig(n_commits=4, seed=6),
+        effectable=base.measurable_names(),
+        drift_candidates=base.quiet_names())
+    cfg = PipelineConfig(provider="lambda", mode="selective", n_calls=6,
+                         seed=6, chaos=moderate_chaos(seed=6))
+    rep = Pipeline(SyntheticSuite(base.workloads), cfg).run_stream(commits)
+    assert rep.total_invocations > 0
+    assert len(rep.commits) == 3
+
+
+def test_service_runs_deterministically_under_chaos():
+    from repro.core.experiment import run_multi_tenant_experiment
+    chaos = moderate_chaos(seed=8)
+    r1 = run_multi_tenant_experiment(2, provider="lambda", seed=8,
+                                     n_commits=2, n_calls=4, chaos=chaos)
+    r2 = run_multi_tenant_experiment(2, provider="lambda", seed=8,
+                                     n_commits=2, n_calls=4, chaos=chaos)
+    assert r1.digest == r2.digest
+    assert r1.jobs == r2.jobs
+    calm = run_multi_tenant_experiment(2, provider="lambda", seed=8,
+                                       n_commits=2, n_calls=4)
+    assert calm.digest != r1.digest

@@ -1,0 +1,150 @@
+"""Zero-intensity conformance: a chaos wrapper at intensity 0 must be an
+*exact identity* at every layer — engine runs, the service scheduler's
+multiplexed schedules, and the cb pipeline — replaying the existing
+golden digests bit-for-bit.  This is what makes the whole fault-injection
+subsystem conformance-testable: any perturbation the wrapper introduces
+at intensity 0 is a bug by definition, with no statistical wiggle room.
+"""
+import hashlib
+import json
+import os
+
+import pytest
+
+from repro.core.experiment import (run_chaos_experiment,
+                                   run_faas_experiment,
+                                   run_multi_tenant_experiment,
+                                   victoriametrics_like_suite)
+from repro.core.rmit import make_plan
+from repro.faas.backends import SimFaaSBackend, PROVIDER_PROFILES
+from repro.faas.chaos import ChaosBackend, moderate_chaos
+from repro.faas.engine import EngineConfig, ExecutionEngine
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_seed_baseline.json")
+# pinned in test_service_scheduler.py: the N=16-tenant schedule digest
+GOLDEN_16_TENANT_DIGEST = "65e8852bf2dce3a7"
+
+ZERO = moderate_chaos(seed=5).scaled(0.0)
+
+
+def report_digest(report) -> str:
+    """Bit-exact fingerprint of an engine/sim report: every pair value,
+    every billed duration, cost, and the failure accounting."""
+    h = hashlib.sha256()
+    for p in report.pairs:
+        h.update(repr((p.benchmark, p.v1_seconds, p.v2_seconds,
+                       p.instance_id, p.call_index,
+                       p.cold_start)).encode())
+    h.update(repr(tuple(report.billed_seconds)).encode())
+    h.update(repr((report.wall_seconds, report.cost_dollars,
+                   report.cold_starts, report.timeouts, report.failures,
+                   tuple(report.executed_benchmarks),
+                   tuple(report.failed_benchmarks))).encode())
+    return h.hexdigest()
+
+
+def test_zero_intensity_config_is_inactive():
+    assert not ZERO.active
+    assert moderate_chaos(seed=0).active
+
+
+def test_zero_intensity_replays_engine_golden_bit_for_bit():
+    """The seed-0 baseline experiment through a zero-intensity chaos
+    wrapper must equal both the unwrapped run (full digest) and the
+    committed pre-refactor golden (executed/failed/changed sets)."""
+    suite = victoriametrics_like_suite()
+    plain = run_faas_experiment("baseline", suite, seed=0)
+    chaotic = run_chaos_experiment("baseline_chaos", suite, chaos=ZERO,
+                                   seed=0, n_calls=15, max_retries=0)
+    assert report_digest(chaotic.report) == report_digest(plain.report)
+    golden = json.load(open(GOLDEN))["baseline_seed0"]
+    assert chaotic.report.executed_benchmarks == golden["executed"]
+    assert chaotic.report.failed_benchmarks == golden["failed"]
+    assert sorted(n for n, c in chaotic.changes_naive.items()
+                  if c.changed) == golden["changed"]
+    # zero intensity also means the naive and robust analysis see the
+    # same calm pairs: any disagreement here is a stats bug, not chaos
+    assert set(chaotic.changes_naive) == set(chaotic.changes_robust)
+
+
+@pytest.mark.parametrize("provider", ["gcf", "azure"])
+def test_zero_intensity_identity_on_other_providers(provider):
+    """Provider profiles with built-in failure rates (gcf/azure draw
+    extra RNG per invocation) must also replay exactly."""
+    suite = victoriametrics_like_suite()
+    plain = run_faas_experiment("p", suite, seed=3, provider=provider,
+                                max_retries=1)
+    chaotic = run_chaos_experiment("c", suite, provider=provider,
+                                   chaos=ZERO, seed=3, n_calls=15,
+                                   max_retries=1)
+    assert report_digest(chaotic.report) == report_digest(plain.report)
+
+
+def test_zero_intensity_wrapper_delegates_backend_protocol():
+    """Duck-typing: the wrapper must expose the inner backend's protocol
+    attributes (the engine and the service router read them)."""
+    suite = victoriametrics_like_suite()
+    inner = SimFaaSBackend(suite, PROVIDER_PROFILES["gcf"], seed=1)
+    wrapped = ChaosBackend(inner, ZERO)
+    assert wrapped.pinned == inner.pinned
+    assert wrapped.keep_alive_s == inner.keep_alive_s
+    assert wrapped.profile is inner.profile
+    assert wrapped.workloads is inner.workloads
+    assert not getattr(wrapped, "realtime", False)
+
+
+def test_zero_intensity_service_replays_scheduler_golden():
+    """The 16-tenant multiplexed schedule digest — the service
+    scheduler's pinned golden — must replay bit-for-bit through a
+    zero-intensity chaos-wrapped fleet."""
+    r = run_multi_tenant_experiment(16, provider="lambda", seed=34,
+                                    chaos=ZERO)
+    assert r.digest == GOLDEN_16_TENANT_DIGEST
+
+
+def test_zero_intensity_pipeline_replays_stream_bit_for_bit():
+    """A selective+cached pipeline stream with a zero-intensity chaos
+    config must produce the identical commit runs (changes, costs,
+    events) as the calm pipeline."""
+    from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
+                          SyntheticSuite, synthetic_stream)
+    base = SyntheticSuite()
+    commits, _ = synthetic_stream(
+        base.benchmark_names(), StreamConfig(n_commits=6, seed=2),
+        effectable=base.measurable_names(),
+        drift_candidates=base.quiet_names())
+
+    def stream(chaos):
+        cfg = PipelineConfig(provider="gcf", mode="selective_cached",
+                             n_calls=8, seed=2, chaos=chaos)
+        return Pipeline(SyntheticSuite(base.workloads),
+                        cfg).run_stream(commits)
+
+    plain = stream(None)
+    chaotic = stream(ZERO)
+    assert len(plain.commits) == len(chaotic.commits)
+    for a, b in zip(plain.commits, chaotic.commits):
+        assert a == b
+    assert [str(e) for e in plain.events] \
+        == [str(e) for e in chaotic.events]
+
+
+def test_nonzero_intensity_is_deterministic_per_seed():
+    """Fault injection is a pure function of (seed, config): the same
+    seeded scenario replays bit-for-bit; a different chaos seed yields a
+    different trajectory."""
+    suite = victoriametrics_like_suite()
+
+    def run(chaos_seed):
+        res = run_chaos_experiment(
+            "d", suite, chaos=moderate_chaos(seed=chaos_seed), seed=4,
+            n_calls=6, max_retries=1)
+        return report_digest(res.report), res.chaos_stats
+
+    d1, s1 = run(12)
+    d2, s2 = run(12)
+    d3, s3 = run(13)
+    assert d1 == d2 and s1 == s2
+    assert d1 != d3
+    assert sum(s1.values()) > 0          # chaos actually injected faults

@@ -7,6 +7,9 @@ import pytest
 from repro.kernels import flash_attention, ssd_scan
 from repro.kernels.ref import attention_ref, ssd_ref
 
+# Pallas interpret-mode shape/dtype sweeps, ~45 s: tier-1 skips this module, the nightly CI job runs it
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

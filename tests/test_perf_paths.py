@@ -158,6 +158,7 @@ def test_warm_pool_reuses_and_reaps_deterministically():
 
 
 # --------------------------------------------------- hedge clock at submit
+@pytest.mark.slow  # realtime thread-pool run with genuine multi-second sleeps
 def test_realtime_hedge_clock_starts_at_submit():
     """A straggler submitted in a later wave used to get its hedge clock
     stamped only when first *seen* pending — up to one 0.5 s wait cycle

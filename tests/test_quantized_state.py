@@ -3,9 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.train import optimizer as opt
 from repro.train.quantized_state import (q8_decode, q8_encode, n_blocks,
                                          state_bytes)
+
+# 8-bit Adam convergence runs, ~10 s: tier-1 skips this module, the
+# nightly CI job runs it
+pytestmark = pytest.mark.slow
 
 
 def test_q8_roundtrip_error_bound():

@@ -14,6 +14,9 @@ from repro.train.data import DataConfig, SyntheticDataset, shard_batch
 from repro.train.optimizer import OptimizerConfig
 from repro.train.train_step import init_train_state
 
+# end-to-end train/checkpoint/restore, jax-compile heavy: tier-1 skips this module, the nightly CI job runs it
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained():
