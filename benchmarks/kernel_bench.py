@@ -135,7 +135,7 @@ class KernelSuite(BenchmarkSuite):
             repeats_per_call: int = 1, parallelism: int = 1,
             memory_mb: int = 0, seed: int = 0, min_results: int = 10,
             adaptive: bool = False, chaos=None,
-            observer=None) -> SuiteRunResult:
+            observer=None, engine=None) -> SuiteRunResult:
         if chaos is not None:
             raise ValueError("fault injection wraps virtual-time backends; "
                              "the kernel suite runs real host timings")
@@ -148,7 +148,8 @@ class KernelSuite(BenchmarkSuite):
         return run_plan(backend, plan,
                         parallelism=max(1, min(parallelism, 2)),
                         seed=seed, min_results=min_results,
-                        adaptive=adaptive, observer=observer)
+                        adaptive=adaptive, observer=observer,
+                        engine=engine)
 
 
 register_suite("kernels", KernelSuite, replace_existing=True)

@@ -509,7 +509,49 @@ def table_chaos_robustness(*, quick: bool = False):
     return "chaos_robustness", harness_us, rows
 
 
+def table_engine_scaling():
+    """Tentpole (planet-scale engine core): the vectorized
+    structure-of-arrays engine vs the scalar reference event loop on the
+    engine_bench synthetic tenant.  Small sizes are measured live with a
+    bit-exactness check; the committed full sweep (BENCH_engine.json,
+    N up to 10^6) is merged in as ``baseline_*`` rows."""
+    t0 = time.perf_counter()
+    import json
+    import os
+
+    from benchmarks import engine_bench as eb
+    suite = eb.synthetic_suite(seed=BASE_SEED)
+    rows = {}
+    for n in (1_000, 10_000):
+        plan = eb.make_size_plan(suite, n, seed=BASE_SEED)
+        n_inv = len(plan.invocations)
+        fast_rep, fast_s = eb._run("fast", suite, plan, BASE_SEED, reps=3)
+        ref_rep, ref_s = eb._run("reference", suite, plan, BASE_SEED,
+                                 reps=2)
+        if eb._digest(fast_rep) != eb._digest(ref_rep):
+            raise AssertionError(f"engine conformance FAILED at N={n_inv}")
+        rows[f"live_n_{n_inv}"] = {
+            "vec_us_per_inv": round(fast_s / n_inv * 1e6, 2),
+            "scalar_us_per_inv": round(ref_s / n_inv * 1e6, 2),
+            "speedup": round(ref_s / fast_s, 1),
+            "bit_exact": True,
+        }
+    baseline = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(eb.__file__))), "BENCH_engine.json")
+    if os.path.exists(baseline):
+        with open(baseline) as f:
+            for r in json.load(f)["sizes"]:
+                rows[f"baseline_n_{r['n_invocations']}"] = {
+                    "vec_s": r["vec_s"],
+                    "vec_us_per_inv": r["vec_us_per_inv"],
+                    "speedup": r.get("speedup"),
+                    "bit_exact": r.get("conformant", False),
+                }
+    harness_us = (time.perf_counter() - t0) * 1e6
+    return "engine_scaling", harness_us, rows
+
+
 ALL_TABLES.extend([table_parallelism_curve, table_memory_autotune,
                    table_adaptive_vs_fixed, table_pipeline_vs_full,
                    table_service_pareto, table_multi_tenant_throughput,
-                   table_chaos_robustness])
+                   table_chaos_robustness, table_engine_scaling])

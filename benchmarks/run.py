@@ -6,6 +6,7 @@ table's rows) followed by a human-readable summary block per table.
     PYTHONPATH=src python -m benchmarks.run [--tables aa,baseline,...]
                                             [--skip-real] [--roofline FILE]
                                             [--seed N]
+                                            [--engine fast|reference]
 """
 from __future__ import annotations
 
@@ -25,7 +26,15 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed offsetting every table's experiment "
                          "seeds (0 replays the historical tables)")
+    ap.add_argument("--engine", default="fast",
+                    choices=("fast", "reference"),
+                    help="simulation scheduler core: vectorized (default) "
+                         "or the scalar reference loop — every table is "
+                         "bit-identical under both")
     args = ap.parse_args(argv)
+
+    from repro.faas.engine_vec import set_default_engine
+    set_default_engine(args.engine)
 
     import benchmarks.paper_tables as paper_tables
     if args.seed:

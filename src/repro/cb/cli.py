@@ -66,7 +66,8 @@ def _run_service(args, history, providers, modes) -> int:
         for mode in modes:
             service = BenchmarkService(
                 ServiceConfig(parallelism=args.parallelism,
-                              seed=args.seed), planner=planner)
+                              seed=args.seed, engine=args.engine),
+                planner=planner)
             pipelines = []
             try:
                 for t in range(n_tenants):
@@ -130,6 +131,11 @@ def main(argv=None) -> int:
     ap.add_argument("--n-calls", type=int, default=15)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--parallelism", type=int, default=150)
+    ap.add_argument("--engine", default="fast",
+                    choices=("fast", "reference"),
+                    help="scheduler core: vectorized (default) or the "
+                         "scalar reference loop — reports are "
+                         "bit-identical")
     ap.add_argument("--max-staleness", type=int, default=5)
     ap.add_argument("--adaptive", action="store_true",
                     help="CI-width early stopping inside each commit run")
@@ -149,6 +155,9 @@ def main(argv=None) -> int:
     ap.add_argument("--sqlite", default=None,
                     help="also export the history to this SQLite file")
     args = ap.parse_args(argv)
+
+    from repro.faas.engine_vec import set_default_engine
+    set_default_engine(args.engine)
 
     service_mode = args.jobs > 0 or args.deadline is not None \
         or args.budget is not None
@@ -183,7 +192,7 @@ def main(argv=None) -> int:
                     n_calls=args.n_calls, repeats_per_call=args.repeats,
                     parallelism=args.parallelism, seed=args.seed,
                     max_staleness=args.max_staleness,
-                    adaptive=args.adaptive)
+                    adaptive=args.adaptive, engine=args.engine)
                 rep = Pipeline(get_suite(args.suite), cfg,
                                history=history).run_stream(commits)
                 summary = {

@@ -54,6 +54,10 @@ class PipelineConfig:
     seed: int = 0
     max_staleness: int = 5
     adaptive: bool = False          # attach the AdaptiveController per run
+    engine: object = None           # scheduler core: "fast"/"reference"
+    #                                 (None = process default, i.e. the
+    #                                 vectorized engine; reports are
+    #                                 bit-identical either way)
     detector: DetectorConfig = field(default_factory=DetectorConfig)
     chaos: object = None            # faas/chaos.py ChaosConfig (None = calm;
     #                                 zero intensity is a tested identity)
@@ -197,7 +201,8 @@ class Pipeline:
                 n_calls=cfg.n_calls, repeats_per_call=cfg.repeats_per_call,
                 parallelism=cfg.parallelism, memory_mb=cfg.memory_mb,
                 seed=cfg.seed, min_results=cfg.min_results,
-                adaptive=cfg.adaptive, chaos=cfg.chaos, observer=meter)
+                adaptive=cfg.adaptive, chaos=cfg.chaos, observer=meter,
+                engine=cfg.engine)
             changes = result.changes
             rep = result.report
             invocations = len(rep.billed_seconds)

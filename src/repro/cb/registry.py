@@ -50,9 +50,11 @@ class BenchmarkSuite:
             repeats_per_call: int = 3, parallelism: int = 150,
             memory_mb: int = 2048, seed: int = 0, min_results: int = 10,
             adaptive: bool = False, chaos=None,
-            observer: Optional[EngineObserver] = None) -> SuiteRunResult:
+            observer: Optional[EngineObserver] = None,
+            engine: Optional[str] = None) -> SuiteRunResult:
         """`chaos` is a faas/chaos.py ChaosConfig for simulated suites;
-        realtime suites must reject a non-None value."""
+        realtime suites must reject a non-None value.  `engine` selects
+        the scheduler core ("fast"/"reference"; None = process default)."""
         raise NotImplementedError
 
     def job_workloads(self, benchmarks: List[str], commit: Commit) -> Dict:
@@ -70,12 +72,18 @@ def _commit_seed(seed: int, commit: Commit) -> int:
 
 def run_plan(backend, plan, *, parallelism: int, seed: int,
              min_results: int, adaptive: bool = False,
-             observer: Optional[EngineObserver] = None) -> SuiteRunResult:
+             observer: Optional[EngineObserver] = None,
+             engine: Optional[str] = None) -> SuiteRunResult:
     """Shared engine-run path for every suite: optionally composes the
     AdaptiveController with the caller's observer, and uses the
     controller's analyzer as the final analysis when it decided the run
-    (its pair order is the one the stop decisions saw)."""
-    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism))
+    (its pair order is the one the stop decisions saw).  ``engine``
+    picks the scheduler core ("fast"/"reference", None = process
+    default); observer-driven runs stream through the scalar loop either
+    way."""
+    from repro.faas.engine_vec import make_engine
+    eng = make_engine(backend, EngineConfig(parallelism=parallelism),
+                      engine=engine)
     controller = None
     obs = observer
     if adaptive:
@@ -83,7 +91,7 @@ def run_plan(backend, plan, *, parallelism: int, seed: int,
             plan, AdaptiveConfig(min_results=min_results, seed=seed))
         obs = controller if observer is None \
             else FanoutObserver([controller, observer])
-    report = engine.run(plan, observer=obs)
+    report = eng.run(plan, observer=obs)
     if controller is not None:
         changes = controller.analyzer.analyze()
     else:
@@ -139,7 +147,8 @@ class SyntheticSuite(BenchmarkSuite):
             repeats_per_call: int = 3, parallelism: int = 150,
             memory_mb: int = 2048, seed: int = 0, min_results: int = 10,
             adaptive: bool = False, chaos=None,
-            observer: Optional[EngineObserver] = None) -> SuiteRunResult:
+            observer: Optional[EngineObserver] = None,
+            engine: Optional[str] = None) -> SuiteRunResult:
         from repro.faas.platform import make_provider_backend
         run_seed = _commit_seed(seed, commit)
         plan = rmit.make_plan(sorted(benchmarks), n_calls=n_calls,
@@ -151,7 +160,8 @@ class SyntheticSuite(BenchmarkSuite):
             start_time_s=commit.timestamp_s, chaos=chaos)
         return run_plan(backend, plan, parallelism=parallelism,
                         seed=run_seed, min_results=min_results,
-                        adaptive=adaptive, observer=observer)
+                        adaptive=adaptive, observer=observer,
+                        engine=engine)
 
 
 # ------------------------------------------------------------------ registry

@@ -104,13 +104,16 @@ def run_faas_experiment(name: str, suite: Dict[str, SimWorkload], *,
                         seed: int = 0, start_time_s: float = 0.0,
                         min_results: int = 10,
                         provider: str = "lambda",
-                        max_retries: int = 0) -> ExperimentResult:
+                        max_retries: int = 0,
+                        engine: Optional[str] = None) -> ExperimentResult:
+    from repro.faas.engine_vec import make_engine
     plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
                           repeats_per_call=repeats_per_call, seed=seed)
     backend = _make_backend(suite, provider, memory_mb, seed, start_time_s)
-    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism,
-                                                   max_retries=max_retries))
-    report = SimReport.from_engine(engine.run(plan))
+    eng = make_engine(backend, EngineConfig(parallelism=parallelism,
+                                            max_retries=max_retries),
+                      engine=engine)
+    report = SimReport.from_engine(eng.run(plan))
     changes = analyze(report.pairs, seed=seed, min_results=min_results)
     return ExperimentResult(name=name, report=report, changes=changes)
 
@@ -216,7 +219,9 @@ def run_chaos_experiment(name: str, suite: Dict[str, SimWorkload], *,
                          repeats_per_call: int = 3, parallelism: int = 150,
                          memory_mb: int = 2048, seed: int = 0,
                          start_time_s: float = 0.0, min_results: int = 10,
-                         max_retries: int = 1) -> ChaosExperimentResult:
+                         max_retries: int = 1,
+                         engine: Optional[str] = None
+                         ) -> ChaosExperimentResult:
     """`run_faas_experiment` on a chaos-wrapped platform model.
 
     The engine runs with retries enabled (losses, zombie hits, and storm
@@ -225,15 +230,17 @@ def run_chaos_experiment(name: str, suite: Dict[str, SimWorkload], *,
     accuracy gap between the two is attributable to the statistics, not
     to the run."""
     from repro.faas.chaos import ChaosBackend
+    from repro.faas.engine_vec import make_engine
     plan = rmit.make_plan(sorted(suite), n_calls=n_calls,
                           repeats_per_call=repeats_per_call, seed=seed)
     backend = _make_backend(suite, provider, memory_mb, seed, start_time_s)
     chaos_stats: Dict[str, int] = {}
     if chaos is not None:
         backend = ChaosBackend(backend, chaos)
-    engine = ExecutionEngine(backend, EngineConfig(parallelism=parallelism,
-                                                   max_retries=max_retries))
-    engine_report = engine.run(plan)
+    eng = make_engine(backend, EngineConfig(parallelism=parallelism,
+                                            max_retries=max_retries),
+                      engine=engine)
+    engine_report = eng.run(plan)
     if chaos is not None:
         chaos_stats = dict(backend.stats)
     report = SimReport.from_engine(engine_report)
@@ -465,9 +472,10 @@ def _execute_candidate(cand, suite: Dict[str, SimWorkload], *,
         plan = rmit.make_plan(sorted(suite), n_calls=cand.n_calls,
                               repeats_per_call=cand.repeats_per_call,
                               seed=seed)
-        engine = ExecutionEngine(backend,
-                                 EngineConfig(parallelism=cand.parallelism))
-        report = SimReport.from_engine(engine.run(plan))
+        from repro.faas.engine_vec import make_engine
+        eng = make_engine(backend,
+                          EngineConfig(parallelism=cand.parallelism))
+        report = SimReport.from_engine(eng.run(plan))
     changes = analyze(report.pairs, seed=seed)
     return ExperimentResult(name=cand.label, report=report, changes=changes)
 

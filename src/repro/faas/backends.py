@@ -288,6 +288,29 @@ class SimFaaSBackend:
                                                self._sim_mem)))
         return p.billed_cost(billed_seconds, self.memory_mb)
 
+    def finalize_batch(self, billed: np.ndarray,
+                       wall_seconds: float) -> float:
+        """Array equivalent of `finalize` for the vectorized engine's
+        uniform-memory path.  Bit-identical arithmetic: the ceil values
+        are exact integers below 2**53 either way, and the final sum runs
+        left-to-right over Python floats exactly like the scalar
+        generator sum inside `billed_cost`."""
+        p = self.profile
+        g, m = p.billing_granularity_s, p.min_billed_s
+        if g or m:
+            b = np.maximum(billed, m)
+            if g:
+                b = np.ceil(b / g) * g
+            total = float(sum(b.tolist()))
+        else:
+            total = float(sum(billed.tolist()))
+        cost = (total * self.memory_mb / 1024.0 * p.per_gb_second
+                + billed.shape[0] * p.per_request)
+        if p.per_ghz_second:
+            cost += (total * p.cpu_base_ghz * p.cpu_share(self.memory_mb)
+                     * p.per_ghz_second)
+        return cost
+
 
 class LambdaLikeBackend(SimFaaSBackend):
     """AWS-Lambda-like profile; the historical default platform model."""
@@ -384,6 +407,10 @@ class VMBackend:
                  wall_seconds: float) -> float:
         c = self.cfg
         return wall_seconds / 3600.0 * c.per_hour * c.n_vms
+
+    def finalize_batch(self, billed: np.ndarray,
+                       wall_seconds: float) -> float:
+        return self.finalize([], wall_seconds)
 
 
 # -------------------------------------------------------- realtime backend

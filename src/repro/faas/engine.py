@@ -90,11 +90,15 @@ class WarmPool:
         earliest append, or None (caller cold-starts)."""
         while self._busy and self._busy[0][0] <= t:
             idle_since, seq, inst = heapq.heappop(self._busy)
+            if t - idle_since > keep_alive_s:
+                continue                  # reaped: never migrates to _ready
             heapq.heappush(self._ready, (seq, idle_since, inst))
         while self._ready:
             _, idle_since, inst = heapq.heappop(self._ready)
             if t - idle_since > keep_alive_s:
-                continue                  # reaped (stays expired)
+                continue                  # reaped (entered _ready earlier,
+                #                           expired while queued behind a
+                #                           lower-seq pick)
             return inst
         return None
 

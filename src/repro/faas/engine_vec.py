@@ -1,0 +1,1282 @@
+"""Structure-of-arrays execution engine: wave-batched virtual time.
+
+`VectorEngine` is a drop-in for `ExecutionEngine` (same constructor, same
+`run(plan, observer=None, *, warm_pool=None, start_s=0.0)` contract, same
+`EngineReport`) that replaces the per-event Python dispatch loop with
+epoch-batched NumPy processing.  Instead of popping one `(slot_free_time,
+slot)` event at a time, it pops a *wave* of the W earliest slot events and
+computes slot assignment, warm/cold acquisition, RNG duration draws,
+per-timing diurnal drift, timeout cascades, retries, billing, and pair
+emission as array ops across the whole wave.
+
+Bit-for-bit conformance
+-----------------------
+The fast path replays the scalar engine exactly — same RNG stream, same
+floating-point operation order, same pool/slot decisions:
+
+* **Draws.**  The scalar backend consumes, per dispatch, one lognormal
+  for a cold-start speed plus (net of its internal rewind) one lognormal
+  per executed timing.  A single ``rng.lognormal(0.0, sigma_vector)``
+  call with the per-draw sigmas flattened across the wave consumes the
+  PCG64 stream one ziggurat draw per element in order — bit-identical
+  values and stream position to the scalar per-call sequence, computed
+  in numpy's C loop with the same libm `exp`.  (``np.exp`` over
+  reconstructed ``sigma*z`` would differ in the last ulp on ~5% of
+  values — its SIMD path is *not* libm — so reconstruction is avoided.)
+* **Speculation.**  How many timings a dispatch executes (timeouts break
+  early) determines how many draws it consumes, which shifts every later
+  dispatch's draws.  The wave draws a per-benchmark *predicted* count,
+  computes all durations, and iterates to a fixpoint: lanes before the
+  first misprediction are provably exact, so each round repairs at least
+  one prediction and the loop converges in 1-2 rounds in steady state.
+* **Waves and validity.**  A wave is only valid while no dispatch in it
+  completes at or before a later dispatch's start (that completion would
+  have re-entered the slot heap / warm pool first).  The committed prefix
+  is the longest valid one; the RNG is rewound to exactly the prefix's
+  consumption and the remainder re-runs next wave.
+* **Warm pool.**  `_VecPool` mirrors `WarmPool`'s two-heap semantics
+  (append-sequence pick order, lazy expiry in both heaps) with a pure
+  array sweep; the common steady state — pool draining in lockstep with
+  the wave — is detected and vectorized, anything else falls back to an
+  exact heap mirror.
+
+Routing
+-------
+Runs the scalar engine cannot hand over unchanged are delegated to it:
+observer-driven runs (adaptive controller, service scheduler — results
+must stream causally), shared warm pools, realtime backends, and *active*
+chaos wrappers (fault injection draws per-event keyed streams and tracks
+zombie instances by object identity).  An inactive `ChaosBackend` is an
+exact identity and is unwrapped, so zero-chaos conformance runs exercise
+the fast path.  Hedging runs use the wave draws but commit through an
+exact per-dispatch walk (the hedge threshold is a running median over
+completion order).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from collections.abc import Sequence as _SequenceABC
+from types import SimpleNamespace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.duet import DuetPair
+from repro.core.rmit import Invocation, SuitePlan
+from repro.faas.engine import (EngineConfig, EngineReport, ExecutionEngine,
+                               Instance, InvocationOutcome, _HedgePolicy)
+
+TWO_PI = 2.0 * math.pi
+
+
+def _merge_into(rest: np.ndarray, pos: np.ndarray,
+                new: np.ndarray) -> np.ndarray:
+    """Merge sorted `new` into sorted `rest` at searchsorted positions
+    `pos` — np.insert without its per-call Python overhead."""
+    n, m = rest.shape[0], new.shape[0]
+    out = np.empty(n + m, rest.dtype)
+    idx = pos + np.arange(m)
+    out[idx] = new
+    mask = np.ones(n + m, bool)
+    mask[idx] = False
+    out[mask] = rest
+    return out
+
+
+def _vector_target(backend):
+    """(inner simulated backend, outer backend) when the fast path can run
+    `backend`, else (None, backend).  Inactive chaos wrappers are exact
+    identities and are unwrapped; active ones delegate to the scalar loop."""
+    from repro.faas.backends import SimFaaSBackend, VMBackend
+    from repro.faas.chaos import ChaosBackend
+    inner = backend
+    while isinstance(inner, ChaosBackend):
+        if inner._active:
+            return None, backend
+        inner = inner.inner
+    if isinstance(inner, (SimFaaSBackend, VMBackend)):
+        return inner, backend
+    return None, backend
+
+
+class PairSeq(_SequenceABC):
+    """Array-backed lazy `Sequence[DuetPair]`.
+
+    The fast path emits pairs as parallel column arrays; materializing a
+    million `DuetPair` objects costs more than the whole simulation, so
+    the report carries this lazy view instead.  It compares equal to the
+    scalar engine's plain list and materializes once on first element
+    access (analysis code does `list(pairs)` / iteration)."""
+
+    __slots__ = ("_names", "_prefix", "_bid", "_call", "_iid", "_cold",
+                 "_v1", "_v2", "_items")
+
+    def __init__(self, names, prefix, bid, call, iid, cold, v1, v2):
+        self._names = names            # bench id -> benchmark name
+        self._prefix = prefix          # instance id prefix ("i" / "vm")
+        self._bid = bid
+        self._call = call
+        self._iid = iid
+        self._cold = cold
+        self._v1 = v1
+        self._v2 = v2
+        self._items: Optional[List[DuetPair]] = None
+
+    def _materialize(self) -> List[DuetPair]:
+        items = self._items
+        if items is None:
+            pre = self._prefix
+            iids = [pre + s for s in map(str, self._iid.tolist())]
+            names = list(map(self._names.__getitem__, self._bid.tolist()))
+            items = list(map(DuetPair, names, self._v1.tolist(),
+                             self._v2.tolist(), iids, self._call.tolist(),
+                             self._cold.tolist()))
+            self._items = items
+        return items
+
+    def __len__(self) -> int:
+        return int(self._bid.shape[0])
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __eq__(self, other):
+        if isinstance(other, PairSeq):
+            other = other._materialize()
+        if isinstance(other, list):
+            return self._materialize() == other
+        return NotImplemented
+
+    def __ne__(self, other):
+        eq = self.__eq__(other)
+        return NotImplemented if eq is NotImplemented else not eq
+
+    __hash__ = None
+
+    def __add__(self, other):
+        return self._materialize() + list(other)
+
+    def __radd__(self, other):
+        return list(other) + self._materialize()
+
+    def __repr__(self):
+        return f"PairSeq(n={len(self)})"
+
+
+class _VecPool:
+    """Array-backed mirror of `WarmPool` for the wave loop.
+
+    Entries (release time, speed, instance number) live in append order —
+    row order *is* the pool's pick-sequence order, preserved across
+    compactions.  `sweep` is pure: it computes one wave's warm picks and
+    lazy-expiry drops without mutating anything; `apply` commits the
+    validated prefix."""
+
+    def __init__(self):
+        cap = 1024
+        self._t = np.zeros(cap)
+        self._speed = np.zeros(cap)
+        self._iid = np.zeros(cap, np.int64)
+        self._alive = np.zeros(cap, bool)
+        self._n = 0
+        self._dead = 0
+        # cached alive rows sorted by (t, row): maintained incrementally
+        # across the prefix-only mutations of the steady state, dropped
+        # (None) on compaction / arbitrary kills and rebuilt by argsort
+        self._ord: Optional[np.ndarray] = None
+        self._ordE: Optional[np.ndarray] = None
+
+    def _room(self, m: int) -> None:
+        need = self._n + m
+        cap = self._t.shape[0]
+        if need <= cap:
+            return
+        if self._dead > (self._n >> 1):
+            keep = np.flatnonzero(self._alive[:self._n])
+            k = keep.shape[0]
+            self._t[:k] = self._t[keep]
+            self._speed[:k] = self._speed[keep]
+            self._iid[:k] = self._iid[keep]
+            self._alive[:k] = True
+            self._alive[k:self._n] = False
+            self._n, self._dead = k, 0
+            self._ord = self._ordE = None        # rows renumbered
+            if self._n + m <= cap:
+                return
+        while cap < self._n + m:
+            cap *= 2
+        for name in ("_t", "_speed", "_iid", "_alive"):
+            old = getattr(self, name)
+            new = np.zeros(cap, old.dtype)
+            new[:self._n] = old[:self._n]
+            setattr(self, name, new)
+
+    def push_batch(self, t_end, speed, iid) -> None:
+        m = int(t_end.shape[0])
+        if not m:
+            return
+        self._room(m)
+        n = self._n
+        self._t[n:n + m] = t_end
+        self._speed[n:n + m] = speed
+        self._iid[n:n + m] = iid
+        self._alive[n:n + m] = True
+        self._n = n + m
+        if self._ord is not None:
+            # merge the batch into the cached order; new rows sit after
+            # existing equal times (side="right") exactly as the stable
+            # argsort would place them (all new rows are higher-numbered)
+            srt = np.argsort(t_end, kind="stable")
+            newt = t_end[srt]
+            pos = np.searchsorted(self._ordE, newt, side="right")
+            self._ord = _merge_into(self._ord, pos,
+                                    np.arange(n, n + m, dtype=np.int64)[srt])
+            self._ordE = _merge_into(self._ordE, pos, newt)
+
+    def _alive_order(self):
+        if self._ord is not None:
+            return self._ord, self._ordE
+        rows = np.flatnonzero(self._alive[:self._n])
+        if rows.shape[0] == 0:
+            return rows, rows.astype(np.float64)
+        order = rows[np.argsort(self._t[rows], kind="stable")]
+        self._ord, self._ordE = order, self._t[order]
+        return order, self._ordE
+
+    def sweep(self, pops: np.ndarray, ka: float):
+        """Warm/cold assignment for one wave of ascending pop times.
+        Returns (warm mask, picked rows, staged drops [(stage, row)])."""
+        W = pops.shape[0]
+        warm = np.zeros(W, bool)
+        pick = np.full(W, -1, np.int64)
+        order, E = self._alive_order()
+        ne = order.shape[0]
+        # Eager purge: pop times never decrease across waves, so an entry
+        # already expired relative to pops[0] can never be acquired again.
+        # The scalar WarmPool drops such entries lazily on contact; this
+        # pool is engine-private, so purging now is unobservable and keeps
+        # _alive_order from re-sorting dead weight every wave.
+        if ne:
+            cut = int(np.searchsorted(E, pops[0] - ka, side="left"))
+            if cut:
+                dead_rows = order[:cut]
+                self._alive[dead_rows] = False
+                self._dead += cut
+                order = order[cut:]
+                E = E[cut:]
+                ne -= cut
+                self._ord, self._ordE = order, E
+        if ne == 0 or E[0] > pops[-1]:
+            return warm, pick, ()
+        m = min(W, ne)
+        # Forced-diagonal fast path: entry k is the *only* eligible,
+        # unexpired candidate at pop k (the steady state: releases drain
+        # back in lockstep), so the seq tie-break cannot matter.
+        if (bool(np.all(E[:m] <= pops[:m]))
+                and bool(np.all(pops[:m] - E[:m] <= ka))
+                and (m < 2 or bool(np.all(E[1:m] > pops[:m - 1])))
+                and (ne <= m or E[m] > pops[-1])):
+            warm[:m] = True
+            pick[:m] = order[:m]
+            return warm, pick, ()
+        return self._sweep_general(pops, ka, order, E)
+
+    def _sweep_general(self, pops, ka, order, E):
+        """Exact heap mirror of WarmPool.acquire: busy keyed
+        (idle_since, seq), ready keyed (seq,), lazy expiry in both."""
+        W = pops.shape[0]
+        warm = np.zeros(W, bool)
+        pick = np.full(W, -1, np.int64)
+        drops: List[Tuple[int, int]] = []
+        busy = list(zip(E.tolist(), order.tolist()))
+        heapq.heapify(busy)
+        ready: List[Tuple[int, float]] = []
+        for j in range(W):
+            tj = pops[j]
+            while busy and busy[0][0] <= tj:
+                idle_since, row = heapq.heappop(busy)
+                if tj - idle_since > ka:
+                    drops.append((j, row))
+                    continue
+                heapq.heappush(ready, (row, idle_since))
+            while ready:
+                row, idle_since = heapq.heappop(ready)
+                if tj - idle_since > ka:
+                    drops.append((j, row))
+                    continue
+                warm[j] = True
+                pick[j] = row
+                break
+        return warm, pick, drops
+
+    def apply(self, warm, pick, drops, k: int) -> None:
+        """Commit the first k dispatches' picks and every drop staged at a
+        committed pop (releases are pushed separately, in dispatch order)."""
+        if k:
+            rows = pick[:k][warm[:k]]
+            if rows.shape[0]:
+                self._alive[rows] = False
+                self._dead += int(rows.shape[0])
+                if self._ord is not None:
+                    nr = rows.shape[0]
+                    # diagonal steady state kills exactly the order prefix
+                    if (self._ord.shape[0] >= nr
+                            and np.array_equal(rows, self._ord[:nr])):
+                        self._ord = self._ord[nr:]
+                        self._ordE = self._ordE[nr:]
+                    else:
+                        self._ord = self._ordE = None
+        killed = False
+        for stage, row in drops:
+            if stage < k:
+                self._alive[row] = False
+                self._dead += 1
+                killed = True
+        if killed:
+            self._ord = self._ordE = None
+
+    def acquire_one(self, t: float, ka: float) -> int:
+        """Single acquire (hedge twins), committed immediately; returns
+        the picked entry's row or -1 (caller cold-starts)."""
+        order, E = self._alive_order()
+        if order.shape[0] == 0:
+            return -1
+        pops = np.array([t])
+        warm, pick, drops = self._sweep_general(pops, ka, order, E)
+        self.apply(warm, pick, drops, 1)
+        return int(pick[0]) if warm[0] else -1
+
+    def push_one(self, t_end: float, speed: float, iid: int) -> None:
+        self.push_batch(np.array([t_end]), np.array([speed]),
+                        np.array([iid], np.int64))
+
+
+class _VecRun:
+    """One vectorized virtual-time run (no observer, engine-private pool).
+
+    The run advances in *waves*: pop the W earliest slot events, assign
+    warm/cold instances with one pool sweep, draw every dispatch's RNG
+    stream in bulk, compute all durations with a per-timing-step array
+    loop (the diurnal factor depends on accumulated duration, so steps
+    are sequential *within* a dispatch but vectorized *across* the wave),
+    then commit the longest prefix the scalar engine would have produced
+    identically."""
+
+    def __init__(self, cfg: EngineConfig, target, outer, plan: SuitePlan,
+                 start_s: float):
+        from repro.faas.backends import VMBackend
+        self.cfg = cfg
+        self.target = target
+        self.outer = outer
+        self.plan = plan
+        self.start_s = start_s
+        self.vm = isinstance(target, VMBackend)
+
+    # ------------------------------------------------------------ ingest
+    def _ingest(self) -> None:
+        from operator import attrgetter
+        target, plan = self.target, self.plan
+        invs = plan.invocations
+        N = self.N = len(invs)
+        # Three C-level attribute passes (list(map(attrgetter...)))
+        # beat one fused pass + zip(*) transpose: the transpose would
+        # allocate N short-lived 3-tuples.
+        bseq = list(map(attrgetter("benchmark"), invs))
+        vseq = list(map(attrgetter("version_order"), invs))
+        cseq = list(map(attrgetter("call_index"), invs))
+        # dict.fromkeys dedups in C preserving first-appearance order;
+        # map(dict.__getitem__, ...) resolves ids without a Python frame
+        # per element — together they replace a per-element genexpr.
+        bid_of: Dict[str, int] = {
+            bn: i for i, bn in enumerate(dict.fromkeys(bseq))}
+        self.bid_all = np.fromiter(map(bid_of.__getitem__, bseq),
+                                   np.int64, N)
+        pat_of: Dict[tuple, int] = {
+            v: i for i, v in enumerate(dict.fromkeys(vseq))}
+        self.pid_all = np.fromiter(map(pat_of.__getitem__, vseq),
+                                   np.int64, N)
+        names = list(bid_of)
+        pats = list(pat_of)
+        self.names = names
+        self.call_all = np.fromiter(cseq, np.int64, N)
+        nP = len(pats)
+        Rmax = max((len(p) for p in pats), default=1)
+        self.PAT_R = np.fromiter((len(p) for p in pats), np.int64, nP)
+        self.PAT_N2 = 2 * self.PAT_R
+        self.ISV2 = np.zeros((nP, 2 * Rmax), bool)
+        self.V1COL = np.zeros((nP, Rmax), np.int64)
+        self.V2COL = np.zeros((nP, Rmax), np.int64)
+        for pi, p in enumerate(pats):
+            for r, order in enumerate(p):
+                for pos, ver in enumerate(order):
+                    self.ISV2[pi, 2 * r + pos] = ver == "v2"
+                self.V1COL[pi, r] = 2 * r + order.index("v1")
+                self.V2COL[pi, r] = 2 * r + order.index("v2")
+        # Per-benchmark tables, computed with the *same Python-float
+        # expressions* the scalar backend evaluates per call.
+        B = len(names)
+        wls = [target.workloads[n] for n in names]
+        self.bunst = np.array([w.unstable_pct > 0 for w in wls]) \
+            if B else np.zeros(0, bool)
+        self.any_unst = bool(self.bunst.any())
+        if self.vm:
+            c = target.cfg
+            self.bv1 = np.array([w.true_seconds("v1", env="vm")
+                                 for w in wls])
+            self.bv2 = np.array([w.true_seconds("v2", env="vm")
+                                 for w in wls])
+            self.bsig = np.array([w.run_sigma * c.run_sigma_scale
+                                  for w in wls])
+            self.bfs = np.zeros(B, bool)
+            self.dur0 = c.trial_overhead_s
+            self.amp = c.diurnal_amplitude
+            self.period = 86400.0
+            self.diur_start = 0.0
+            self.rate = 0.0
+            self.sig_inst = 0.0          # pinned fleet: no cold draws
+            self.seq = False
+            self.bmem = None
+        else:
+            p = target.profile
+            self.bv1 = np.array([w.true_seconds("v1") for w in wls])
+            self.bv2 = np.array([w.true_seconds("v2") for w in wls])
+            self.bsig = np.array([w.run_sigma for w in wls])
+            self.bfs = np.array([w.fs_write for w in wls]) \
+                if B else np.zeros(0, bool)
+            self.bov = np.array([p.cold_start_base_s
+                                 + p.cold_start_per_gb_s * target.image_gb
+                                 + w.setup_seconds for w in wls])
+            if target.memory_map is None:
+                self.bcpu = np.full(B, target.cpu_factor)
+                self.bmem = None
+            else:
+                mems = [target.memory_for(n) for n in names]
+                self.bcpu = np.array([p.cpu_share(m) for m in mems])
+                self.bmem = mems
+            self.amp = p.diurnal_amplitude
+            self.period = p.diurnal_period_s
+            self.diur_start = target.start
+            self.bt = p.benchmark_timeout_s
+            self.ft = p.function_timeout_s
+            self.sig_inst = p.instance_sigma
+            self.rate = p.failure_rate
+            self.seq = self.rate > 0.0
+        # used-draw predictor per benchmark: -1 = consumes its full 2R
+        self.predtab = np.full(B, -1, np.int64)
+        self.exec_mask = np.zeros(B, bool)
+        self.fail_mask = np.zeros(B, bool)
+
+    # ----------------------------------------------------------- execute
+    def execute(self) -> EngineReport:
+        cfg = self.cfg
+        self.outer.begin_run(cfg.parallelism)
+        self.rng = self.target._rng
+        self._ingest()
+        P = cfg.parallelism
+        self.slot_t = np.full(P, float(self.start_s))
+        if self.vm:
+            self.vm_speed = self.target._vm_speed
+        else:
+            self.pool = _VecPool()
+            self.ka = self.target.keep_alive_s
+        self.ninst = 0
+        self.wall = 0.0
+        self.cold_starts = self.timeouts = self.failures = 0
+        self.done_n = self.failed_n = self.retries_n = self.hedged = 0
+        self.billed_chunks: List[np.ndarray] = []
+        self.membid_chunks: List[np.ndarray] = []
+        self.pv1c: List[np.ndarray] = []
+        self.pv2c: List[np.ndarray] = []
+        self.pbidc: List[np.ndarray] = []
+        self.pcallc: List[np.ndarray] = []
+        self.piidc: List[np.ndarray] = []
+        self.pcoldc: List[np.ndarray] = []
+        self.cursor = 0
+        self.retryq: deque = deque()
+        self.walk = cfg.hedge_after_factor > 0
+        if self.walk:
+            self.hedge = _HedgePolicy(cfg)
+            self.billed_list: List[float] = []
+            self.mems_list: List[float] = []
+            self.pairs_list: List[DuetPair] = []
+        self.wcap = min(P, 4096)
+        while self.cursor < self.N or self.retryq:
+            self._wave()
+        return self._report()
+
+    # -------------------------------------------------------------- wave
+    def _wave(self) -> None:
+        ns = self._compose()
+        self._fixpoint(ns)
+        k = self._validity(ns)
+        if self.walk:
+            self._walk(ns, k)
+            return
+        k, retried = self._retry_truncate(ns, k)
+        self._commit_state(ns, k)
+        self._tally_fast(ns, k, retried)
+        self.wcap = min(self.cfg.parallelism, max(32, int(k * 1.5) + 8))
+
+    def _compose(self):
+        nr = len(self.retryq)
+        W = min(self.wcap, nr + (self.N - self.cursor))
+        if nr:
+            m = min(nr, W)
+            g1 = np.fromiter((self.retryq[i][0] for i in range(m)),
+                             np.int64, m)
+            a1 = np.fromiter((self.retryq[i][1] for i in range(m)),
+                             np.int64, m)
+            rest = W - m
+            gidx = np.concatenate(
+                [g1, np.arange(self.cursor, self.cursor + rest)])
+            att = np.concatenate([a1, np.zeros(rest, np.int64)])
+            b = self.bid_all[gidx]
+            pidw = self.pid_all[gidx]
+            call = self.call_all[gidx]
+        else:
+            c = self.cursor
+            gidx = np.arange(c, c + W)
+            att = np.zeros(W, np.int64)
+            b = self.bid_all[c:c + W]               # contiguous: view
+            pidw = self.pid_all[c:c + W]
+            call = self.call_all[c:c + W]
+        ns = SimpleNamespace(
+            W=W, nr=nr, gidx=gidx, att=att, b=b, pidw=pidw,
+            call=call, Rw=self.PAT_R[pidw],
+            n2w=self.PAT_N2[pidw])
+        speedw = np.zeros(W)
+        if self.vm:
+            order = np.lexsort((np.arange(self.slot_t.shape[0]),
+                                self.slot_t))[:W]
+            ns.slot_of = order
+            ns.pops = self.slot_t[order].copy()
+            ns.warm = np.zeros(W, bool)
+            ns.cold = np.zeros(W, bool)
+            ns.cold_before = np.zeros(W, np.int64)
+            ns.pick = None
+            ns.drops = ()
+            speedw[:] = self.vm_speed[order]
+            ns.iidnum = order.astype(np.int64)
+        else:
+            # Elastic platforms erase slot identity (a slot is just a free
+            # time), so outside walk mode slot_t is *maintained* sorted;
+            # walk mode mutates slots positionally (hedge twins) and
+            # re-sorts here.
+            st = np.sort(self.slot_t) if self.walk else self.slot_t
+            ns.slot_sorted = st
+            ns.pops = st[:W].copy()
+            warm, pick, drops = self.pool.sweep(ns.pops, self.ka)
+            ns.warm, ns.pick, ns.drops = warm, pick, drops
+            ns.cold = ~warm
+            if warm.any():
+                speedw[warm] = self.pool._speed[pick[warm]]
+            if warm.all():
+                ns.iidnum = self.pool._iid[pick]
+                ns.cold_before = np.zeros(W, np.int64)
+            else:
+                cold_cum = np.cumsum(ns.cold)
+                ns.iidnum = np.where(ns.cold, self.ninst + cold_cum,
+                                     self.pool._iid[pick]).astype(np.int64)
+                ns.cold_before = cold_cum - ns.cold
+        ns.speedw = speedw
+        ns.unst = self.bunst[b]
+        ns.fsl = self.bfs[b]
+        ns.sigl = self.bsig[b]
+        ns.n2maxw = int(ns.n2w.max()) if W else 0
+        return ns
+
+    def _fixpoint(self, ns) -> None:
+        """Iterate speculative draw counts to the scalar fixpoint: lanes
+        before the first misprediction consume a provably correct draw
+        prefix, so pinning each lane's next-round count to its observed
+        usage converges (typically in 1-2 rounds)."""
+        W = ns.W
+        pw = self.predtab[ns.b]
+        npred = np.where(pw < 0, ns.n2w, np.minimum(pw, ns.n2w))
+        norm = ~ns.unst & ~ns.fsl
+        npred = np.where(norm, npred, 0)
+        state0 = self.rng.bit_generator.state
+        ns.state0 = state0
+        iters = 0
+        while True:
+            iters += 1
+            if iters > 1:                 # already positioned on entry
+                self.rng.bit_generator.state = state0
+            if self.seq:
+                failp, unst_outs = self._draws_seq(ns, npred)
+            else:
+                failp, unst_outs = self._draws_fast(ns, npred)
+            self._stages(ns, npred, failp, unst_outs)
+            acct = norm & ~failp
+            npred_eff = np.where(acct, npred, 0)
+            mism = ((ns.used != npred_eff) | ns.starv) & acct
+            if not mism.any():
+                break
+            if iters > 2 * W + 10:
+                raise RuntimeError("vector engine draw fixpoint diverged")
+            npred = np.where(ns.starv, ns.n2w, ns.used)
+            npred = np.where(norm, npred, 0)
+        ns.failp = failp
+        ns.unst_outs = unst_outs
+        ns.used_final = np.where(norm & ~failp, ns.used, 0)
+        # seed future waves' speculation
+        ln = np.flatnonzero(norm & ~failp)
+        if ln.shape[0]:
+            self.predtab[ns.b[ln]] = np.where(
+                ns.used[ln] == ns.n2w[ln], -1, ns.used[ln])
+
+    def _validity(self, ns) -> int:
+        """Longest prefix in which no dispatch completes at or before a
+        later dispatch's pop (such a completion would have re-entered
+        the slot heap and warm pool first in the scalar order)."""
+        W = ns.W
+        ns.push = ns.pops + ns.dur
+        if W > 1:
+            pmin = np.minimum.accumulate(ns.push)
+            bad = pmin[:W - 1] <= ns.pops[1:]
+            if bad.any():
+                return int(np.argmax(bad)) + 1
+        return W
+
+    def _retry_truncate(self, ns, k: int):
+        """Scalar retry semantics: a retried platform failure re-enters
+        at the *front* of the queue, so the wave must cut right after the
+        first retryable failure."""
+        if self.seq and self.cfg.max_retries > 0:
+            retr = ns.failp & (ns.att < self.cfg.max_retries)
+            if retr.any():
+                fr = int(np.argmax(retr))
+                if fr < k:
+                    return fr + 1, True
+        return k, False
+
+    # -------------------------------------------------------------- draws
+    def _sim_direct(self, ns, u: int):
+        """Run one dispatch through the real backend (unstable-noise lanes
+        interleave uniform draws the batch reconstruction cannot mimic);
+        returns (outcome, instance_speed).  Idempotent across fixpoint
+        re-runs: the RNG is positioned by the caller and the instance
+        counter is pinned before every spawn."""
+        target = self.target
+        inv = self.plan.invocations[int(ns.gidx[u])]
+        t = float(ns.pops[u])
+        if self.vm:
+            inst = Instance("vm%d" % int(ns.iidnum[u]), float(ns.speedw[u]))
+            return target.simulate(inv, inst, t, 0.0), inst.speed
+        if ns.cold[u]:
+            target._inst_counter = self.ninst + int(ns.cold_before[u])
+            inst, ov = target.spawn_instance(inv, t, 0)
+            return target.simulate(inv, inst, t, ov), inst.speed
+        inst = Instance("i%d" % int(ns.iidnum[u]), float(ns.speedw[u]))
+        return target.simulate(inv, inst, t, 0.0), inst.speed
+
+    def _draws_fast(self, ns, npred):
+        """No platform failures: every non-unstable dispatch's stream is
+        cold?1:0 + npred lognormals — one array-sigma lognormal fill per
+        segment between unstable lanes is value- and stream-identical to
+        the scalar per-call sequence."""
+        rng = self.rng
+        W = ns.W
+        cold = ns.cold
+        Nmat = np.zeros((W, ns.n2maxw))
+        ns.Nmat = Nmat
+        if (not self.any_unst and not cold.any() and W
+                and bool((npred == npred[0]).all())):
+            # homogeneous steady state: all-warm wave, uniform draw count
+            npc = int(npred[0])
+            if npc:
+                vals = rng.lognormal(0.0, np.repeat(ns.sigl, npc))
+                Nmat[:, :npc] = vals.reshape(W, npc)
+            return np.zeros(W, bool), []
+        cnt = np.where(ns.unst, 0, cold.astype(np.int64) + npred)
+        off = np.zeros(W + 1, np.int64)
+        np.cumsum(cnt, out=off[1:])
+        total = int(off[W])
+        unst_outs: List[Tuple[int, InvocationOutcome]] = []
+        ui = np.flatnonzero(ns.unst)
+        if total:
+            d_of = np.repeat(np.arange(W), cnt)
+            posa = np.arange(total)
+            start_of = off[:W]
+            iscold = (posa == start_of[d_of]) & cold[d_of]
+            sig_flat = np.where(iscold, self.sig_inst, ns.sigl[d_of])
+        if ui.shape[0] == 0:
+            vals = rng.lognormal(0.0, sig_flat) if total else None
+        else:
+            vals = np.empty(total)
+            a = 0
+            for u in ui.tolist():
+                lo, hi = int(off[a]), int(off[u])
+                if hi > lo:
+                    vals[lo:hi] = rng.lognormal(0.0, sig_flat[lo:hi])
+                out, spd = self._sim_direct(ns, u)
+                ns.speedw[u] = spd
+                unst_outs.append((u, out))
+                a = u + 1
+            lo = int(off[a])
+            if total > lo:
+                vals[lo:total] = rng.lognormal(0.0, sig_flat[lo:total])
+        if total:
+            cm = cold & ~ns.unst
+            if cm.any():
+                ns.speedw[cm] = vals[start_of[cm]]
+            nmask = ~iscold
+            rows = d_of[nmask]
+            cols = posa[nmask] - (start_of + cold)[rows]
+            Nmat[rows, cols] = vals[nmask]
+        return np.zeros(W, bool), unst_outs
+
+    def _draws_seq(self, ns, npred):
+        """failure_rate > 0: every dispatch draws a uniform between its
+        cold lognormal and its noise vector, so the stream is walked
+        per-dispatch (values land in arrays; the stage math stays batched)."""
+        rng = self.rng
+        W = ns.W
+        Nmat = np.zeros((W, ns.n2maxw))
+        ns.Nmat = Nmat
+        failp = np.zeros(W, bool)
+        unst_outs: List[Tuple[int, InvocationOutcome]] = []
+        rate = self.rate
+        sig_i = self.sig_inst
+        lognormal = rng.lognormal
+        random = rng.random
+        coldl = ns.cold.tolist()
+        unstl = ns.unst.tolist()
+        fsll = ns.fsl.tolist()
+        sigll = ns.sigl.tolist()
+        npl = npred.tolist()
+        for j in range(W):
+            if unstl[j]:
+                out, spd = self._sim_direct(ns, j)
+                ns.speedw[j] = spd
+                unst_outs.append((j, out))
+                continue
+            if coldl[j]:
+                ns.speedw[j] = float(lognormal(0.0, sig_i))
+            if float(random()) < rate:
+                failp[j] = True
+                continue
+            if fsll[j]:
+                continue
+            n = npl[j]
+            if n:
+                Nmat[j, :n] = lognormal(0.0, sigll[j], size=n)
+        return failp, unst_outs
+
+    # ------------------------------------------------------------- stages
+    def _stages(self, ns, npred, failp, unst_outs) -> None:
+        """Timing step k across the wave: ufunc sequence copied from the
+        scalar backend so every float op associates identically."""
+        W = ns.W
+        vm = self.vm
+        b = ns.b
+        if vm:
+            dur = np.full(W, self.dur0)
+        else:
+            dur = np.where(ns.cold, self.bov[b], 0.0)
+        norm = ~ns.unst & ~ns.fsl & ~failp
+        okv = norm.copy()
+        timedv = np.zeros(W, bool)
+        used = np.zeros(W, np.int64)
+        starv = np.zeros(W, bool)
+        alive = norm.copy()
+        SECS = np.zeros((W, ns.n2maxw))
+        ts1 = self.bv1[b]
+        ts2 = self.bv2[b]
+        speedw = ns.speedw
+        if not vm:
+            cpul = self.bcpu[b]
+        amp, period, dstart = self.amp, self.period, self.diur_start
+        pops, Nmat, n2w = ns.pops, ns.Nmat, ns.n2w
+        n2maxw = ns.n2maxw
+        isv2w = self.ISV2[ns.pidw, :n2maxw] if n2maxw else None
+        # Bulk prefactor: step k's timing is ((ts*N)*speed)*f (/cpu); the
+        # first three factors don't depend on accumulated duration, so
+        # they collapse into one (W, n2max) product before the loop.
+        # In-place ufuncs reorder only commutative float ops (a+b / a*b
+        # are bit-commutative in IEEE-754), so every value matches the
+        # scalar backend's expression order exactly.
+        if n2maxw:
+            Q = np.where(isv2w, ts2[:, None], ts1[:, None])
+            Q *= Nmat
+            Q *= speedw[:, None]
+        anydry = bool((npred < n2w).any())
+        # With one repeat count across the wave (the common plan shape),
+        # act is alive itself: the strips below apply the same masks to
+        # both, so aliasing is safe and saves two ufuncs per step.
+        n2const = bool((n2w == n2maxw).all())
+        # Steady state: every lane survives every step, so the where=
+        # masks are all-True and the masked adds collapse to plain
+        # ufuncs (same binary op per element — bit-identical).
+        aall = n2const and not anydry and bool(alive.all())
+        for k in range(n2maxw):
+            if aall:
+                act = alive
+            else:
+                act = alive if n2const else alive & (n2w > k)
+                if not act.any():
+                    break
+                if anydry:
+                    dry = act & (npred <= k)
+                    if dry.any():
+                        starv |= dry
+                        alive &= ~dry
+                        act &= ~dry
+                        if not act.any():
+                            break
+            x = pops + dur
+            if not vm:
+                x += dstart
+            x *= TWO_PI
+            x /= period
+            np.sin(x, out=x)
+            x *= amp
+            x += 1.0
+            x *= Q[:, k]
+            secs = x
+            if not vm:
+                secs /= cpul
+            if aall:
+                used += 1
+            else:
+                used += act
+            SECS[:, k] = secs
+            if vm:
+                if aall:
+                    dur += secs
+                else:
+                    np.add(dur, secs, out=dur, where=act)
+                continue
+            to = act & (secs > self.bt)
+            if to.any():
+                aall = False
+                timedv |= to
+                okv &= ~to
+                alive &= ~to
+                act &= ~to
+                np.add(dur, self.bt, out=dur, where=to)
+            if aall:
+                dur += secs
+            else:
+                np.add(dur, secs, out=dur, where=act)
+            if k & 1:
+                over = act & (dur > self.ft)
+                if over.any():
+                    aall = False
+                    okv &= ~over
+                    alive &= ~over
+        platform = failp.copy()
+        benchfail = np.zeros(W, bool)
+        if not vm:
+            fsv = ns.fsl & ~failp & ~ns.unst
+            if fsv.any():
+                dur = np.where(fsv, dur + 0.1, dur)
+                benchfail |= fsv
+            if failp.any():
+                dur = np.where(failp, dur + 0.05, dur)
+        idx = np.arange(W)[:, None]
+        V1S = SECS[idx, self.V1COL[ns.pidw]]
+        V2S = SECS[idx, self.V2COL[ns.pidw]]
+        for u, out in unst_outs:
+            dur[u] = out.duration_s
+            okv[u] = out.ok
+            timedv[u] = out.timed_out
+            platform[u] = out.platform_failure
+            benchfail[u] = out.benchmark_failure
+            if out.ok:
+                for r, pr in enumerate(out.pairs):
+                    V1S[u, r] = pr.v1_seconds
+                    V2S[u, r] = pr.v2_seconds
+        ns.dur, ns.okv, ns.timedv = dur, okv, timedv
+        ns.used, ns.starv = used, starv
+        ns.platform, ns.benchfail = platform, benchfail
+        ns.V1S, ns.V2S = V1S, V2S
+
+    # ------------------------------------------------------------- commit
+    def _rewind_prefix(self, ns, k: int) -> None:
+        """Reposition the RNG to exactly the committed prefix's
+        consumption (the wave drew for all W lanes)."""
+        rng = self.rng
+        rng.bit_generator.state = ns.state0
+        used = ns.used_final
+        unst = ns.unst
+        cold = ns.cold
+        if not self.seq:
+            cnt = np.where(unst[:k], 0,
+                           cold[:k].astype(np.int64) + used[:k])
+            a = 0
+            for u in np.flatnonzero(unst[:k]).tolist():
+                seg = int(cnt[a:u].sum())
+                if seg:
+                    rng.standard_normal(seg)
+                self._sim_direct(ns, u)
+                a = u + 1
+            seg = int(cnt[a:k].sum())
+            if seg:
+                rng.standard_normal(seg)
+            return
+        lognormal = rng.lognormal
+        random = rng.random
+        for j in range(k):
+            if unst[j]:
+                self._sim_direct(ns, j)
+                continue
+            if cold[j]:
+                lognormal(0.0, self.sig_inst)
+            random()
+            if ns.failp[j] or ns.fsl[j]:
+                continue
+            n = int(used[j])
+            if n:
+                lognormal(0.0, float(ns.sigl[j]), size=n)
+
+    def _commit_state(self, ns, k: int) -> None:
+        """Commit slots / pool / instance counter / queue for the first k
+        dispatches and rewind the RNG if the wave was truncated."""
+        if k < ns.W:
+            self._rewind_prefix(ns, k)
+        push = ns.push
+        if self.vm:
+            self.slot_t[ns.slot_of[:k]] = push[:k]
+        else:
+            self.pool.apply(ns.warm, ns.pick, ns.drops, k)
+            self.pool.push_batch(push[:k], ns.speedw[:k], ns.iidnum[:k])
+            st = ns.slot_sorted
+            if self.walk:
+                self.slot_t = np.concatenate([st[k:], push[:k]])
+            else:
+                rel = np.sort(push[:k])
+                rest = st[k:]
+                self.slot_t = _merge_into(rest,
+                                          np.searchsorted(rest, rel), rel)
+            ncold = int(np.count_nonzero(ns.cold[:k]))
+            self.cold_starts += ncold
+            self.ninst += ncold
+            self.target._inst_counter = self.ninst
+        nr_used = min(ns.nr, k)
+        for _ in range(nr_used):
+            self.retryq.popleft()
+        self.cursor += k - nr_used
+
+    def _tally_fast(self, ns, k: int, retried: bool) -> None:
+        kacc = k
+        if retried:
+            self.retries_n += 1
+            self.retryq.appendleft((int(ns.gidx[k - 1]),
+                                    int(ns.att[k - 1]) + 1))
+            kacc = k - 1
+        self.wall = max(self.wall, float(ns.push[:k].max()))
+        self.billed_chunks.append(ns.dur[:k].copy())
+        if self.bmem is not None:
+            self.membid_chunks.append(ns.b[:k].copy())
+        if not kacc:
+            return
+        o = ns.okv[:kacc]
+        nok = int(np.count_nonzero(o))
+        self.done_n += nok
+        self.failed_n += kacc - nok
+        self.timeouts += int(np.count_nonzero(ns.timedv[:kacc]))
+        self.failures += int(np.count_nonzero(ns.platform[:kacc]))
+        self.failures += int(np.count_nonzero(ns.benchfail[:kacc]))
+        bk = ns.b[:kacc]
+        if nok == kacc:                   # every dispatch succeeded
+            self.exec_mask[bk] = True
+            Rw = ns.Rw[:kacc]
+            if bool((Rw == Rw[0]).all()):
+                R0 = int(Rw[0])
+                self.pv1c.append(ns.V1S[:kacc, :R0].ravel())
+                self.pv2c.append(ns.V2S[:kacc, :R0].ravel())
+                self.pbidc.append(np.repeat(bk, R0))
+                self.pcallc.append(np.repeat(ns.call[:kacc], R0))
+                self.piidc.append(np.repeat(ns.iidnum[:kacc], R0))
+                self.pcoldc.append(np.repeat(ns.cold[:kacc], R0))
+                return
+        else:
+            self.exec_mask[bk[o]] = True
+            self.fail_mask[bk[(~o) & ~ns.platform[:kacc]]] = True
+        oi = np.flatnonzero(o)
+        if oi.shape[0]:
+            reps = ns.Rw[oi]
+            tot = int(reps.sum())
+            rows = np.repeat(oi, reps)
+            base = np.cumsum(reps) - reps
+            cols = np.arange(tot) - np.repeat(base, reps)
+            self.pv1c.append(ns.V1S[rows, cols])
+            self.pv2c.append(ns.V2S[rows, cols])
+            self.pbidc.append(np.repeat(bk[oi], reps))
+            self.pcallc.append(np.repeat(ns.call[:kacc][oi], reps))
+            self.piidc.append(np.repeat(ns.iidnum[:kacc][oi], reps))
+            self.pcoldc.append(np.repeat(ns.cold[:kacc][oi], reps))
+
+    # ---------------------------------------------------------- walk mode
+    def _walk(self, ns, kv: int) -> None:
+        """Hedging run: wave draws stay batched, but accounting replays
+        the scalar main loop per dispatch because the hedge threshold is
+        a running median over completion order and a fired hedge rewrites
+        billing mid-wave."""
+        cfg = self.cfg
+        dur, push, platform = ns.dur, ns.push, ns.platform
+        stop = kv
+        fire = None
+        for j in range(kv):
+            dj = float(dur[j])
+            self.billed_list.append(dj)
+            if self.bmem is not None:
+                self.mems_list.append(self.bmem[int(ns.b[j])])
+            thr = self.hedge.threshold()
+            if thr is not None and dj > thr:
+                fire = ("hedge", j)
+                stop = j + 1
+                break
+            self.wall = max(self.wall, float(push[j]))
+            if platform[j] and int(ns.att[j]) < cfg.max_retries:
+                fire = ("retry", j)
+                stop = j + 1
+                break
+            self._account_one(ns, j)
+        self._commit_state(ns, stop)
+        if fire is not None:
+            kind, j = fire
+            if kind == "retry":
+                self.retries_n += 1
+                self.retryq.appendleft((int(ns.gidx[j]),
+                                        int(ns.att[j]) + 1))
+            else:
+                self._hedge_fire(ns, j)
+        self.wcap = min(cfg.parallelism, max(32, int(stop * 1.5) + 8))
+
+    def _account_one(self, ns, j: int) -> None:
+        bj = int(ns.b[j])
+        if ns.timedv[j]:
+            self.timeouts += 1
+        if ns.okv[j]:
+            self.done_n += 1
+            self.exec_mask[bj] = True
+            self.pairs_list.extend(self._pairs_of(ns, j))
+            self.hedge.record(float(ns.dur[j]))
+        else:
+            self.failed_n += 1
+            if ns.platform[j]:
+                self.failures += 1
+            else:
+                self.fail_mask[bj] = True
+                if ns.benchfail[j]:
+                    self.failures += 1
+
+    def _pairs_of(self, ns, j: int) -> List[DuetPair]:
+        for u, out in ns.unst_outs:
+            if u == j:
+                return list(out.pairs)
+        name = self.names[int(ns.b[j])]
+        iid = ("vm%d" if self.vm else "i%d") % int(ns.iidnum[j])
+        ci = int(ns.call[j])
+        cs = bool(ns.cold[j])
+        return [DuetPair(benchmark=name, v1_seconds=float(ns.V1S[j, r]),
+                         v2_seconds=float(ns.V2S[j, r]), instance_id=iid,
+                         call_index=ci, cold_start=cs)
+                for r in range(int(ns.Rw[j]))]
+
+    def _dispatch_one(self, inv: Invocation):
+        """One scalar dispatch against live state (hedge twins); mirrors
+        the scalar engine's heap-pop + acquire + release exactly."""
+        target = self.target
+        idx = int(np.argmin(self.slot_t))
+        t = float(self.slot_t[idx])
+        if self.vm:
+            inst = Instance("vm%d" % idx, float(self.vm_speed[idx]))
+            out = target.simulate(inv, inst, t, 0.0)
+            t_end = t + out.duration_s
+            self.slot_t[idx] = t_end
+            return out, t, t_end
+        row = self.pool.acquire_one(t, self.ka)
+        if row >= 0:
+            spd = float(self.pool._speed[row])
+            iid = int(self.pool._iid[row])
+            inst = Instance("i%d" % iid, spd)
+            ov = 0.0
+        else:
+            target._inst_counter = self.ninst
+            inst, ov = target.spawn_instance(inv, t, 0)
+            self.ninst += 1
+            self.cold_starts += 1
+            spd = inst.speed
+            iid = self.ninst
+        out = target.simulate(inv, inst, t, ov)
+        t_end = t + out.duration_s
+        self.slot_t[idx] = t_end
+        self.pool.push_one(t_end, spd, iid)
+        return out, t, t_end
+
+    def _hedge_fire(self, ns, j: int) -> None:
+        """Exact replica of the scalar hedge block for lane j, with the
+        twin dispatched against the already-committed prefix state."""
+        cfg = self.cfg
+        self.hedged += 1
+        inv = self.plan.invocations[int(ns.gidx[j])]
+        t_start = float(ns.pops[j])
+        t_end0 = float(ns.push[j])
+        dur_j = float(ns.dur[j])
+        ok0 = bool(ns.okv[j])
+        alt_out, alt_ts, alt_te = self._dispatch_one(inv)
+        end_s = t_end0
+        alt_billed = alt_out.duration_s
+        alt_end = alt_te
+        use_alt = alt_out.ok and ((not ok0) or alt_te < t_end0)
+        if use_alt:
+            if alt_te < t_end0:
+                self.billed_list[-1] = max(0.0, min(dur_j,
+                                                    alt_te - t_start))
+                end_s = alt_te
+        elif ok0:
+            alt_billed = max(0.0, min(alt_billed, t_end0 - alt_ts))
+            alt_end = min(alt_end, max(t_end0, alt_ts))
+        self.billed_list.append(alt_billed)
+        if self.bmem is not None:
+            self.mems_list.append(self.bmem[int(ns.b[j])])
+        self.wall = max(self.wall, alt_end)
+        self.wall = max(self.wall, end_s)
+        if use_alt:
+            w_ok, w_timed = alt_out.ok, alt_out.timed_out
+            w_plat = alt_out.platform_failure
+            w_bf = alt_out.benchmark_failure
+            w_dur = alt_out.duration_s
+            w_pairs = list(alt_out.pairs)
+        else:
+            w_ok, w_timed = ok0, bool(ns.timedv[j])
+            w_plat = bool(ns.platform[j])
+            w_bf = bool(ns.benchfail[j])
+            w_dur = dur_j
+            w_pairs = self._pairs_of(ns, j) if ok0 else []
+        if w_plat and int(ns.att[j]) < cfg.max_retries:
+            self.retries_n += 1
+            self.retryq.appendleft((int(ns.gidx[j]), int(ns.att[j]) + 1))
+            return
+        bj = int(ns.b[j])
+        if w_timed:
+            self.timeouts += 1
+        if w_ok:
+            self.done_n += 1
+            self.exec_mask[bj] = True
+            self.pairs_list.extend(w_pairs)
+            self.hedge.record(w_dur)
+        else:
+            self.failed_n += 1
+            if w_plat:
+                self.failures += 1
+            else:
+                self.fail_mask[bj] = True
+                if w_bf:
+                    self.failures += 1
+
+    # ------------------------------------------------------------- report
+    def _report(self) -> EngineReport:
+        if self.walk:
+            billed_list: List[float] = self.billed_list
+            pairs = self.pairs_list
+            billed_arr = None
+        else:
+            billed_arr = (np.concatenate(self.billed_chunks)
+                          if self.billed_chunks else np.zeros(0))
+            billed_list = billed_arr.tolist()
+            z = np.zeros(0)
+            zi = np.zeros(0, np.int64)
+            zb = np.zeros(0, bool)
+            pairs = PairSeq(
+                self.names, "vm" if self.vm else "i",
+                np.concatenate(self.pbidc) if self.pbidc else zi,
+                np.concatenate(self.pcallc) if self.pcallc else zi,
+                np.concatenate(self.piidc) if self.piidc else zi,
+                np.concatenate(self.pcoldc) if self.pcoldc else zb,
+                np.concatenate(self.pv1c) if self.pv1c else z,
+                np.concatenate(self.pv2c) if self.pv2c else z)
+        wall = self.wall
+        if self.vm:
+            cost = self.outer.finalize(billed_list, wall)
+        elif self.bmem is not None:
+            # finalize()'s per-invocation pricing zips billed with the
+            # backend's memory log; rebuild it aligned with our billing
+            # order (direct simulate calls polluted it with junk entries)
+            if self.walk:
+                self.target._sim_mem = list(self.mems_list)
+            else:
+                memb = (np.concatenate(self.membid_chunks)
+                        if self.membid_chunks else np.zeros(0, np.int64))
+                bm = self.bmem
+                self.target._sim_mem = [bm[i] for i in memb.tolist()]
+            cost = self.outer.finalize(billed_list, wall)
+        else:
+            arr = (billed_arr if billed_arr is not None
+                   else np.asarray(billed_list))
+            cost = self.target.finalize_batch(arr, wall)
+        ex = {self.names[i]
+              for i in np.flatnonzero(self.exec_mask).tolist()}
+        fl = {self.names[i]
+              for i in np.flatnonzero(self.fail_mask).tolist()}
+        return EngineReport(
+            pairs=pairs, wall_seconds=wall,
+            billed_seconds=billed_list, cost_dollars=cost,
+            cold_starts=self.cold_starts, timeouts=self.timeouts,
+            failures=self.failures,
+            executed_benchmarks=sorted(ex - fl),
+            failed_benchmarks=sorted(fl),
+            invocations_done=self.done_n,
+            invocations_failed=self.failed_n,
+            retries=self.retries_n, hedged=self.hedged)
+
+
+class VectorEngine:
+    """Drop-in `ExecutionEngine` with the vectorized virtual-time core.
+
+    Same constructor and `run` contract; runs the fast path when the
+    backend qualifies (see `_vector_target`) and transparently delegates
+    to the scalar engine otherwise — observer-driven runs, shared warm
+    pools, realtime backends, active chaos."""
+
+    def __init__(self, backend, cfg: Optional[EngineConfig] = None):
+        self.backend = backend
+        self.cfg = cfg or EngineConfig()
+        self._scalar = ExecutionEngine(backend, self.cfg)
+
+    def run(self, plan: SuitePlan, observer=None, *,
+            warm_pool=None, start_s: float = 0.0) -> EngineReport:
+        target, _outer = _vector_target(self.backend)
+        if (observer is not None or warm_pool is not None
+                or target is None
+                or getattr(self.backend, "realtime", False)):
+            return self._scalar.run(plan, observer, warm_pool=warm_pool,
+                                    start_s=start_s)
+        return _VecRun(self.cfg, target, self.backend, plan,
+                       start_s).execute()
+
+
+_DEFAULT_ENGINE = "fast"
+
+
+def set_default_engine(engine: str) -> None:
+    """Process-wide default used by ``make_engine(engine=None)`` callers —
+    the funnel for ``--engine fast|reference`` CLI flags."""
+    if engine not in ("fast", "reference"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'fast' or 'reference')")
+    global _DEFAULT_ENGINE
+    _DEFAULT_ENGINE = engine
+
+
+def make_engine(backend, cfg: Optional[EngineConfig] = None, *,
+                engine: Optional[str] = None):
+    """Engine factory: ``fast`` (vectorized, the default) or ``reference``
+    (the scalar event loop).  Both produce identical reports; ``None``
+    picks up the process default (`set_default_engine`)."""
+    if engine is None:
+        engine = _DEFAULT_ENGINE
+    if engine == "reference":
+        return ExecutionEngine(backend, cfg)
+    if engine != "fast":
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(expected 'fast' or 'reference')")
+    return VectorEngine(backend, cfg)

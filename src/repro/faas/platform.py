@@ -173,10 +173,13 @@ class SimulatedFaaS:
             seed=self.seed, start_time_s=self.start)
 
     def run_suite(self, plan: SuitePlan, *, parallelism: int = 150,
-                  observer: Optional[EngineObserver] = None) -> SimReport:
-        engine = ExecutionEngine(self.make_backend(),
-                                 EngineConfig(parallelism=parallelism))
-        return SimReport.from_engine(engine.run(plan, observer=observer))
+                  observer: Optional[EngineObserver] = None,
+                  engine: str = "fast") -> SimReport:
+        from repro.faas.engine_vec import make_engine
+        eng = make_engine(self.make_backend(),
+                          EngineConfig(parallelism=parallelism),
+                          engine=engine)
+        return SimReport.from_engine(eng.run(plan, observer=observer))
 
 
 @dataclass
@@ -205,11 +208,13 @@ class SimulatedVM:
         self.seed = seed
 
     def run_suite(self, plan: SuitePlan,
-                  observer: Optional[EngineObserver] = None) -> SimReport:
+                  observer: Optional[EngineObserver] = None,
+                  engine: str = "fast") -> SimReport:
+        from repro.faas.engine_vec import make_engine
         backend = VMBackend(self.w, self.cfg, seed=self.seed)
-        engine = ExecutionEngine(backend,
-                                 EngineConfig(parallelism=self.cfg.n_vms))
+        eng = make_engine(backend, EngineConfig(parallelism=self.cfg.n_vms),
+                          engine=engine)
         # the original dataset reported wall-clock VM-hours, not per-call
         # billed durations
-        return SimReport.from_engine(engine.run(plan, observer=observer),
+        return SimReport.from_engine(eng.run(plan, observer=observer),
                                      billed=[])

@@ -10,16 +10,34 @@ from __future__ import annotations
 import jax
 
 
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,) * n`` where the installed jax has explicit axis
+    types (>= 0.5), ``{}`` otherwise — older jax's implicit behaviour *is*
+    Auto, so meshes built either way shard identically."""
+    if hasattr(jax.sharding, "AxisType"):
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-less mesh (shapes/names only) across jax versions: newer jax
+    takes ``(shape, axis_names)`` like ``make_mesh``; older jax takes a
+    single tuple of ``(name, size)`` pairs."""
+    from jax.sharding import AbstractMesh
+    if hasattr(jax.sharding, "AxisType"):
+        return AbstractMesh(tuple(shape), tuple(axes),
+                            **axis_types_kwargs(len(axes)))
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / elastic rescale)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **axis_types_kwargs(len(axes)))

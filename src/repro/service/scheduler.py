@@ -63,6 +63,13 @@ class ServiceConfig:
     tenant_weights: Dict[str, float] = field(default_factory=dict)
     admission: AdmissionConfig = field(default_factory=AdmissionConfig)
     seed: int = 0
+    engine: object = None               # scheduler core: "fast"/"reference"
+    #                                     (None = process default).  Fleet
+    #                                     runs share a persistent WarmPool,
+    #                                     which the vectorized core hands
+    #                                     to its embedded scalar loop — the
+    #                                     knob exists so operators can pin
+    #                                     "reference" explicitly.
     chaos: object = None                # faas/chaos.py ChaosConfig: wraps
     #                                     every fleet's router in the
     #                                     fault-injection layer (None =
@@ -235,9 +242,11 @@ class _Fleet:
             # keyed by job id so tenants stay mutually deterministic
             from repro.faas.chaos import ChaosBackend
             backend = ChaosBackend(self.router, cfg.chaos)
-        self.engine = ExecutionEngine(
+        from repro.faas.engine_vec import make_engine
+        self.engine = make_engine(
             backend, EngineConfig(parallelism=parallelism,
-                                  max_retries=cfg.max_retries))
+                                  max_retries=cfg.max_retries),
+            engine=cfg.engine)
         self.warm_pool = WarmPool()
         self.queue = FairQueue(weights=dict(cfg.tenant_weights))
         self.jobs: Dict[str, _JobExec] = {}

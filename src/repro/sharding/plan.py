@@ -209,6 +209,6 @@ def _smallest_divisor_geq(n: int, k: int) -> int:
 
 def single_device_mesh() -> Mesh:
     """1x1 (data, model) mesh for CPU unit tests."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import axis_types_kwargs
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         **axis_types_kwargs(2))

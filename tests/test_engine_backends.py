@@ -198,6 +198,25 @@ def test_engine_accepts_shared_warm_pool():
     assert r3.cold_starts == r1.cold_starts
 
 
+def test_warm_pool_reaps_expired_ready_entries():
+    """Regression: an instance promoted into the ready heap but not
+    picked must still honor keep-alive — an acquire long after promotion
+    reaps it instead of handing out a zombie that has been idle far past
+    the keep-alive window."""
+    from repro.faas.engine import Instance, WarmPool
+    pool = WarmPool()
+    a, b = Instance("a", 1.0), Instance("b", 1.0)
+    pool.release(a, idle_since=10.0)
+    pool.release(b, idle_since=20.0)
+    # both promote busy->ready; the earliest-seq entry (a) is handed out
+    # and b stays queued in the ready heap
+    assert pool.acquire(100.0, keep_alive_s=600.0) is a
+    assert len(pool) == 1
+    # b has now sat idle 1480 s > 600 s keep-alive: reaped, not reused
+    assert pool.acquire(1500.0, keep_alive_s=600.0) is None
+    assert len(pool) == 0
+
+
 # ------------------------------------------------------------- VM backend
 def test_vm_backend_pins_instances_to_slots():
     suite = _suite(4)

@@ -1,0 +1,166 @@
+"""Differential conformance: VectorEngine == ExecutionEngine, bit for bit.
+
+Every scenario runs the same plan through the scalar reference engine and
+the vectorized engine on independently-seeded (identical) backends and
+asserts the full EngineReport matches exactly — float equality, not
+approx: the vectorized engine replays the scalar RNG stream draw for
+draw, so any divergence is a bug, not noise.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.experiment import victoriametrics_like_suite
+from repro.core.rmit import make_plan
+from repro.faas.backends import (AZURE_PROFILE, GCF_PROFILE, LAMBDA_PROFILE,
+                                 SimFaaSBackend, VMBackend)
+from repro.faas.chaos import ChaosBackend, ChaosConfig, FaultSpec
+from repro.faas.engine import EngineConfig, EngineObserver, ExecutionEngine
+from repro.faas.engine_vec import PairSeq, VectorEngine, make_engine
+
+SUITE = victoriametrics_like_suite()
+PROFILES = {"lambda": LAMBDA_PROFILE, "gcf": GCF_PROFILE,
+            "azure": AZURE_PROFILE}
+
+
+def _plan(n_calls=6, seed=0, benchmarks=None):
+    return make_plan(sorted(benchmarks or SUITE), n_calls=n_calls,
+                     repeats_per_call=3, seed=seed)
+
+
+def _pair(p):
+    return (p.benchmark, p.v1_seconds, p.v2_seconds, p.cold_start)
+
+
+def assert_reports_equal(ref, fast):
+    assert [_pair(p) for p in ref.pairs] == [_pair(p) for p in fast.pairs]
+    assert ref.billed_seconds == list(fast.billed_seconds)
+    assert ref.wall_seconds == fast.wall_seconds
+    assert ref.cost_dollars == fast.cost_dollars
+    assert ref.cold_starts == fast.cold_starts
+    assert ref.timeouts == fast.timeouts
+    assert ref.failures == fast.failures
+    assert ref.executed_benchmarks == fast.executed_benchmarks
+    assert ref.failed_benchmarks == fast.failed_benchmarks
+    assert ref.invocations_done == fast.invocations_done
+    assert ref.invocations_failed == fast.invocations_failed
+    assert ref.retries == fast.retries
+    assert ref.hedged == fast.hedged
+    assert ref.skipped == fast.skipped
+    assert ref.lost == fast.lost
+    assert ref.duplicates_dropped == fast.duplicates_dropped
+
+
+def _diff(make_backend, cfg=None, plan=None, start_s=0.0):
+    plan = plan or _plan()
+    ref = ExecutionEngine(make_backend(), cfg).run(plan, start_s=start_s)
+    fast = VectorEngine(make_backend(), cfg).run(plan, start_s=start_s)
+    assert_reports_equal(ref, fast)
+    return ref, fast
+
+
+# ------------------------------------------------------------ providers
+@pytest.mark.parametrize("provider", sorted(PROFILES))
+def test_providers_bit_exact(provider):
+    """Full 106-benchmark suite (fs-write lanes, the always-timeout
+    Benchmark099, unstable lanes 17-19) on each provider profile."""
+    _diff(lambda: SimFaaSBackend(SUITE, PROFILES[provider], seed=7))
+
+
+@pytest.mark.parametrize("provider", sorted(PROFILES))
+def test_memory_map_bit_exact(provider):
+    mm = {name: (512 if i % 3 else 3008)
+          for i, name in enumerate(sorted(SUITE))}
+    _diff(lambda: SimFaaSBackend(SUITE, PROFILES[provider], seed=3,
+                                 memory_map=mm))
+
+
+def test_retries_bit_exact():
+    """GCF has failure_rate > 0, so retries + the per-dispatch uniform
+    draw path are both exercised."""
+    _diff(lambda: SimFaaSBackend(SUITE, GCF_PROFILE, seed=11),
+          EngineConfig(max_retries=3))
+
+
+def test_vm_backend_bit_exact():
+    _diff(lambda: VMBackend(SUITE, seed=5), EngineConfig(parallelism=3))
+
+
+def test_small_parallelism_and_start_offset():
+    _diff(lambda: SimFaaSBackend(SUITE, seed=1),
+          EngineConfig(parallelism=500), start_s=1000.0)
+    _diff(lambda: SimFaaSBackend(SUITE, seed=1),
+          EngineConfig(parallelism=3), plan=_plan(n_calls=2))
+
+
+# -------------------------------------------------------------- hedging
+def test_hedging_bit_exact():
+    cfg = EngineConfig(parallelism=4, hedge_after_factor=3.0)
+    ref, fast = _diff(lambda: SimFaaSBackend(SUITE, seed=2),
+                      cfg, plan=_plan(n_calls=4))
+    assert ref.hedged > 0                      # scenario actually hedges
+
+
+def test_hedging_with_retries_bit_exact():
+    cfg = EngineConfig(parallelism=4, hedge_after_factor=3.0, max_retries=2)
+    _diff(lambda: SimFaaSBackend(SUITE, AZURE_PROFILE, seed=2), cfg,
+          plan=_plan(n_calls=4))
+
+
+# ---------------------------------------------------------------- chaos
+def test_zero_chaos_identity():
+    """PR 5 invariant: an inactive ChaosBackend is bit-transparent, and
+    the vectorized engine unwraps it rather than falling back."""
+    cfg = ChaosConfig(intensity=0.0)
+    _diff(lambda: ChaosBackend(SimFaaSBackend(SUITE, seed=4), cfg))
+
+
+def test_active_chaos_delegates_and_matches():
+    cfg = ChaosConfig(intensity=1.0, seed=9,
+                      faults=(FaultSpec("loss", rate=0.05),))
+    _diff(lambda: ChaosBackend(SimFaaSBackend(SUITE, seed=4), cfg),
+          EngineConfig(max_retries=2), plan=_plan(n_calls=3))
+
+
+def test_observer_delegates_to_reference():
+    """Observer-driven runs fall back to the scalar loop: same object
+    semantics, streaming callbacks preserved."""
+    seen = []
+
+    class Obs(EngineObserver):
+        def on_result(self, done):
+            seen.append(done.invocation.benchmark)
+
+    eng = VectorEngine(SimFaaSBackend(SUITE, seed=6))
+    rep = eng.run(_plan(n_calls=2), observer=Obs())
+    assert len(seen) == rep.invocations_done + rep.invocations_failed
+
+
+# ------------------------------------------------------------- plumbing
+def test_make_engine_factory():
+    be = SimFaaSBackend(SUITE, seed=0)
+    assert isinstance(make_engine(be, engine="fast"), VectorEngine)
+    assert type(make_engine(be, engine="reference")) is ExecutionEngine
+    with pytest.raises(ValueError):
+        make_engine(be, engine="turbo")
+
+
+def test_pairseq_behaves_like_list():
+    be = SimFaaSBackend(SUITE, seed=7)
+    rep = VectorEngine(be).run(_plan(n_calls=2))
+    ps = rep.pairs
+    if isinstance(ps, PairSeq):
+        lst = list(ps)
+        assert ps == lst and len(ps) == len(lst)
+        assert ps[0] == lst[0] and ps[-1] == lst[-1]
+        assert [p for p in ps[:3]] == lst[:3]
+        assert not math.isnan(sum(p.v1_seconds for p in ps))
+
+
+def test_scaling_smoke_bit_exact():
+    """A bigger run (~9.5k invocations) through the wave machinery,
+    against the scalar reference."""
+    plan = _plan(n_calls=30, seed=1)
+    cfg = EngineConfig(parallelism=1000)
+    _diff(lambda: SimFaaSBackend(SUITE, seed=13), cfg, plan=plan)

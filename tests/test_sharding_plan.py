@@ -10,14 +10,15 @@ from repro.configs import get_config
 from repro.sharding.plan import MeshInfo, make_plan
 
 
+from repro.launch.mesh import make_abstract_mesh
+
+
 def _mesh16():
-    return AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _mesh_pod():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 CASES = {
