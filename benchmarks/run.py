@@ -31,10 +31,22 @@ def main(argv=None) -> None:
                     help="simulation scheduler core: vectorized (default) "
                          "or the scalar reference loop — every table is "
                          "bit-identical under both")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a virtual-time trace of every table run "
+                         "and write Chrome trace_event JSON (Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="write the metrics registry snapshot "
+                         "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
 
     from repro.faas.engine_vec import set_default_engine
     set_default_engine(args.engine)
+
+    obs = None
+    if args.trace or args.metrics_out:
+        from repro.obs import Observability, set_obs
+        obs = Observability.recording()
+        set_obs(obs)
 
     import benchmarks.paper_tables as paper_tables
     if args.seed:
@@ -76,6 +88,14 @@ def main(argv=None) -> None:
         print(f"\n## {name}  (harness {us/1e6:.1f}s)")
         for k, v in rows.items():
             print(f"    {k:36s} {v}")
+
+    if obs is not None:
+        if args.trace:
+            obs.export_trace(args.trace)
+            print(f"\ntrace: {len(obs.tracer)} events -> {args.trace}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -154,10 +154,23 @@ def main(argv=None) -> int:
                     help="history-store JSONL path (appended across runs)")
     ap.add_argument("--sqlite", default=None,
                     help="also export the history to this SQLite file")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a virtual-time trace and write it as "
+                         "Chrome trace_event JSON (open in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="write the metrics registry snapshot "
+                         "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
 
     from repro.faas.engine_vec import set_default_engine
     set_default_engine(args.engine)
+
+    obs = None
+    if args.trace or args.metrics_out:
+        from repro.obs import Observability, set_obs
+        obs = Observability.recording()
+        set_obs(obs)
 
     service_mode = args.jobs > 0 or args.deadline is not None \
         or args.budget is not None
@@ -215,6 +228,13 @@ def main(argv=None) -> int:
     if args.sqlite:
         history.to_sqlite(args.sqlite)
         print(f"sqlite export -> {args.sqlite}")
+    if obs is not None:
+        if args.trace:
+            obs.export_trace(args.trace)
+            print(f"trace: {len(obs.tracer)} events -> {args.trace}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
     return code
 
 

@@ -159,6 +159,9 @@ class Pipeline:
             max_staleness=self.cfg.max_staleness,
             select_all=self.cfg.mode == "full"))
         self._cfg_digest = self.cfg.config_digest()
+        self._obs_clock = 0.0           # cumulative virtual time of inline
+        #                                 commit runs (commit spans line up
+        #                                 end-to-end on one trace lane)
         self._parent: Optional[Commit] = None
         # authoritative record of the last commit each benchmark truly
         # produced a result at — written at finalize time, in commit
@@ -209,6 +212,16 @@ class Pipeline:
             billed = float(sum(rep.billed_seconds))
             cost = rep.cost_dollars
             wall = rep.wall_seconds
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is not None and obs.enabled:
+            obs.tracer.span(
+                commit.commit_id, cat="commit", ts=self._obs_clock,
+                dur=wall, pid=f"cb:{cfg.provider}", tid="commits",
+                args={"measured": len(work.to_measure),
+                      "cache_hits": len(work.cache_hits),
+                      "invocations": invocations, "cost_usd": cost})
+        self._obs_clock += wall
         return self._finalize(commit, work, changes, meter.invocations,
                               meter.billed_s, invocations=invocations,
                               billed=billed, cost=cost, wall=wall)
@@ -377,6 +390,25 @@ class Pipeline:
         if cache_hits:
             self.selector.mark_measured(cache_hits, commit.index)
         self._parent = commit
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is not None and obs.enabled:
+            prov = cfg.provider
+            lane = f"cb:{prov}"
+            for b in cache_hits:
+                obs.tracer.instant(
+                    "cache_hit", cat="cb", ts=self._obs_clock, pid=lane,
+                    tid="cache",
+                    args={"benchmark": b, "commit": commit.commit_id})
+            obs.metrics.inc("cb.commits", provider=prov)
+            obs.metrics.inc("cb.benchmarks_selected", len(sel.selected),
+                            provider=prov)
+            if sel.skipped:
+                obs.metrics.inc("cb.selector_skips", len(sel.skipped),
+                                provider=prov)
+            if cache_hits:
+                obs.metrics.inc("cb.cache_hits", len(cache_hits),
+                                provider=prov)
         return _CommitWork(parent=parent, sel=sel, cached_changes=changes,
                            cache_hits=cache_hits, to_measure=to_measure,
                            sources=sources, run_commit=run_commit,
@@ -440,6 +472,21 @@ class Pipeline:
                 source=src, invocations=inv_b, billed_seconds=billed_b,
                 cost_dollars=_prorate(cost, billed, billed_b)))
         self.history.append(records)
+
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is not None and obs.enabled:
+            for b in sorted(changes):
+                c = changes[b]
+                # CI-width convergence: the narrower this histogram's tail
+                # gets over a stream, the closer measurements are to the
+                # adaptive controller's stopping width
+                obs.metrics.observe("cb.ci_width_pct", c.ci_size,
+                                    provider=cfg.provider, benchmark=b)
+            n_flag = sum(1 for c in changes.values() if c.changed)
+            if n_flag:
+                obs.metrics.inc("cb.flagged", n_flag,
+                                provider=cfg.provider)
 
         sel = work.sel
         return CommitRun(

@@ -129,6 +129,20 @@ streaming observers, shared warm pools, realtime backends — transparently
 fall back to the embedded scalar loop.  ``make_engine(backend, cfg,
 engine="fast"|"reference"|None)`` is the factory; CLI entry points expose
 it as ``--engine`` and ``set_default_engine`` sets the process default.
+
+Observability
+-------------
+Both engines carry zero-perturbation sensors (``repro.obs``): when a
+process-global observability context is installed
+(``repro.obs.set_obs``), the scalar loop emits one virtual-time span per
+dispatch plus cold-start/retry/hedge instants, and the vectorized engine
+emits one span per scheduling *wave* (so the fast path stays fast);
+both flush per-benchmark counters and utilization gauges into the
+metrics registry.  The contract — enforced by parametrizing the golden
+tests over ``{null, recording}`` — is that instrumentation only reads
+already-computed values: no RNG draws, no event reordering, identical
+reports bit-for-bit.  With no context installed the cost is one branch
+per run (gated ≤5% by ``benchmarks/engine_bench.py --trace-overhead``).
 """
 from repro.faas.backends import (AZURE_PROFILE, AzureLikeBackend,
                                  GCF_PROFILE, GCFLikeBackend,

@@ -76,6 +76,9 @@ FAULT_KINDS = (LOSS, TIMEOUT_STORM, DUPLICATE, ZOMBIE, BILLING)
 _U_SLOT = {ZOMBIE: 0, LOSS: 1, TIMEOUT_STORM: 2, DUPLICATE: 3, BILLING: 4}
 _U_BLOCK = 6
 _CHAOS_TAG = 977
+# storm timeouts inside one storm window before the flight recorder
+# calls it a burst and freezes a post-mortem dump
+_STORM_BURST_THRESHOLD = 5
 
 
 @dataclass(frozen=True)
@@ -254,6 +257,8 @@ class ChaosBackend:
         # must still be dead when the next job acquires it
         self._dead: Dict[int, Instance] = {}
         self._bill_mult: List[float] = []
+        self._storm_win = -1             # burst detection (observability)
+        self._storm_hits = 0
 
     # unknown attributes (realtime, pinned, keep_alive_s, profile, ...)
     # resolve on the wrapped backend
@@ -277,7 +282,7 @@ class ChaosBackend:
             for tr in self._traces:
                 f *= tr.cold_factor(t)
             if f != 1.0:
-                self._count("cold_spikes")
+                self._count("cold_spikes", t, inv)
                 overhead = overhead * f
         return inst, overhead
 
@@ -295,20 +300,20 @@ class ChaosBackend:
         spec = self._specs.get(BILLING)
         if spec is not None and u[_U_SLOT[BILLING]] < self._rates[BILLING]:
             bill_mult = spec.magnitude
-            self._count("billing_anomalies")
+            self._count("billing_anomalies", t, inv)
         self._bill_mult.append(bill_mult)
 
         ikey = instance_key(instance.iid)
         if id(instance) in self._dead:
             # zombie warm instance: the sandbox died while idle in the
             # pool; the request fails fast and the instance is unusable
-            self._count("zombie_hits")
+            self._count("zombie_hits", t, inv)
             return InvocationOutcome([], 0.05, ok=False,
                                      platform_failure=True,
                                      instance_dead=True)
         if LOSS in self._rates and u[_U_SLOT[LOSS]] < self._rates[LOSS]:
             # the request vanishes before user code runs: nothing billed
-            self._count("lost")
+            self._count("lost", t, inv)
             return InvocationOutcome([], 0.0, ok=False,
                                      platform_failure=True, lost=True)
         spec = self._specs.get(TIMEOUT_STORM)
@@ -316,7 +321,7 @@ class ChaosBackend:
                 and u[_U_SLOT[TIMEOUT_STORM]] < self._rates[TIMEOUT_STORM]):
             # the function hangs until its timeout; transient (a retry
             # outside the window succeeds), but the timeout is billed
-            self._count("storm_timeouts")
+            self._count("storm_timeouts", t, inv)
             return InvocationOutcome([], inv.timeout_s, ok=False,
                                      timed_out=True, platform_failure=True)
 
@@ -327,11 +332,11 @@ class ChaosBackend:
             # the instance dies *after* this successful invocation but
             # stays in the warm pool until someone acquires the corpse
             self._dead[id(instance)] = instance
-            self._count("zombies_armed")
+            self._count("zombies_armed", t, inv)
         spec = self._specs.get(DUPLICATE)
         if (out.ok and spec is not None
                 and u[_U_SLOT[DUPLICATE]] < self._rates[DUPLICATE]):
-            self._count("duplicates_injected")
+            self._count("duplicates_injected", t, inv)
             out = replace_outcome(out, duplicates=max(1,
                                                       int(spec.magnitude)))
         return out
@@ -347,8 +352,47 @@ class ChaosBackend:
         return self.inner.finalize(billed_seconds, wall_seconds)
 
     # ------------------------------------------------------------- helpers
-    def _count(self, key: str) -> None:
+    def _count(self, key: str, t: Optional[float] = None,
+               inv: Optional[Invocation] = None) -> None:
+        """Tally one injected fault; when observability is on, also emit
+        a ``chaos.<key>`` instant + counter and trigger flight-recorder
+        dumps on anomaly bursts.  Faults are rare events (never the hot
+        path), so the context is resolved per call — and only *reads*
+        already-decided fault state, never an RNG."""
         self.stats[key] = self.stats.get(key, 0) + 1
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is None or not obs.enabled:
+            return
+        prov = getattr(getattr(self.inner, "profile", None), "name",
+                       None) or type(self.inner).__name__
+        args = {"count": self.stats[key]}
+        if inv is not None:
+            args["benchmark"] = inv.benchmark
+            if inv.job_id:
+                args["job"] = inv.job_id
+        ts = t if t is not None else 0.0
+        obs.tracer.instant(f"chaos.{key}", cat="chaos", ts=ts,
+                           pid=f"chaos:{prov}", tid=key, args=args)
+        obs.metrics.inc(f"chaos.{key}", provider=prov)
+        if obs.recorder is None or t is None:
+            return
+        if key == "zombie_hits":
+            obs.recorder.dump("zombie_hit", ts=t, context=args)
+        elif key == "storm_timeouts":
+            # a burst = several storm timeouts inside one storm window;
+            # dump once per bursting window, not once per timeout
+            spec = self._specs.get(TIMEOUT_STORM)
+            period = getattr(spec, "period_s", 0.0) if spec else 0.0
+            win = int(t // period) if period > 0 else 0
+            if win != self._storm_win:
+                self._storm_win, self._storm_hits = win, 0
+            self._storm_hits += 1
+            if self._storm_hits == _STORM_BURST_THRESHOLD:
+                obs.recorder.dump(
+                    "timeout_storm_burst", ts=t,
+                    context={"window": win,
+                             "hits": self._storm_hits, **args})
 
     def _inv_rng(self, inv: Invocation) -> np.random.Generator:
         """Per-attempt RNG keyed by the invocation's identity: a pure
@@ -379,7 +423,7 @@ class ChaosBackend:
         burst = (self._neighbor is not None
                  and self._neighbor.active(t, ikey))
         if burst:
-            self._count("burst_invocations")
+            self._count("burst_invocations", t, inv)
         if sym == 1.0 and not burst:
             return out
         if not out.pairs:
@@ -395,7 +439,7 @@ class ChaosBackend:
             if hit.any():
                 mult[hit] *= self._neighbor.slowdown * rng.lognormal(
                     0.0, self.cfg.neighbor_sigma, size=int(hit.sum()))
-                self._count("contaminated_invocations")
+                self._count("contaminated_invocations", t, inv)
         new_pairs: List[DuetPair] = []
         delta = 0.0
         for i, p in enumerate(out.pairs):
@@ -404,7 +448,7 @@ class ChaosBackend:
             if max(v1, v2) > inv.timeout_s:
                 # interference pushed a run over the per-benchmark
                 # timeout: transient failure, the timeout is billed
-                self._count("regime_timeouts")
+                self._count("regime_timeouts", t, inv)
                 return InvocationOutcome([], inv.timeout_s, ok=False,
                                          timed_out=True,
                                          platform_failure=True)

@@ -163,8 +163,10 @@ class FanoutObserver(EngineObserver):
         self.observers = list(observers)
 
     def should_skip(self, inv: Invocation) -> bool:
-        # no short-circuit: every child sees every skip decision point
-        return any([obs.should_skip(inv) for obs in self.observers])
+        # generator, not a list: short-circuits at the first skipper, so
+        # children after it are not consulted (and pay no work) for an
+        # invocation that is already dropped
+        return any(obs.should_skip(inv) for obs in self.observers)
 
     def on_result(self, done: CompletedInvocation) -> None:
         for obs in self.observers:
@@ -256,6 +258,19 @@ class ExecutionEngine:
         cfg, be = self.cfg, self.backend
         be.begin_run(cfg.parallelism)
 
+        # observability is resolved ONCE per run into locals; the
+        # disabled path then costs a single `is not None` branch per
+        # dispatch (priced by engine_bench.py --trace-overhead).  The
+        # tracer/metrics only read values computed below — never an RNG
+        # draw, never a reorder — so reports are bit-identical either way.
+        from repro.obs import get_obs
+        _obs = get_obs()
+        tr = _obs.tracer if (_obs is not None and _obs.enabled) else None
+        mx = _obs.metrics if (_obs is not None and _obs.enabled) else None
+        provider = getattr(getattr(be, "profile", None), "name", None) \
+            or type(be).__name__
+        lane = f"fleet:{provider}"
+
         pairs: List[DuetPair] = []
         billed: List[float] = []
         cold_starts = timeouts = failures = 0
@@ -276,24 +291,24 @@ class ExecutionEngine:
 
         def acquire(inv: Invocation, slot: int, t: float):
             """Warm-pool reuse (elastic platforms) or slot-pinned instances
-            (fixed VM fleets); returns (instance, cold_overhead_s)."""
+            (fixed VM fleets); returns (instance, cold_overhead_s, cold)."""
             nonlocal cold_starts
             if be.pinned:
                 inst = pinned.get(slot)
                 if inst is None:
                     inst, _ = be.spawn_instance(inv, t, slot)
                     pinned[slot] = inst
-                return inst, 0.0
+                return inst, 0.0, False
             inst = pool.acquire(t, be.keep_alive_s)
             if inst is not None:
-                return inst, 0.0
+                return inst, 0.0, False
             inst, overhead = be.spawn_instance(inv, t, slot)
             cold_starts += 1
-            return inst, overhead
+            return inst, overhead, True
 
         def dispatch(inv: Invocation, attempt: int) -> CompletedInvocation:
             t, slot = heapq.heappop(slots)
-            inst, overhead = acquire(inv, slot, t)
+            inst, overhead, cold = acquire(inv, slot, t)
             out = be.simulate(inv, inst, t, overhead)
             t_end = t + out.duration_s
             heapq.heappush(slots, (t_end, slot))
@@ -302,6 +317,28 @@ class ExecutionEngine:
                 # of this invocation must re-draw cold-start state, not
                 # re-acquire the corpse's warm slot (it would fail again)
                 pool.release(inst, t_end)
+            if tr is not None:
+                tr.span(inv.benchmark, cat="invoke", ts=t,
+                        dur=out.duration_s, pid=lane,
+                        tid=f"slot{slot:03d}",
+                        args={"job": inv.job_id, "attempt": attempt,
+                              "cold": cold, "ok": out.ok,
+                              "instance": inst.iid})
+                if cold:
+                    tr.instant("cold_start", cat="engine", ts=t, pid=lane,
+                               tid=f"slot{slot:03d}",
+                               args={"overhead_s": overhead})
+            if mx is not None:
+                mx.inc("engine.invocations", provider=provider,
+                       benchmark=inv.benchmark)
+                mx.inc("engine.billed_s", out.duration_s,
+                       provider=provider, benchmark=inv.benchmark)
+                mx.observe("engine.latency_s", out.duration_s,
+                           provider=provider, benchmark=inv.benchmark)
+                if cold:
+                    mx.inc("engine.cold_starts", provider=provider)
+                else:
+                    mx.inc("engine.warm_hits", provider=provider)
             return CompletedInvocation(inv, out, t, t_end, attempt, inst)
 
         # completed invocations are delivered to the observer in virtual
@@ -360,6 +397,13 @@ class ExecutionEngine:
             if thr is not None and out.duration_s > thr:
                 hedged += 1
                 alt = dispatch(inv, attempt)
+                if tr is not None:
+                    tr.instant("hedge", cat="engine", ts=alt.t_start,
+                               pid=lane, tid=f"b:{inv.benchmark}",
+                               args={"threshold_s": thr,
+                                     "original_dur_s": out.duration_s})
+                if mx is not None:
+                    mx.inc("engine.hedges", provider=provider)
                 alt_billed = alt.outcome.duration_s
                 alt_end = alt.t_end
                 if alt.outcome.ok and (not out.ok or alt.t_end < comp.t_end):
@@ -384,6 +428,13 @@ class ExecutionEngine:
                 lost_n += 1
             if out.platform_failure and attempt < cfg.max_retries:
                 retries += 1
+                if tr is not None:
+                    tr.instant("retry", cat="engine", ts=comp.t_end,
+                               pid=lane, tid=f"b:{inv.benchmark}",
+                               args={"attempt": attempt + 1,
+                                     "lost": out.lost})
+                if mx is not None:
+                    mx.inc("engine.retries", provider=provider)
                 queue.appendleft((inv, attempt + 1))
                 continue
 
@@ -419,6 +470,19 @@ class ExecutionEngine:
                 dup_dropped += out.duplicates
 
         cost = be.finalize(billed, wall)
+        if mx is not None:
+            n_disp = len(billed)        # one entry per dispatch incl. twins
+            span = cfg.parallelism * max(wall - start_s, 0.0)
+            if span > 0:
+                mx.set_gauge("engine.slot_utilization",
+                             min(1.0, sum(billed) / span),
+                             provider=provider)
+            if n_disp:
+                mx.set_gauge("engine.warm_hit_rate",
+                             1.0 - cold_starts / n_disp, provider=provider)
+                mx.set_gauge("engine.cold_start_rate",
+                             cold_starts / n_disp, provider=provider)
+            mx.inc("engine.cost_usd", cost, provider=provider)
         return EngineReport(
             pairs=pairs, wall_seconds=wall, billed_seconds=billed,
             cost_dollars=cost, cold_starts=cold_starts, timeouts=timeouts,

@@ -477,6 +477,24 @@ class _VecRun:
         self.outer.begin_run(cfg.parallelism)
         self.rng = self.target._rng
         self._ingest()
+        # observability at wave granularity: one span + one bulk metrics
+        # flush per wave keeps the vectorized path fast, and everything
+        # emitted is read from already-committed arrays (no RNG, no
+        # reordering) so reports stay bit-identical with tracing on
+        from repro.obs import get_obs
+        _obs = get_obs()
+        on = _obs is not None and _obs.enabled
+        self._tr = _obs.tracer if on else None
+        self._mx = _obs.metrics if on else None
+        if on:
+            prof = getattr(self.target, "profile", None)
+            self._provider = getattr(prof, "name", None) \
+                or type(self.target).__name__
+            self._lane = f"fleet:{self._provider}"
+            self._wave_idx = 0
+            B = len(self.names)
+            self._bm_inv = np.zeros(B, np.int64)
+            self._bm_billed = np.zeros(B)
         P = cfg.parallelism
         self.slot_t = np.full(P, float(self.start_s))
         if self.vm:
@@ -963,7 +981,32 @@ class _VecRun:
             self.retryq.popleft()
         self.cursor += k - nr_used
 
+    def _obs_wave(self, ns, k: int, extra=None) -> None:
+        """Wave-granularity emission over the committed prefix [0, k)."""
+        if not k:
+            return
+        b, dur = ns.b[:k], ns.dur[:k]
+        ncold = int(np.count_nonzero(ns.cold[:k]))
+        if self._tr is not None:
+            t0 = float(ns.pops[:k].min())
+            t1 = float(ns.push[:k].max())
+            args = {"n": int(k), "cold": ncold}
+            if extra:
+                args.update(extra)
+            self._tr.span(f"wave{self._wave_idx}", cat="wave", ts=t0,
+                          dur=max(0.0, t1 - t0), pid=self._lane,
+                          tid="waves", args=args)
+        self._wave_idx += 1
+        if self._mx is not None:
+            B = self._bm_inv.shape[0]
+            self._bm_inv += np.bincount(b, minlength=B)
+            self._bm_billed += np.bincount(b, weights=dur, minlength=B)
+            self._mx.observe_many("engine.latency_s", dur,
+                                  provider=self._provider)
+
     def _tally_fast(self, ns, k: int, retried: bool) -> None:
+        if self._tr is not None or self._mx is not None:
+            self._obs_wave(ns, k, {"retried": bool(retried)})
         kacc = k
         if retried:
             self.retries_n += 1
@@ -1040,6 +1083,8 @@ class _VecRun:
                 break
             self._account_one(ns, j)
         self._commit_state(ns, stop)
+        if self._tr is not None or self._mx is not None:
+            self._obs_wave(ns, stop)
         if fire is not None:
             kind, j = fire
             if kind == "retry":
@@ -1123,6 +1168,17 @@ class _VecRun:
         dur_j = float(ns.dur[j])
         ok0 = bool(ns.okv[j])
         alt_out, alt_ts, alt_te = self._dispatch_one(inv)
+        if self._tr is not None:
+            self._tr.instant("hedge", cat="engine", ts=alt_ts,
+                             pid=self._lane, tid=f"b:{inv.benchmark}",
+                             args={"original_dur_s": dur_j})
+        if self._mx is not None:
+            bj0 = int(ns.b[j])
+            self._bm_inv[bj0] += 1
+            self._bm_billed[bj0] += alt_out.duration_s
+            self._mx.inc("engine.hedges", provider=self._provider)
+            self._mx.observe("engine.latency_s", alt_out.duration_s,
+                             provider=self._provider)
         end_s = t_end0
         alt_billed = alt_out.duration_s
         alt_end = alt_te
@@ -1213,6 +1269,36 @@ class _VecRun:
             arr = (billed_arr if billed_arr is not None
                    else np.asarray(billed_list))
             cost = self.target.finalize_batch(arr, wall)
+        if self._mx is not None:
+            mx, prov = self._mx, self._provider
+            for i, name in enumerate(self.names):
+                n = int(self._bm_inv[i])
+                if n:
+                    mx.inc("engine.invocations", n, provider=prov,
+                           benchmark=name)
+                    mx.inc("engine.billed_s", float(self._bm_billed[i]),
+                           provider=prov, benchmark=name)
+            n_disp = int(self._bm_inv.sum())
+            if self.cold_starts:
+                mx.inc("engine.cold_starts", self.cold_starts,
+                       provider=prov)
+            if n_disp - self.cold_starts > 0:
+                mx.inc("engine.warm_hits", n_disp - self.cold_starts,
+                       provider=prov)
+            if self.retries_n:
+                mx.inc("engine.retries", self.retries_n, provider=prov)
+            mx.inc("engine.cost_usd", cost, provider=prov)
+            span = self.cfg.parallelism * max(wall - self.start_s, 0.0)
+            if span > 0:
+                mx.set_gauge("engine.slot_utilization",
+                             min(1.0, float(sum(billed_list)) / span),
+                             provider=prov)
+            if n_disp:
+                mx.set_gauge("engine.warm_hit_rate",
+                             1.0 - self.cold_starts / n_disp,
+                             provider=prov)
+                mx.set_gauge("engine.cold_start_rate",
+                             self.cold_starts / n_disp, provider=prov)
         ex = {self.names[i]
               for i in np.flatnonzero(self.exec_mask).tolist()}
         fl = {self.names[i]

@@ -1,0 +1,119 @@
+"""Observability: virtual-time tracing, metrics, and a flight recorder.
+
+Architecture
+============
+
+::
+
+                     get_obs() ──► Observability
+                                    ├── tracer   (trace.py: spans/instants
+                                    │             on the virtual clock,
+                                    │             Chrome trace_event export)
+                                    ├── metrics  (metrics.py: counters /
+                                    │             gauges / quantile sketches,
+                                    │             labels tenant,provider,
+                                    │             benchmark)
+                                    └── recorder (recorder.py: bounded ring,
+                                                  anomaly dumps)
+
+Instrumented layers: ``faas/engine.py`` (per-dispatch invocation spans,
+cold-start/retry/hedge instants, utilization gauges),
+``faas/engine_vec.py`` (wave-granularity spans so the vectorized path
+stays fast), ``faas/chaos.py`` (fault-injection instants + storm/zombie
+burst dumps), ``service/scheduler.py`` (job admit/deliver/preempt,
+per-tenant cost attribution), ``service/planner.py`` (plan decisions,
+infeasibility dumps), and ``cb/pipeline.py`` (commit spans, cache and
+selector hits, CI-width convergence).
+
+Plumbing is a process-global context rather than threaded parameters:
+``set_obs(Observability.recording())`` turns the sensors on for every
+engine/fleet/pipeline constructed afterwards, ``use_obs(...)`` scopes it
+(tests), and the default — no context, or ``Observability.null()`` — is
+inert.  Hot loops resolve the context *once per run* into a local
+(``tr = obs.tracer if obs.enabled else None``), so the disabled path
+costs one attribute read per run plus one ``is not None`` branch per
+dispatch (the ≤5% N=10^5 gate in benchmarks/engine_bench.py measures
+exactly this).
+
+The hard invariant: instrumentation only reads values the simulation
+already computed.  It never draws RNG, never reorders event delivery —
+all golden digests replay bit-for-bit with recording enabled
+(tests/test_chaos_identity.py, tests/test_service_scheduler.py).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry, QuantileSketch
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import (NullTracer, RecordingTracer, events_to_chrome,
+                             validate_chrome_trace, write_chrome_trace)
+
+
+class Observability:
+    """Bundle of tracer + metrics + recorder handed around as one unit."""
+
+    def __init__(self, tracer=None, metrics=None, recorder=None):
+        self.tracer = tracer if tracer is not None else NullTracer()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.recorder = recorder
+        self.enabled = bool(self.tracer.enabled)
+
+    @classmethod
+    def null(cls) -> "Observability":
+        """Inert bundle: all emission sites resolve to no-ops.  Exists so
+        the overhead benchmark can price the guard branches themselves."""
+        return cls(NullTracer(), MetricsRegistry(), None)
+
+    @classmethod
+    def recording(cls, *, ring_capacity: int = 2048,
+                  max_dumps: int = 8) -> "Observability":
+        rec = FlightRecorder(capacity=ring_capacity, max_dumps=max_dumps)
+        return cls(RecordingTracer(recorder=rec), MetricsRegistry(), rec)
+
+    # ------------------------------------------------------------ export
+    def export_trace(self, path: str) -> None:
+        write_chrome_trace(self.tracer.to_chrome_trace(), path)
+
+    def export_metrics(self, path: str) -> None:
+        self.metrics.to_json(path)
+
+    def export_dumps(self, path: str) -> None:
+        import json
+        snap = (self.recorder.snapshot() if self.recorder is not None
+                else {"schema": 1, "dumps": []})
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+
+
+_OBS: Optional[Observability] = None
+
+
+def get_obs() -> Optional[Observability]:
+    """The process-wide observability context (None = fully off)."""
+    return _OBS
+
+
+def set_obs(obs: Optional[Observability]) -> Optional[Observability]:
+    """Install the context; returns the previous one."""
+    global _OBS
+    prev, _OBS = _OBS, obs
+    return prev
+
+
+@contextlib.contextmanager
+def use_obs(obs: Optional[Observability]):
+    """Scoped install (tests): restores the previous context on exit."""
+    prev = set_obs(obs)
+    try:
+        yield obs
+    finally:
+        set_obs(prev)
+
+
+__all__ = [
+    "FlightRecorder", "MetricsRegistry", "NullTracer", "Observability",
+    "QuantileSketch", "RecordingTracer", "events_to_chrome", "get_obs",
+    "set_obs", "use_obs", "validate_chrome_trace", "write_chrome_trace",
+]

@@ -1,0 +1,186 @@
+"""Metrics: counters, gauges, and fixed-bucket quantile sketches.
+
+Every series is keyed by ``(name, labels)`` where labels is a sorted
+tuple of ``(key, value)`` pairs — the conventional label set across the
+stack is ``(tenant, provider, benchmark)``, each optional.  Histograms
+use a deterministic fixed log-bucket sketch (not P², whose estimates
+depend on arrival order in ways that are hard to pin in tests): with
+128 buckets growing 25% per step from 1 µs, any virtual-time latency up
+to ~10^6 s lands in a bucket and quantiles are exact to one bucket
+width (~12% relative), while min/max/sum/count stay exact.
+
+The registry is plain accumulation — no RNG, no reordering — so it
+shares the tracer's zero-perturbation contract.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, Optional, Tuple
+
+_LO = 1e-6
+_GROWTH = 1.25
+_NBUCKETS = 128
+_LOG_GROWTH = math.log(_GROWTH)
+
+
+class QuantileSketch:
+    """Fixed log-bucket histogram: deterministic, mergeable, O(1) insert."""
+
+    __slots__ = ("buckets", "count", "total", "vmin", "vmax")
+
+    def __init__(self):
+        self.buckets = [0] * _NBUCKETS
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        if v <= _LO:
+            idx = 0
+        else:
+            idx = min(_NBUCKETS - 1,
+                      1 + int(math.log(v / _LO) / _LOG_GROWTH))
+        self.buckets[idx] += 1
+
+    def observe_array(self, values) -> None:
+        """Bulk insert (vectorized-engine wave flush): same buckets as
+        ``observe`` but one numpy pass instead of a Python loop."""
+        import numpy as np
+        v = np.asarray(values, float).ravel()
+        if not v.size:
+            return
+        self.count += int(v.size)
+        self.total += float(v.sum())
+        self.vmin = min(self.vmin, float(v.min()))
+        self.vmax = max(self.vmax, float(v.max()))
+        big = np.maximum(v, _LO)
+        idx = np.where(
+            v <= _LO, 0,
+            np.minimum(_NBUCKETS - 1,
+                       1 + (np.log(big / _LO) / _LOG_GROWTH).astype(
+                           np.int64)))
+        for i, n in zip(*np.unique(idx, return_counts=True)):
+            self.buckets[int(i)] += int(n)
+
+    def quantile(self, q: float) -> float:
+        """Value at quantile q in [0, 1], to one bucket's resolution."""
+        if not self.count:
+            return 0.0
+        rank = max(1, math.ceil(q * self.count))
+        seen = 0
+        for idx, n in enumerate(self.buckets):
+            seen += n
+            if seen >= rank:
+                if idx == 0:
+                    return min(self.vmax, _LO)
+                lo = _LO * _GROWTH ** (idx - 1)
+                hi = lo * _GROWTH
+                mid = math.sqrt(lo * hi)
+                return min(self.vmax, max(self.vmin, mid))
+        return self.vmax
+
+    def summary(self) -> dict:
+        if not self.count:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "p50": 0.0, "p95": 0.0, "p99": 0.0}
+        return {"count": self.count, "sum": self.total,
+                "min": self.vmin, "max": self.vmax,
+                "p50": self.quantile(0.50), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
+
+
+_Key = Tuple[str, Tuple[Tuple[str, str], ...]]
+
+
+def _key(name: str, labels: dict) -> _Key:
+    return (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+
+
+class MetricsRegistry:
+    """Counters / gauges / histograms keyed by (name, sorted labels)."""
+
+    def __init__(self):
+        self._counters: Dict[_Key, float] = {}
+        self._gauges: Dict[_Key, float] = {}
+        self._hists: Dict[_Key, QuantileSketch] = {}
+
+    # ------------------------------------------------------------ writes
+    def inc(self, name: str, value: float = 1.0, **labels) -> None:
+        k = _key(name, labels)
+        self._counters[k] = self._counters.get(k, 0.0) + value
+
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        self._gauges[_key(name, labels)] = float(value)
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        k = _key(name, labels)
+        sk = self._hists.get(k)
+        if sk is None:
+            sk = self._hists[k] = QuantileSketch()
+        sk.observe(value)
+
+    def observe_many(self, name: str, values, **labels) -> None:
+        k = _key(name, labels)
+        sk = self._hists.get(k)
+        if sk is None:
+            sk = self._hists[k] = QuantileSketch()
+        sk.observe_array(values)
+
+    # ------------------------------------------------------------- reads
+    def counter_total(self, name: str, **match) -> float:
+        """Sum of every counter series with this name whose labels are a
+        superset of ``match`` (empty match sums all series)."""
+        want = sorted((k, str(v)) for k, v in match.items())
+        tot = 0.0
+        for (n, labels), v in self._counters.items():
+            if n == name and all(kv in labels for kv in want):
+                tot += v
+        return tot
+
+    def counter_series(self, name: str) -> List[Tuple[dict, float]]:
+        return [(dict(labels), v)
+                for (n, labels), v in sorted(self._counters.items())
+                if n == name]
+
+    def gauge(self, name: str, **labels) -> Optional[float]:
+        return self._gauges.get(_key(name, labels))
+
+    def histogram(self, name: str, **labels) -> Optional[QuantileSketch]:
+        return self._hists.get(_key(name, labels))
+
+    def label_values(self, label: str) -> List[str]:
+        """Every value this label takes across all series (sorted)."""
+        vals = set()
+        for store in (self._counters, self._gauges, self._hists):
+            for _, labels in store.keys():
+                for k, v in labels:
+                    if k == label:
+                        vals.add(v)
+        return sorted(vals)
+
+    # ------------------------------------------------------------ export
+    def snapshot(self) -> dict:
+        def rows(store, render):
+            return [{"name": n, "labels": dict(labels),
+                     "value": render(v)}
+                    for (n, labels), v in sorted(store.items())]
+        return {"schema": 1,
+                "counters": rows(self._counters, float),
+                "gauges": rows(self._gauges, float),
+                "histograms": [{"name": n, "labels": dict(labels),
+                                **sk.summary()}
+                               for (n, labels), sk
+                               in sorted(self._hists.items())]}
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)

@@ -1,0 +1,169 @@
+"""Text dashboard over a metrics snapshot (and optionally a trace).
+
+``python -m repro.obs.report metrics.json [--trace trace.json]`` renders
+the per-provider engine table (invocations, cold-start rate, warm-hit
+rate, slot utilization, latency tails) and the per-tenant cost
+attribution table (invocations, billed seconds, cost, budget burn) from
+a ``MetricsRegistry.to_json`` snapshot; with ``--trace`` it also
+validates the Chrome trace_event document and summarizes it.  Exits
+non-zero if the trace fails validation — CI's obs-smoke job uses that
+as its schema gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _series(snapshot: dict, kind: str, name: str):
+    return [r for r in snapshot.get(kind, ()) if r["name"] == name]
+
+
+def _sum_by(snapshot: dict, name: str, label: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for row in _series(snapshot, "counters", name):
+        key = row["labels"].get(label, "-")
+        out[key] = out.get(key, 0.0) + row["value"]
+    return out
+
+
+def _fmt_table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths)).rstrip()
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(headers), sep] + [line(r) for r in rows])
+
+
+def render_provider_table(snapshot: dict) -> str:
+    """Engine health per provider fleet."""
+    inv = _sum_by(snapshot, "engine.invocations", "provider")
+    cold = _sum_by(snapshot, "engine.cold_starts", "provider")
+    hists: Dict[str, dict] = {}
+    for row in _series(snapshot, "histograms", "engine.latency_s"):
+        p = row["labels"].get("provider", "-")
+        agg = hists.setdefault(p, {"count": 0, "p95": 0.0, "p99": 0.0})
+        agg["count"] += row["count"]
+        agg["p95"] = max(agg["p95"], row["p95"])
+        agg["p99"] = max(agg["p99"], row["p99"])
+    gauges = {(r["labels"].get("provider", "-"), r["name"]): r["value"]
+              for r in snapshot.get("gauges", ())
+              if r["name"] in ("engine.slot_utilization",
+                               "engine.warm_hit_rate")}
+    rows = []
+    for p in sorted(set(inv) | set(cold) | set(hists)):
+        n = inv.get(p, 0.0)
+        c = cold.get(p, 0.0)
+        h = hists.get(p, {})
+        util = gauges.get((p, "engine.slot_utilization"))
+        warm = gauges.get((p, "engine.warm_hit_rate"))
+        rows.append([
+            p, f"{int(n)}", f"{int(c)}",
+            f"{(c / n * 100):.1f}%" if n else "-",
+            f"{warm * 100:.1f}%" if warm is not None else "-",
+            f"{util * 100:.1f}%" if util is not None else "-",
+            f"{h.get('p95', 0.0):.3f}" if h else "-",
+            f"{h.get('p99', 0.0):.3f}" if h else "-"])
+    if not rows:
+        return "(no engine metrics)"
+    return _fmt_table(["provider", "invocations", "cold", "cold%",
+                       "warm-hit", "util", "p95_s", "p99_s"], rows)
+
+
+def render_tenant_table(snapshot: dict) -> str:
+    """Per-tenant cost attribution: who spent what, against what budget."""
+    inv = _sum_by(snapshot, "service.invocations", "tenant")
+    billed = _sum_by(snapshot, "service.billed_s", "tenant")
+    cost = _sum_by(snapshot, "service.cost_usd", "tenant")
+    burn = {r["labels"].get("tenant", "-"): r["value"]
+            for r in snapshot.get("gauges", ())
+            if r["name"] == "service.budget_burn_frac"}
+    tenants = sorted(set(inv) | set(billed) | set(cost))
+    if not tenants:
+        return "(no service metrics)"
+    rows = []
+    for t in tenants:
+        b = burn.get(t)
+        rows.append([t, f"{int(inv.get(t, 0.0))}",
+                     f"{billed.get(t, 0.0):.1f}",
+                     f"{cost.get(t, 0.0):.4f}",
+                     f"{b * 100:.1f}%" if b is not None else "-"])
+    rows.append(["TOTAL", f"{int(sum(inv.values()))}",
+                 f"{sum(billed.values()):.1f}",
+                 f"{sum(cost.values()):.4f}", ""])
+    return _fmt_table(["tenant", "invocations", "billed_s", "cost_usd",
+                       "budget_burn"], rows)
+
+
+def render_cb_table(snapshot: dict) -> str:
+    names = ["cb.commits", "cb.benchmarks_selected", "cb.selector_skips",
+             "cb.cache_hits"]
+    rows = [[n, f"{int(sum(v for _, v in _sum_by(snapshot, n, 'provider').items()))}"]
+            for n in names
+            if _series(snapshot, "counters", n)]
+    # one histogram series exists per (provider, benchmark): collapse the
+    # CI-width convergence picture into a spread plus the slowest
+    # convergers instead of hundreds of identical-looking rows
+    widths = [(row["p50"], row["labels"].get("benchmark", "-"))
+              for row in _series(snapshot, "histograms", "cb.ci_width_pct")]
+    if widths:
+        p50s = sorted(w for w, _ in widths)
+        mid = p50s[len(p50s) // 2]
+        rows.append(["cb.ci_width_pct series", f"{len(widths)}"])
+        rows.append(["cb.ci_width_pct p50 min/med/max",
+                     f"{p50s[0]:.2f} / {mid:.2f} / {p50s[-1]:.2f}"])
+        worst = sorted(widths, reverse=True)[:3]
+        rows.append(["cb.ci_width_pct widest",
+                     ", ".join(f"{b} ({w:.1f}%)" for w, b in worst)])
+    if not rows:
+        return "(no pipeline metrics)"
+    return _fmt_table(["pipeline metric", "value"], rows)
+
+
+def render_report(snapshot: dict,
+                  trace_doc: Optional[dict] = None) -> str:
+    parts = ["== engine (per provider) ==", render_provider_table(snapshot),
+             "", "== cost attribution (per tenant) ==",
+             render_tenant_table(snapshot),
+             "", "== continuous benchmarking ==", render_cb_table(snapshot)]
+    if trace_doc is not None:
+        evs = trace_doc.get("traceEvents", [])
+        n_meta = sum(1 for e in evs if e.get("ph") == "M")
+        parts += ["", "== trace ==",
+                  f"events: {len(evs) - n_meta} (+{n_meta} metadata), "
+                  f"lanes: {n_meta}"]
+    return "\n".join(parts)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.report",
+        description="Render the observability dashboard from a metrics "
+                    "snapshot; optionally validate a Chrome trace.")
+    ap.add_argument("metrics", help="metrics snapshot JSON "
+                                    "(MetricsRegistry.to_json)")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace_event JSON to validate + summarize")
+    args = ap.parse_args(argv)
+    with open(args.metrics) as f:
+        snapshot = json.load(f)
+    trace_doc = None
+    code = 0
+    if args.trace is not None:
+        from repro.obs.trace import validate_chrome_trace
+        with open(args.trace) as f:
+            trace_doc = json.load(f)
+        errors = validate_chrome_trace(trace_doc)
+        if errors:
+            for e in errors:
+                print(f"trace schema violation: {e}", file=sys.stderr)
+            code = 1
+    print(render_report(snapshot, trace_doc))
+    return code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -318,9 +318,36 @@ class DeadlineCostPlanner:
     def plan(self, workloads: Dict, *, deadline_s: Optional[float] = None,
              budget_usd: Optional[float] = None, seed: int = 0,
              providers: Optional[Sequence[str]] = None) -> CandidatePlan:
-        return self.choose(self.candidates(workloads, seed=seed,
-                                           providers=providers),
-                           deadline_s=deadline_s, budget_usd=budget_usd)
+        cands = self.candidates(workloads, seed=seed, providers=providers)
+        from repro.obs import get_obs
+        obs = get_obs()
+        on = obs is not None and obs.enabled
+        try:
+            chosen = self.choose(cands, deadline_s=deadline_s,
+                                 budget_usd=budget_usd)
+        except InfeasiblePlanError as exc:
+            if on:
+                ctx = {"deadline_s": deadline_s, "budget_usd": budget_usd,
+                       "n_candidates": len(cands)}
+                obs.tracer.instant("plan_infeasible", cat="planner",
+                                   ts=0.0, pid="planner", tid="decisions",
+                                   args=ctx)
+                obs.metrics.inc("planner.infeasible")
+                if obs.recorder is not None:
+                    obs.recorder.dump("infeasible_plan", ts=0.0,
+                                      context=ctx)
+            raise exc
+        if on:
+            obs.tracer.instant(
+                "plan", cat="planner", ts=0.0, pid="planner",
+                tid="decisions",
+                args={"chosen": chosen.label,
+                      "predicted_wall_s": chosen.predicted_wall_s,
+                      "predicted_cost_usd": chosen.predicted_cost_usd,
+                      "deadline_s": deadline_s, "budget_usd": budget_usd,
+                      "n_candidates": len(cands)})
+            obs.metrics.inc("planner.plans", provider=chosen.provider)
+        return chosen
 
 
 def pareto_frontier(candidates: Sequence[CandidatePlan]

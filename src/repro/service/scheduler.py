@@ -186,6 +186,14 @@ class _FleetObserver(EngineObserver):
         self.jobs = jobs
         self.profile = profile
         self.preempt = preempt
+        # resolved once per batch (one observer per fleet run); emission
+        # below only reads values already computed by the engine/backend
+        from repro.obs import get_obs
+        obs = get_obs()
+        on = obs is not None and obs.enabled
+        self._tr = obs.tracer if on else None
+        self._mx = obs.metrics if on else None
+        self._rec = obs.recorder if on else None
 
     def should_skip(self, inv) -> bool:
         ex = self.jobs[inv.job_id]
@@ -216,11 +224,27 @@ class _FleetObserver(EngineObserver):
             #                             benchmark never succeeds at all
         else:
             ex.failed.add(b)
+        if self._mx is not None:
+            self._mx.inc("service.invocations", tenant=ex.job.tenant,
+                         provider=self.profile.name, benchmark=b)
+            self._mx.inc("service.billed_s", out.duration_s,
+                         tenant=ex.job.tenant, provider=self.profile.name)
         budget = ex.job.budget_usd
         if (self.preempt and budget is not None and not ex.cancelled
                 and ex.cost_est > budget):
             ex.cancelled = True
             ex.preempted = True
+            ctx = {"job": ex.job.job_id, "tenant": ex.job.tenant,
+                   "cost_est_usd": ex.cost_est, "budget_usd": budget}
+            if self._tr is not None:
+                self._tr.instant("preempt", cat="service", ts=done.t_end,
+                                 pid="tenants", tid=ex.job.tenant,
+                                 args=ctx)
+            if self._mx is not None:
+                self._mx.inc("service.preemptions", tenant=ex.job.tenant,
+                             provider=self.profile.name)
+            if self._rec is not None:
+                self._rec.dump("preemption", ts=done.t_end, context=ctx)
 
 
 class _Fleet:
@@ -408,6 +432,14 @@ class BenchmarkService:
                                     job.tenant, 0))
         except AdmissionError as exc:
             self.rejected.append((exc.job_id, exc.reason))
+            from repro.obs import get_obs
+            obs = get_obs()
+            if obs is not None and obs.enabled:
+                obs.tracer.instant("admission_reject", cat="service",
+                                   ts=0.0, pid="tenants", tid=job.tenant,
+                                   args={"job": exc.job_id,
+                                         "reason": exc.reason})
+                obs.metrics.inc("service.rejections", tenant=job.tenant)
             raise
         if chosen is not None:
             provider = chosen.provider
@@ -432,6 +464,17 @@ class BenchmarkService:
         self._queued_total += 1
         self._queued_tenant[job.tenant] = \
             self._queued_tenant.get(job.tenant, 0) + 1
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is not None and obs.enabled:
+            obs.tracer.instant(
+                "admit", cat="service", ts=fleet.clock_s, pid="tenants",
+                tid=job.tenant,
+                args={"job": job.job_id, "provider": provider,
+                      "n_invocations": len(suite_plan.invocations),
+                      "planned": chosen is not None})
+            obs.metrics.inc("service.jobs_submitted", tenant=job.tenant,
+                            provider=provider)
         return SubmitReceipt(job_id=job.job_id, provider=provider,
                              memory_mb=mem, parallelism=par,
                              n_invocations=len(suite_plan.invocations),
@@ -481,14 +524,53 @@ class BenchmarkService:
                 deliveries.append((t_causal, ex.submit_seq, ex))
         deliveries.sort(key=lambda d: (d[0], d[1]))
 
+        from repro.obs import get_obs
+        obs = get_obs()
+        on = obs is not None and obs.enabled
+        tr = obs.tracer if on else None
+        mx = obs.metrics if on else None
+        tenant_cost: Dict[str, float] = {}
+        tenant_budget: Dict[str, float] = {}
+
         results = []
         tenant_billed: Dict[str, float] = {}
-        for _, _, ex in deliveries:
+        for t_deliver, _, ex in deliveries:
             results.append(ex.result)
             tenant_billed[ex.job.tenant] = \
                 tenant_billed.get(ex.job.tenant, 0.0) + ex.billed_s
+            r = ex.result
+            if tr is not None:
+                tr.span(r.job_id, cat="job", ts=r.start_s,
+                        dur=max(0.0, r.end_s - r.start_s), pid="tenants",
+                        tid=ex.job.tenant,
+                        args={"status": r.status, "provider": r.provider,
+                              "invocations": r.invocations,
+                              "cost_usd": r.cost_dollars})
+                tr.instant("deliver", cat="service", ts=t_deliver,
+                           pid="tenants", tid=ex.job.tenant,
+                           args={"job": r.job_id, "status": r.status})
+            if mx is not None:
+                mx.inc("service.cost_usd", r.cost_dollars,
+                       tenant=ex.job.tenant, provider=r.provider)
+                mx.inc("service.jobs_delivered", tenant=ex.job.tenant,
+                       provider=r.provider)
+                tenant_cost[ex.job.tenant] = \
+                    tenant_cost.get(ex.job.tenant, 0.0) + r.cost_dollars
+                if ex.job.budget_usd is not None:
+                    tenant_budget[ex.job.tenant] = \
+                        tenant_budget.get(ex.job.tenant, 0.0) \
+                        + ex.job.budget_usd
             if ex.job.callback is not None:
                 ex.job.callback(ex.result)
+        if mx is not None:
+            # cost burn-down vs budget, per tenant (jobs without budgets
+            # contribute spend but no budget; gauge only where a budget
+            # exists to burn)
+            for tenant, budget in sorted(tenant_budget.items()):
+                if budget > 0:
+                    mx.set_gauge("service.budget_burn_frac",
+                                 tenant_cost.get(tenant, 0.0) / budget,
+                                 tenant=tenant)
 
         return ServiceReport(
             results=results,

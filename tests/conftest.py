@@ -20,3 +20,23 @@ except ImportError:
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+
+
+@pytest.fixture(params=["null", "recording"])
+def obs_mode(request):
+    """Runs the test under both observability modes.  Golden tests take
+    this fixture to prove the bit-for-bit contract: digests must be
+    identical with a recording tracer attached.  On teardown the
+    recording variant additionally asserts the run produced a non-empty,
+    schema-valid Chrome trace (so 'tracing changed nothing' can never
+    pass vacuously because tracing emitted nothing)."""
+    from repro.obs import (Observability, use_obs, validate_chrome_trace)
+    obs = (Observability.null() if request.param == "null"
+           else Observability.recording())
+    with use_obs(obs):
+        yield obs
+    if obs.enabled:
+        doc = obs.tracer.to_chrome_trace()
+        assert len(doc["traceEvents"]) > 0, \
+            "recording run emitted no trace events"
+        assert validate_chrome_trace(doc) == []

@@ -49,10 +49,12 @@ def test_zero_intensity_config_is_inactive():
     assert moderate_chaos(seed=0).active
 
 
-def test_zero_intensity_replays_engine_golden_bit_for_bit():
+def test_zero_intensity_replays_engine_golden_bit_for_bit(obs_mode):
     """The seed-0 baseline experiment through a zero-intensity chaos
     wrapper must equal both the unwrapped run (full digest) and the
-    committed pre-refactor golden (executed/failed/changed sets)."""
+    committed pre-refactor golden (executed/failed/changed sets) — under
+    both observability modes: a recording tracer must not perturb a
+    single bit (the fixture also checks it captured a valid trace)."""
     suite = victoriametrics_like_suite()
     plain = run_faas_experiment("baseline", suite, seed=0)
     chaotic = run_chaos_experiment("baseline_chaos", suite, chaos=ZERO,
@@ -94,19 +96,20 @@ def test_zero_intensity_wrapper_delegates_backend_protocol():
     assert not getattr(wrapped, "realtime", False)
 
 
-def test_zero_intensity_service_replays_scheduler_golden():
+def test_zero_intensity_service_replays_scheduler_golden(obs_mode):
     """The 16-tenant multiplexed schedule digest — the service
     scheduler's pinned golden — must replay bit-for-bit through a
-    zero-intensity chaos-wrapped fleet."""
+    zero-intensity chaos-wrapped fleet, with or without a recording
+    tracer attached."""
     r = run_multi_tenant_experiment(16, provider="lambda", seed=34,
                                     chaos=ZERO)
     assert r.digest == GOLDEN_16_TENANT_DIGEST
 
 
-def test_zero_intensity_pipeline_replays_stream_bit_for_bit():
+def test_zero_intensity_pipeline_replays_stream_bit_for_bit(obs_mode):
     """A selective+cached pipeline stream with a zero-intensity chaos
     config must produce the identical commit runs (changes, costs,
-    events) as the calm pipeline."""
+    events) as the calm pipeline — under both observability modes."""
     from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
                           SyntheticSuite, synthetic_stream)
     base = SyntheticSuite()

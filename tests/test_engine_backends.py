@@ -31,9 +31,10 @@ def _suite(n=6, **kw):
 
 
 # ------------------------------------------------------------- seed parity
-def test_baseline_experiment_matches_seed_golden():
+def test_baseline_experiment_matches_seed_golden(obs_mode):
     """The refactored wrappers must reproduce the pre-refactor outcomes:
-    same executed/failed sets and same detected-change set at seed 0."""
+    same executed/failed sets and same detected-change set at seed 0 —
+    under both observability modes."""
     golden = json.load(open(GOLDEN))["baseline_seed0"]
     suite = victoriametrics_like_suite()
     res = run_faas_experiment("baseline", suite, seed=0)
@@ -43,7 +44,7 @@ def test_baseline_experiment_matches_seed_golden():
                   if c.changed) == golden["changed"]
 
 
-def test_vm_experiment_matches_seed_golden():
+def test_vm_experiment_matches_seed_golden(obs_mode):
     golden = json.load(open(GOLDEN))["vm_original"]
     suite = victoriametrics_like_suite()
     res = run_vm_experiment("original", suite)

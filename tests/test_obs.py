@@ -1,0 +1,277 @@
+"""Observability subsystem: tracer/metrics/recorder units, the Chrome
+trace_event export contract, the FanoutObserver short-circuit pin, and
+the metrics-vs-ServiceReport accounting cross-check.
+
+The golden *identity* tests (digests bit-for-bit with a recording
+tracer attached) live with the goldens they guard — here we test the
+sensors themselves and that the numbers they accumulate agree with the
+reports the stack already returns."""
+import json
+
+import pytest
+
+from repro.faas.engine import EngineObserver, FanoutObserver
+from repro.obs import (FlightRecorder, MetricsRegistry, NullTracer,
+                       Observability, QuantileSketch, RecordingTracer,
+                       use_obs, validate_chrome_trace, write_chrome_trace)
+from repro.obs.report import render_report
+
+
+# ------------------------------------------------------------------ tracer
+def test_null_tracer_is_inert():
+    tr = NullTracer()
+    assert tr.enabled is False
+    tr.span("x", cat="c", ts=0.0, dur=1.0, pid="p", tid="t")
+    tr.instant("y", cat="c", ts=0.0, pid="p", tid="t")
+    assert tr.events() == []
+    assert tr.to_chrome_trace()["traceEvents"] == []
+
+
+def test_recording_tracer_chrome_export():
+    tr = RecordingTracer()
+    tr.span("invoke", cat="invoke", ts=1.5, dur=0.25,
+            pid="fleet:lambda", tid="slot000", args={"job": "j1"})
+    tr.instant("cold_start", cat="cold", ts=1.5,
+               pid="fleet:lambda", tid="slot000")
+    tr.span("job", cat="job", ts=0.0, dur=3.0, pid="tenants",
+            tid="tenant00")
+    assert len(tr) == 3
+
+    doc = tr.to_chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    evs = doc["traceEvents"]
+    # two lanes -> two process_name + three thread_name... no: three
+    # (pid, tid) pairs but slot000 is shared, so 2 procs + 2 threads
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta
+            if m["name"] == "process_name"} == {"fleet:lambda", "tenants"}
+    span = next(e for e in evs if e["ph"] == "X" and e["name"] == "invoke")
+    assert span["ts"] == pytest.approx(1.5e6)       # virtual s -> us
+    assert span["dur"] == pytest.approx(0.25e6)
+    assert span["args"] == {"job": "j1"}
+    inst = next(e for e in evs if e["ph"] == "i")
+    # the instant shares the span's lane -> identical integer pid/tid
+    assert (inst["pid"], inst["tid"]) == (span["pid"], span["tid"])
+
+
+def test_validate_rejects_malformed_documents():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({}) != []
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0},  # no dur
+        {"ph": "i", "name": "b", "pid": "one", "tid": 1, "ts": 0.0},
+        {"ph": "X", "name": "c", "pid": 1, "tid": 1, "ts": -5, "dur": 1},
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert len(errs) == 3
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    tr = RecordingTracer()
+    tr.span("s", cat="c", ts=0.0, dur=1.0, pid="p", tid="t")
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(tr.to_chrome_trace(), path)
+    doc = json.load(open(path))
+    assert validate_chrome_trace(doc) == []
+    assert any(e.get("name") == "s" for e in doc["traceEvents"])
+
+
+# ----------------------------------------------------------------- metrics
+def test_quantile_sketch_bucket_resolution():
+    sk = QuantileSketch()
+    for i in range(1, 1001):
+        sk.observe(i / 1000.0)          # uniform on (0, 1]
+    s = sk.summary()
+    assert s["count"] == 1000
+    assert s["sum"] == pytest.approx(500.5)
+    assert s["min"] == pytest.approx(0.001)
+    assert s["max"] == pytest.approx(1.0)
+    # buckets grow 25% per step: estimates land within one bucket width
+    assert s["p50"] == pytest.approx(0.5, rel=0.25)
+    assert s["p99"] == pytest.approx(0.99, rel=0.25)
+    assert sk.quantile(1.0) <= s["max"]
+
+
+def test_observe_array_matches_scalar_loop():
+    import numpy as np
+    vals = np.random.default_rng(3).uniform(1e-7, 50.0, size=997)
+    a, b = QuantileSketch(), QuantileSketch()
+    for v in vals:
+        a.observe(float(v))
+    b.observe_array(vals)
+    assert a.buckets == b.buckets
+    assert a.count == b.count
+    assert a.total == pytest.approx(b.total)
+    assert (a.vmin, a.vmax) == (b.vmin, b.vmax)
+
+
+def test_registry_counters_labels_and_matching():
+    mx = MetricsRegistry()
+    mx.inc("inv", 2.0, tenant="a", provider="lambda")
+    mx.inc("inv", 3.0, tenant="b", provider="lambda")
+    mx.inc("inv", 5.0, tenant="b", provider="gcf")
+    assert mx.counter_total("inv") == 10.0
+    assert mx.counter_total("inv", tenant="b") == 8.0
+    assert mx.counter_total("inv", tenant="b", provider="gcf") == 5.0
+    assert mx.counter_total("other") == 0.0
+    assert mx.label_values("tenant") == ["a", "b"]
+    series = mx.counter_series("inv")
+    assert len(series) == 3
+    mx.set_gauge("util", 0.5, provider="lambda")
+    assert mx.gauge("util", provider="lambda") == 0.5
+    assert mx.gauge("util", provider="gcf") is None
+
+
+def test_snapshot_schema_and_json_roundtrip(tmp_path):
+    mx = MetricsRegistry()
+    mx.inc("c", tenant="t0")
+    mx.set_gauge("g", 1.25)
+    mx.observe("h", 0.5, provider="lambda")
+    path = str(tmp_path / "metrics.json")
+    mx.to_json(path)
+    snap = json.load(open(path))
+    assert snap["schema"] == 1
+    assert snap["counters"] == [
+        {"name": "c", "labels": {"tenant": "t0"}, "value": 1.0}]
+    assert snap["gauges"][0]["value"] == 1.25
+    h = snap["histograms"][0]
+    assert h["count"] == 1 and h["labels"] == {"provider": "lambda"}
+    # the text dashboard renders any valid snapshot without choking
+    assert "h" in render_report(snap)
+
+
+# ---------------------------------------------------------------- recorder
+def test_flight_recorder_ring_is_bounded_and_dumps_capped():
+    rec = FlightRecorder(capacity=4, max_dumps=2)
+    tr = RecordingTracer(recorder=rec)
+    for i in range(10):
+        tr.instant(f"e{i}", cat="c", ts=float(i), pid="p", tid="t")
+    d = rec.dump("anomaly", ts=9.0, context={"k": "v"})
+    assert d["n_events"] == 4                      # ring kept the last 4
+    names = [e["name"] for e in d["trace"]["traceEvents"]
+             if e["ph"] != "M"]
+    assert names == ["e6", "e7", "e8", "e9"]
+    assert rec.dump("again") is not None
+    assert rec.dump("capped") is None              # over max_dumps
+    assert rec.dumps_suppressed == 1
+    snap = rec.snapshot()
+    assert len(snap["dumps"]) == 2
+
+
+# -------------------------------------- satellite: fanout short-circuiting
+class _SkipProbe(EngineObserver):
+    def __init__(self, skip):
+        self.skip = skip
+        self.calls = 0
+
+    def should_skip(self, inv):
+        self.calls += 1
+        return self.skip
+
+
+def test_fanout_should_skip_short_circuits():
+    """Once one child skips, the invocation is dropped — later children
+    must not be consulted at all (the composite used to materialize every
+    child's verdict eagerly before reducing)."""
+    first, second, third = _SkipProbe(True), _SkipProbe(False), \
+        _SkipProbe(False)
+    fan = FanoutObserver([first, second, third])
+    assert fan.should_skip(None) is True
+    assert first.calls == 1
+    assert second.calls == 0
+    assert third.calls == 0
+    # and when nobody skips, every child is consulted exactly once
+    a, b = _SkipProbe(False), _SkipProbe(False)
+    assert FanoutObserver([a, b]).should_skip(None) is False
+    assert (a.calls, b.calls) == (1, 1)
+
+
+# --------------------------------- satellite: metrics vs report cross-check
+def test_multi_tenant_metrics_cross_check_service_report():
+    """The counters accumulated by the instrumentation must agree with
+    the accounting the ServiceReport computes independently: invocation
+    counts and cold starts are exact integers, delivered cost is the
+    same float stream in the same order."""
+    from repro.core.experiment import run_multi_tenant_experiment
+    with use_obs(Observability.recording()) as obs:
+        res = run_multi_tenant_experiment(16, provider="lambda", seed=34)
+    mx = obs.metrics
+    assert mx.counter_total("service.invocations") == res.total_invocations
+    assert mx.counter_total("engine.invocations") == res.total_invocations
+    assert mx.counter_total("engine.cold_starts") == res.cold_starts
+    assert mx.counter_total("service.cost_usd") == res.total_cost_usd
+    assert len(mx.label_values("tenant")) == 16
+    # and the observability run replayed the pinned schedule bit-for-bit
+    assert res.digest == "65e8852bf2dce3a7"
+
+
+def test_per_tenant_cost_attribution_matches_job_results():
+    """Summing `service.cost_usd` per tenant label reproduces each
+    tenant's JobResult bill exactly; observer-visible billed seconds
+    stay within the report's exact total (which also counts retried
+    attempts the observer never sees)."""
+    from repro.core.experiment import victoriametrics_like_suite
+    from repro.service import BenchmarkService, Job, ServiceConfig
+
+    full = victoriametrics_like_suite()
+    wl = {k: v for k, v in sorted(full.items())[:12]
+          if not v.fs_write and v.base_seconds < 10.0}
+    with use_obs(Observability.recording()) as obs:
+        svc = BenchmarkService(ServiceConfig(parallelism=16, seed=11))
+        for i in range(4):
+            svc.submit(Job(job_id=f"j{i}", tenant=f"ten{i % 2}",
+                           workloads=wl, n_calls=4, repeats_per_call=2,
+                           seed=100 + i))
+        rep = svc.run()
+    mx = obs.metrics
+    per_tenant = {}
+    for r in rep.results:
+        per_tenant[r.tenant] = per_tenant.get(r.tenant, 0.0) \
+            + r.cost_dollars
+    assert set(mx.label_values("tenant")) == set(per_tenant)
+    for tenant, cost in per_tenant.items():
+        assert mx.counter_total("service.cost_usd", tenant=tenant) \
+            == pytest.approx(cost, rel=1e-12)
+    billed = mx.counter_total("service.billed_s")
+    assert 0.0 < billed <= rep.total_billed_s * (1 + 1e-9)
+    assert billed == pytest.approx(rep.total_billed_s, rel=0.05)
+
+
+# --------------------------------------------------------- anomaly capture
+def test_preemption_dumps_flight_record():
+    """An over-budget preemption must leave a post-mortem dump with the
+    triggering tenant in its context."""
+    from repro.core.experiment import victoriametrics_like_suite
+    from repro.service import BenchmarkService, Job, ServiceConfig
+
+    full = victoriametrics_like_suite()
+    wl = {k: v for k, v in sorted(full.items())[:8]
+          if not v.fs_write and v.base_seconds < 10.0}
+    with use_obs(Observability.recording()) as obs:
+        svc = BenchmarkService(ServiceConfig(parallelism=8, seed=3))
+        svc.submit(Job(job_id="poor", tenant="broke", workloads=wl,
+                       n_calls=6, repeats_per_call=2, seed=5,
+                       budget_usd=1e-9))
+        rep = svc.run()
+    assert "poor" in rep.preempted_jobs
+    assert obs.metrics.counter_total("service.preemptions",
+                                     tenant="broke") >= 1.0
+    dumps = obs.recorder.snapshot()["dumps"]
+    assert any(d["reason"] == "preemption"
+               and d["context"].get("tenant") == "broke" for d in dumps)
+
+
+def test_infeasible_plan_dumps_flight_record():
+    from repro.core.experiment import victoriametrics_like_suite
+    from repro.service import (DeadlineCostPlanner, InfeasiblePlanError,
+                               PlannerConfig)
+
+    full = victoriametrics_like_suite()
+    wl = {k: v for k, v in sorted(full.items())[:6]}
+    planner = DeadlineCostPlanner(PlannerConfig())
+    with use_obs(Observability.recording()) as obs:
+        with pytest.raises(InfeasiblePlanError):
+            planner.plan(wl, deadline_s=0.001, budget_usd=1e-12)
+    assert obs.metrics.counter_total("planner.infeasible") == 1.0
+    dumps = obs.recorder.snapshot()["dumps"]
+    assert any(d["reason"] == "infeasible_plan" for d in dumps)
