@@ -161,13 +161,20 @@ OVERHEAD_SIZES = (10_000, 100_000)
 NULL_OVERHEAD_LIMIT = 1.05
 
 
-def _time_obs_modes(suite, plan, seed: int, reps: int):
+def _time_obs_modes(suite, plan, seed: int, reps: int, inner: int = 1):
     """Best-of-``reps`` wall time per observability mode, with the modes
     *interleaved* round-robin inside each rep: container CPU throttling
     drifts on a seconds scale, so timing the modes in sequential blocks
     biases whichever block drew the slow window.  Interleaving exposes
     every mode to the same drift and the per-mode minimum compares
-    like-for-like."""
+    like-for-like.
+
+    Each timed sample is ``inner`` back-to-back engine runs: at N=10^4 a
+    single run is ~20 ms, where scheduler noise and timer granularity
+    put single-digit percent jitter on the very ratio being gated —
+    batching makes the sample long enough to swamp it.  A full untimed
+    warm-up round precedes the timed reps so no mode pays first-touch
+    allocator/import costs inside a measurement."""
     import contextlib
     import gc
 
@@ -181,27 +188,34 @@ def _time_obs_modes(suite, plan, seed: int, reps: int):
              ("recording", rec_obs))
     best = {m: float("inf") for m, _ in modes}
     reports = {}
+    n_recording_runs = 0
     gc_was = gc.isenabled()
     gc.disable()
     try:
-        for _ in range(reps):
+        for rep in range(reps + 1):          # rep 0 is the warm-up round
             for mode, obs in modes:
-                backend = SimFaaSBackend(suite, seed=seed)
-                eng = make_engine(backend,
-                                  EngineConfig(parallelism=PARALLELISM),
-                                  engine="fast")
                 ctx = use_obs(obs) if obs is not None \
                     else contextlib.nullcontext()
+                runs = 1 if rep == 0 else inner
+                if mode == "recording":
+                    n_recording_runs += runs
+                engines = [make_engine(SimFaaSBackend(suite, seed=seed),
+                                       EngineConfig(
+                                           parallelism=PARALLELISM),
+                                       engine="fast")
+                           for _ in range(runs)]
                 with ctx:
                     t0 = time.perf_counter()
-                    reports[mode] = eng.run(plan)
-                    best[mode] = min(best[mode],
-                                     time.perf_counter() - t0)
+                    for eng in engines:
+                        reports[mode] = eng.run(plan)
+                    dt = (time.perf_counter() - t0) / runs
+                if rep > 0:
+                    best[mode] = min(best[mode], dt)
     finally:
         if gc_was:
             gc.enable()
         gc.collect()
-    return reports, best, len(rec_obs.tracer) // reps
+    return reports, best, len(rec_obs.tracer) // n_recording_runs
 
 
 def run_trace_overhead(seed: int) -> list:
@@ -215,9 +229,12 @@ def run_trace_overhead(seed: int) -> list:
     for n in OVERHEAD_SIZES:
         plan = make_size_plan(suite, n, seed=seed)
         n_inv = len(plan.invocations)
-        reps = 7 if n <= 10_000 else 5
+        # small plans: more reps AND longer samples (inner back-to-back
+        # runs per timing) — the 10^4 recording_ratio was flapping by
+        # ~20% when each sample was a single ~20 ms run
+        reps, inner = (9, 4) if n <= 10_000 else (5, 1)
         reports, best, events_per_run = _time_obs_modes(
-            suite, plan, seed, reps)
+            suite, plan, seed, reps, inner=inner)
         d = _digest(reports["off"])
         for mode in ("null", "recording"):
             if _digest(reports[mode]) != d:

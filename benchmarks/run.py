@@ -7,12 +7,29 @@ table's rows) followed by a human-readable summary block per table.
                                             [--skip-real] [--roofline FILE]
                                             [--seed N]
                                             [--engine fast|reference]
+                                            [--jobs N]
+
+``--jobs N`` runs the multi-tenant benchmarking-as-a-service scenario
+(N concurrent commit-stream tenants on one shared fleet) instead of the
+tables; with ``--engine fast`` given explicitly the run exits non-zero
+if anything forces the vectorized core to degrade to the scalar loop.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+def _write_obs(args, obs) -> None:
+    if obs is None:
+        return
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"\ntrace: {len(obs.tracer)} events -> {args.trace}")
+    if args.metrics_out:
+        obs.export_metrics(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
 
 
 def main(argv=None) -> None:
@@ -26,11 +43,19 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="base seed offsetting every table's experiment "
                          "seeds (0 replays the historical tables)")
-    ap.add_argument("--engine", default="fast",
+    ap.add_argument("--engine", default=None,
                     choices=("fast", "reference"),
                     help="simulation scheduler core: vectorized (default) "
                          "or the scalar reference loop — every table is "
-                         "bit-identical under both")
+                         "bit-identical under both.  Passing `fast` "
+                         "explicitly is strict: a --jobs run that "
+                         "degrades to the scalar loop exits non-zero")
+    ap.add_argument("--jobs", type=int, default=0, metavar="N",
+                    help="instead of the paper tables, run the "
+                         "multi-tenant benchmarking-as-a-service scenario "
+                         "with N concurrent commit-stream tenants on one "
+                         "shared fleet (honors --engine through the "
+                         "service scheduler) and print its summary JSON")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a virtual-time trace of every table run "
                          "and write Chrome trace_event JSON (Perfetto)")
@@ -38,6 +63,9 @@ def main(argv=None) -> None:
                     help="write the metrics registry snapshot "
                          "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
+    strict_fast = args.engine == "fast"    # explicit ask = strict gate
+    if args.engine is None:
+        args.engine = "fast"
 
     from repro.faas.engine_vec import set_default_engine
     set_default_engine(args.engine)
@@ -47,6 +75,26 @@ def main(argv=None) -> None:
         from repro.obs import Observability, set_obs
         obs = Observability.recording()
         set_obs(obs)
+
+    if args.jobs > 0:
+        from dataclasses import asdict
+
+        from repro.core.experiment import run_multi_tenant_experiment
+        from repro.faas.engine_vec import (get_fallback_log,
+                                           reset_fallback_log)
+        reset_fallback_log()
+        r = run_multi_tenant_experiment(args.jobs, provider="lambda",
+                                        seed=args.seed, engine=args.engine)
+        print(json.dumps(asdict(r), sort_keys=True))
+        fallbacks = get_fallback_log()
+        if strict_fast and fallbacks:
+            print("--engine fast was requested but the service run "
+                  "degraded to the scalar loop:", file=sys.stderr)
+            for reason in sorted(set(fallbacks)):
+                print(f"  {reason}", file=sys.stderr)
+            sys.exit(3)
+        _write_obs(args, obs)
+        return
 
     import benchmarks.paper_tables as paper_tables
     if args.seed:
@@ -89,13 +137,7 @@ def main(argv=None) -> None:
         for k, v in rows.items():
             print(f"    {k:36s} {v}")
 
-    if obs is not None:
-        if args.trace:
-            obs.export_trace(args.trace)
-            print(f"\ntrace: {len(obs.tracer)} events -> {args.trace}")
-        if args.metrics_out:
-            obs.export_metrics(args.metrics_out)
-            print(f"metrics -> {args.metrics_out}")
+    _write_obs(args, obs)
 
 
 if __name__ == "__main__":

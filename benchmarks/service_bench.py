@@ -18,9 +18,20 @@ committed ``BENCH_service.json`` and exits non-zero when p95 latency,
 makespan, or cost regressed by more than the gate factor (2x), or when
 fairness collapsed below 0.8.
 
+``--scaling`` additionally runs the `service_scaling` scale-out rows:
+N commit-stream tenants (up to 256+, ~10^6 invocations at full scale) on
+one high-parallelism fleet, executed once per scheduler core
+("fast"/"reference").  Each row records both wall times, the
+fast/reference speedup, and whether the two cores' schedule digests
+match bit-for-bit; variant rows exercise budget preemption (vector skip
+path) and provider chaos (documented scalar fallback).  With
+``--check-baseline`` the scaling rows gate on digest equality and on the
+measured speedup staying >= SCALING_MIN_SPEEDUP for non-chaos rows.
+
 Usage:
     PYTHONPATH=src python benchmarks/service_bench.py [--tenants 8]
-        [--out BENCH_service.json] [--check-baseline BENCH_service.json]
+        [--scaling small|full] [--out BENCH_service.json]
+        [--check-baseline BENCH_service.json]
 """
 from __future__ import annotations
 
@@ -35,6 +46,7 @@ from repro.core.experiment import run_multi_tenant_experiment
 PROVIDERS = ("lambda", "gcf", "azure")
 GATE_FACTOR = 2.0
 MIN_FAIRNESS = 0.8
+SCALING_MIN_SPEEDUP = 2.0
 
 
 def run_profile(n_tenants: int, seed: int) -> dict:
@@ -57,6 +69,139 @@ def run_profile(n_tenants: int, seed: int) -> dict:
             "harness_s": round(time.perf_counter() - t0, 2),
         }
     return out
+
+
+def scaling_workloads() -> dict:
+    """The scale-out scenario's workload slice: the stable mid-band of
+    the victoriametrics-like suite (0.25-4s base duration, executable,
+    no unstable-noise benchmarks).  Uniform slot turnover keeps the
+    fleet's completion/dispatch interleaving coarse, which is the regime
+    the paper's elastic scale-out targets — and the regime where the
+    vectorized core commits hundreds of lanes per wave."""
+    from repro.core.experiment import victoriametrics_like_suite
+    return {n: w for n, w in victoriametrics_like_suite().items()
+            if 0.25 <= w.base_seconds <= 4.0 and not w.fs_write
+            and not w.unstable_pct}
+
+
+def _run_scaling_once(engine: str, streams: int, seed: int, *,
+                      parallelism: int, n_calls: int, quantum: int,
+                      n_boot: int, budget_every: int = 0,
+                      budget_usd: float = 0.02, chaos_seed=None):
+    from repro.service import BenchmarkService, ServiceConfig
+    from repro.cb import (Pipeline, PipelineConfig, StreamConfig,
+                          SyntheticSuite, synthetic_stream)
+    from repro.faas.engine_vec import (get_fallback_log,
+                                      reset_fallback_log)
+    chaos = None
+    if chaos_seed is not None:
+        from repro.faas.chaos import moderate_chaos
+        chaos = moderate_chaos(seed=chaos_seed)
+    band = scaling_workloads()
+    base = SyntheticSuite(band)
+    service = BenchmarkService(ServiceConfig(
+        parallelism=parallelism, seed=seed, engine=engine,
+        schedule_quantum=quantum, analysis_n_boot=n_boot, chaos=chaos))
+    for t in range(streams):
+        ss = seed + 7919 * (t + 1)
+        commits, _ = synthetic_stream(
+            base.benchmark_names(), StreamConfig(n_commits=4, seed=ss),
+            effectable=base.measurable_names(),
+            drift_candidates=base.quiet_names())
+        pipe = Pipeline(SyntheticSuite(base.workloads), PipelineConfig(
+            provider="lambda", mode="selective", n_calls=n_calls,
+            repeats_per_call=3, parallelism=parallelism, seed=ss))
+        budget = (budget_usd if budget_every
+                  and t % budget_every == 0 else None)
+        pipe.submit_stream(commits, service, tenant=f"tenant{t:03d}",
+                           budget_usd=budget)
+    reset_fallback_log()
+    t0 = time.perf_counter()
+    rep = service.run()
+    dt = time.perf_counter() - t0
+    return dt, rep, list(get_fallback_log())
+
+
+def run_scaling_row(streams: int, seed: int, *, n_calls: int = 25,
+                    parallelism: int = 4000, quantum: int = 64,
+                    n_boot: int = 250, variant: str = "throughput") -> dict:
+    budget_every = 8 if variant == "budget_preempt" else 0
+    chaos_seed = seed if variant == "chaos" else None
+    out = {}
+    for engine in ("fast", "reference"):
+        dt, rep, fb = _run_scaling_once(
+            engine, streams, seed, parallelism=parallelism,
+            n_calls=n_calls, quantum=quantum, n_boot=n_boot,
+            budget_every=budget_every, chaos_seed=chaos_seed)
+        out[engine] = (dt, rep, fb)
+    dt_f, rep_f, fb_f = out["fast"]
+    dt_r, rep_r, _ = out["reference"]
+    dig_f, dig_r = rep_f.digest(), rep_r.digest()
+    return {
+        "variant": variant,
+        "streams": streams,
+        "jobs": len(rep_f.results),
+        "invocations": rep_f.total_invocations,
+        "parallelism": parallelism,
+        "n_calls": n_calls,
+        "schedule_quantum": quantum,
+        "analysis_n_boot": n_boot,
+        "preempted_jobs": len(rep_f.preempted_jobs),
+        "fast_s": round(dt_f, 2),
+        "reference_s": round(dt_r, 2),
+        "speedup": round(dt_r / dt_f, 2),
+        "digests_equal": dig_f == dig_r,
+        "digest": dig_f,
+        "scalar_fallback": bool(fb_f),
+    }
+
+
+def run_scaling(mode: str, seed: int) -> list:
+    """`small` is the CI-sized gate row; `full` is the committed
+    scale-out table (256+ streams, ~10^6 invocations at full scale)."""
+    rows = [run_scaling_row(64, seed)]
+    if mode == "full":
+        rows.append(run_scaling_row(256, seed))
+        rows.append(run_scaling_row(256, seed, variant="budget_preempt"))
+        rows.append(run_scaling_row(256, seed, variant="chaos"))
+        rows.append(run_scaling_row(256, seed, n_calls=130,
+                                    variant="full_scale"))
+    return rows
+
+
+def check_scaling(rows: list, baseline_path: str) -> list:
+    failures = []
+    try:
+        with open(baseline_path) as f:
+            base_rows = json.load(f).get("service_scaling", [])
+    except (OSError, ValueError):
+        base_rows = []
+    base_by_key = {(r["variant"], r["streams"]): r for r in base_rows}
+    for row in rows:
+        key = (row["variant"], row["streams"])
+        if not row["digests_equal"]:
+            failures.append(
+                f"scaling {key}: fast/reference schedule digests differ")
+        if row["variant"] != "chaos" and row["scalar_fallback"]:
+            failures.append(
+                f"scaling {key}: fast core fell back to the scalar "
+                f"loop (expected the vectorized path)")
+        if row["variant"] in ("throughput", "full_scale") \
+                and row["speedup"] < SCALING_MIN_SPEEDUP:
+            failures.append(
+                f"scaling {key}: fast/reference speedup "
+                f"{row['speedup']} < {SCALING_MIN_SPEEDUP}")
+        if row["variant"] == "budget_preempt" \
+                and not row["preempted_jobs"]:
+            failures.append(
+                f"scaling {key}: no jobs were preempted (budget "
+                f"accounting not exercised)")
+        base = base_by_key.get(key)
+        if base is not None and base["digest"] != row["digest"]:
+            failures.append(
+                f"scaling {key}: schedule digest {row['digest']} != "
+                f"committed baseline {base['digest']}")
+    return failures
 
 
 def check_baseline(current: dict, baseline_path: str) -> int:
@@ -90,6 +235,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--seed", type=int, default=34)
+    ap.add_argument("--scaling", choices=("small", "full"), default=None,
+                    help="also run the service_scaling scale-out rows "
+                         "(small = the CI gate row, full = the committed "
+                         "256-stream table)")
     ap.add_argument("--out", default="BENCH_service.json")
     ap.add_argument("--check-baseline", default=None, metavar="FILE")
     args = ap.parse_args(argv)
@@ -103,6 +252,10 @@ def main(argv=None) -> int:
         "python": platform.python_version(),
         "providers": providers,
     }
+    scaling_rows = None
+    if args.scaling:
+        scaling_rows = run_scaling(args.scaling, args.seed)
+        doc["service_scaling"] = scaling_rows
     if args.out:
         import os
         d = os.path.dirname(args.out)
@@ -113,8 +266,21 @@ def main(argv=None) -> int:
             f.write("\n")
         print(f"wrote {args.out}")
     print(json.dumps(providers, indent=1, sort_keys=True))
+    if scaling_rows is not None:
+        print(json.dumps(scaling_rows, indent=1, sort_keys=True))
     if args.check_baseline:
-        return check_baseline(providers, args.check_baseline)
+        rc = check_baseline(providers, args.check_baseline)
+        if scaling_rows is not None:
+            failures = check_scaling(scaling_rows, args.check_baseline)
+            if failures:
+                print("service scaling gate FAILED:", file=sys.stderr)
+                for f in failures:
+                    print(f"  {f}", file=sys.stderr)
+                rc = rc or 1
+            else:
+                print(f"service scaling gate OK ({len(scaling_rows)} "
+                      f"rows, min speedup {SCALING_MIN_SPEEDUP}x)")
+        return rc
     return 0
 
 

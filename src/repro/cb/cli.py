@@ -14,7 +14,10 @@ tenant commit streams to one shared `BenchmarkService` per provider
 instead of running inline; `--deadline` / `--budget` route every
 commit-job through the deadline/cost planner, which picks the provider,
 memory, fleet size, and repeat plan — and **fails loudly** (exit code 2)
-when no candidate configuration is feasible:
+when no candidate configuration is feasible.  Passing ``--engine fast``
+explicitly is strict: if an observer/backend combination forces the
+vectorized core to degrade to the scalar loop, the run exits with code 3
+and names the reason instead of silently falling back:
 
     PYTHONPATH=src python -m repro.cb.cli --commits 6 --jobs 8 \
         --providers lambda --seed 1
@@ -33,6 +36,7 @@ from repro.cb.pipeline import MODES, Pipeline, PipelineConfig
 from repro.cb.registry import SyntheticSuite, get_suite
 
 EXIT_INFEASIBLE = 2
+EXIT_FALLBACK = 3       # `--engine fast` was explicit but the run degraded
 
 
 def _stream_for(args, suite, seed: int):
@@ -95,7 +99,17 @@ def _run_service(args, history, providers, modes) -> int:
             except AdmissionError as exc:
                 print(f"infeasible: {exc}", file=sys.stderr)
                 return EXIT_INFEASIBLE
+            from repro.faas.engine_vec import (get_fallback_log,
+                                              reset_fallback_log)
+            reset_fallback_log()
             rep = service.run()
+            fallbacks = get_fallback_log()
+            if getattr(args, "strict_fast", False) and fallbacks:
+                print("--engine fast was requested but the run degraded "
+                      "to the scalar loop:", file=sys.stderr)
+                for reason in sorted(set(fallbacks)):
+                    print(f"  {reason}", file=sys.stderr)
+                return EXIT_FALLBACK
             reports = [p.collect_service(pend) for p, pend in pipelines]
             summary = {
                 "suite": args.suite, "provider": provider, "mode": mode,
@@ -131,11 +145,13 @@ def main(argv=None) -> int:
     ap.add_argument("--n-calls", type=int, default=15)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--parallelism", type=int, default=150)
-    ap.add_argument("--engine", default="fast",
+    ap.add_argument("--engine", default=None,
                     choices=("fast", "reference"),
                     help="scheduler core: vectorized (default) or the "
                          "scalar reference loop — reports are "
-                         "bit-identical")
+                         "bit-identical.  Passing `fast` explicitly is "
+                         "strict: a run that silently degrades to the "
+                         "scalar loop exits non-zero")
     ap.add_argument("--max-staleness", type=int, default=5)
     ap.add_argument("--adaptive", action="store_true",
                     help="CI-width early stopping inside each commit run")
@@ -162,6 +178,12 @@ def main(argv=None) -> int:
                     help="write the metrics registry snapshot "
                          "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
+    # `--engine fast` given explicitly arms the strict no-fallback gate;
+    # the bare default still prefers the vectorized core but tolerates
+    # designed scalar fallbacks (e.g. chaos runs)
+    args.strict_fast = args.engine == "fast"
+    if args.engine is None:
+        args.engine = "fast"
 
     from repro.faas.engine_vec import set_default_engine
     set_default_engine(args.engine)

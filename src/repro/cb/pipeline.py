@@ -95,6 +95,29 @@ class _BenchmarkMeter(EngineObserver):
         self.billed_s[b] = self.billed_s.get(b, 0.0) \
             + done.outcome.duration_s
 
+    # vectorized-engine waves: same tallies from whole arrays.  Dict
+    # key order (first event per benchmark) and float sums (cumulative
+    # sum seeded from the running total == sequential adds) both match
+    # the per-event path bit-for-bit.
+    wave_eligible = True
+
+    def on_wave(self, wave) -> None:
+        import numpy as np
+        if len(wave) == 0:
+            return
+        combo = wave.combo
+        durs = wave.duration_s
+        cu, first = np.unique(combo, return_index=True)
+        for c in cu[np.argsort(first)].tolist():
+            b = wave.combo_bench[c]
+            dm = durs[combo == c]
+            self.invocations[b] = (self.invocations.get(b, 0)
+                                   + int(dm.shape[0]))
+            arr = np.empty(dm.shape[0] + 1)
+            arr[0] = self.billed_s.get(b, 0.0)
+            arr[1:] = dm
+            self.billed_s[b] = float(np.cumsum(arr)[-1])
+
 
 @dataclass
 class CommitRun:

@@ -79,8 +79,10 @@ def run_plan(backend, plan, *, parallelism: int, seed: int,
     controller's analyzer as the final analysis when it decided the run
     (its pair order is the one the stop decisions saw).  ``engine``
     picks the scheduler core ("fast"/"reference", None = process
-    default); observer-driven runs stream through the scalar loop either
-    way."""
+    default); wave-eligible observers (e.g. the pipeline's benchmark
+    meter) ride the vectorized path, while adaptive-controller runs
+    stream through the scalar loop (the controller injects work
+    mid-flight)."""
     from repro.faas.engine_vec import make_engine
     eng = make_engine(backend, EngineConfig(parallelism=parallelism),
                       engine=engine)

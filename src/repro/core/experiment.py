@@ -547,7 +547,8 @@ def run_multi_tenant_experiment(n_tenants: int, *,
                                 repeats_per_call: int = 3,
                                 parallelism: int = 150,
                                 seed: int = 0,
-                                chaos=None) -> MultiTenantResult:
+                                chaos=None,
+                                engine=None) -> MultiTenantResult:
     """N concurrent commit-stream tenants sharing one service fleet.
 
     Every tenant owns an independent synthetic commit stream (distinct
@@ -560,7 +561,8 @@ def run_multi_tenant_experiment(n_tenants: int, *,
     from repro.service import BenchmarkService, ServiceConfig
     base = SyntheticSuite()
     service = BenchmarkService(ServiceConfig(parallelism=parallelism,
-                                             seed=seed, chaos=chaos))
+                                             seed=seed, chaos=chaos,
+                                             engine=engine))
     pipelines = []
     for t in range(n_tenants):
         stream_seed = seed + 7919 * (t + 1)

@@ -94,7 +94,26 @@ def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE
     to a per-benchmark `detect_change` loop, several times faster.
     ``robust="trim"``/``"winsor"`` opts into the outlier-fenced CI
     variants (stats.py) — identical on outlier-free data, resistant to
-    chaos-contaminated pairs otherwise."""
+    chaos-contaminated pairs otherwise.
+
+    Array-backed pair sequences from the vectorized engine (`PairSeq`)
+    are grouped straight from their columns — same benchmarks, same
+    first-appearance order, same ascending index sets as the object
+    loop, without materializing a DuetPair per row."""
+    seq = _pairseq_columns(pairs)
+    if seq is not None:
+        bid, v1, v2, names = seq
+        combos: Dict[str, list] = {}
+        cu, first = np.unique(bid, return_index=True)
+        for c in cu[np.argsort(first)].tolist():
+            combos.setdefault(names[c], []).append(c)
+        return detect_changes_batch(
+            ((name, v1[ix], v2[ix]) for name, ix in
+             ((n, np.flatnonzero(np.isin(bid, cs)) if len(cs) > 1
+               else np.flatnonzero(bid == cs[0]))
+              for n, cs in combos.items())),
+            confidence=confidence, n_boot=n_boot, seed=seed,
+            min_results=min_results, robust=robust, robust_k=robust_k)
     pairs = pairs if isinstance(pairs, list) else list(pairs)
     v1 = np.array([p.v1_seconds for p in pairs])
     v2 = np.array([p.v2_seconds for p in pairs])
@@ -109,6 +128,19 @@ def analyze(pairs: Iterable[DuetPair], *, confidence: float = DEFAULT_CONFIDENCE
          for name, ix in grouped.items()),
         confidence=confidence, n_boot=n_boot, seed=seed,
         min_results=min_results, robust=robust, robust_k=robust_k)
+
+
+def _pairseq_columns(pairs):
+    """(bid, v1, v2, names) when `pairs` is an array-backed PairSeq
+    (timing columns round-trip bit-exactly through materialization, so
+    the column path and the object path see identical floats)."""
+    try:
+        from repro.faas.engine_vec import PairSeq
+    except ImportError:                       # pragma: no cover
+        return None
+    if isinstance(pairs, PairSeq):
+        return pairs._bid, pairs._v1, pairs._v2, pairs._names
+    return None
 
 
 class _PairBuffer:
@@ -129,6 +161,21 @@ class _PairBuffer:
         self.v1[self.n] = a
         self.v2[self.n] = b
         self.n += 1
+
+    def extend(self, a: np.ndarray, b: np.ndarray) -> None:
+        need = self.n + int(a.shape[0])
+        cap = len(self.v1)
+        if need > cap:
+            while cap < need:
+                cap *= 2
+            v1 = np.empty(cap)
+            v2 = np.empty(cap)
+            v1[:self.n] = self.v1[:self.n]
+            v2[:self.n] = self.v2[:self.n]
+            self.v1, self.v2 = v1, v2
+        self.v1[self.n:need] = a
+        self.v2[self.n:need] = b
+        self.n = need
 
     def views(self) -> Tuple[np.ndarray, np.ndarray]:
         return self.v1[:self.n], self.v2[:self.n]
@@ -169,8 +216,36 @@ class StreamingAnalyzer:
         self._dirty.add(name)
 
     def add_pairs(self, pairs: Iterable[DuetPair]) -> None:
+        seq = _pairseq_columns(pairs)
+        if seq is not None:
+            bid, v1, v2, names = seq
+            combos: Dict[str, list] = {}
+            cu, first = np.unique(bid, return_index=True)
+            for c in cu[np.argsort(first)].tolist():
+                combos.setdefault(names[c], []).append(c)
+            for name, cs in combos.items():
+                m = (bid == cs[0]) if len(cs) == 1 else np.isin(bid, cs)
+                self.append_many(name, v1[m], v2[m])
+            return
         for p in pairs:
             self.add_pair(p)
+
+    def append_many(self, benchmark: str, v1, v2) -> None:
+        """Bulk pair append (vectorized-engine wave flush): identical
+        end state to `add_pair` per element in order, independent of how
+        the stream is chunked into calls."""
+        v1 = np.asarray(v1, float).ravel()
+        v2 = np.asarray(v2, float).ravel()
+        if v1.shape != v2.shape:
+            raise ValueError("v1/v2 must be pair-aligned")
+        if not v1.size:
+            return
+        buf = self._buf.get(benchmark)
+        if buf is None:
+            buf = self._buf[benchmark] = _PairBuffer()
+            self._order.append(benchmark)
+        buf.extend(v1, v2)
+        self._dirty.add(benchmark)
 
     def n_pairs(self, benchmark: str) -> int:
         buf = self._buf.get(benchmark)

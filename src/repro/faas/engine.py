@@ -131,21 +131,145 @@ class CompletedInvocation:
     delivered: bool = False              # dedup mark for duplicate delivery
 
 
+class CompletedWave:
+    """A batch of completed invocations in delivery order (SoA columns).
+
+    The vectorized engine delivers whole validity-truncated waves to
+    wave-eligible observers through `EngineObserver.on_wave` instead of
+    one `CompletedInvocation` at a time.  Columns are parallel arrays
+    (any indexable array type; the vector engine passes ndarrays) and
+    the event sequence across successive `on_wave` calls is exactly the
+    `on_result` sequence the scalar engine would have produced: same
+    events, same (t_end, dispatch-seq) order, final attempts only.
+
+    Pairs are carried as two flat columns (`pair_v1` / `pair_v2`) sliced
+    per event by (`pair_off`, `pair_cnt`); per-pair metadata (benchmark,
+    call index, instance, cold flag) is the owning event's.  Failed
+    events carry no pairs (`pair_cnt == 0`) — the scalar outcome may
+    hold a partial prefix there, which no shipping observer reads.
+    """
+
+    __slots__ = ("n", "plan_invocations", "gidx", "combo", "combo_bench",
+                 "combo_job", "call", "t_start", "t_end", "duration_s",
+                 "attempt", "ok", "timed_out", "platform_failure",
+                 "benchmark_failure", "cold", "iid_num", "speed",
+                 "iid_prefix", "pair_off", "pair_cnt", "pair_v1", "pair_v2")
+
+    def __init__(self, *, n, plan_invocations, gidx, combo, combo_bench,
+                 combo_job, call, t_start, t_end, duration_s, attempt, ok,
+                 timed_out, platform_failure, benchmark_failure, cold,
+                 iid_num, speed, iid_prefix, pair_off, pair_cnt, pair_v1,
+                 pair_v2):
+        self.n = n
+        self.plan_invocations = plan_invocations
+        self.gidx = gidx                 # event -> index into the plan
+        self.combo = combo               # event -> (job, benchmark) id
+        self.combo_bench = combo_bench   # combo id -> benchmark name
+        self.combo_job = combo_job       # combo id -> job id ("" if n/a)
+        self.call = call
+        self.t_start = t_start
+        self.t_end = t_end
+        self.duration_s = duration_s
+        self.attempt = attempt
+        self.ok = ok
+        self.timed_out = timed_out
+        self.platform_failure = platform_failure
+        self.benchmark_failure = benchmark_failure
+        self.cold = cold
+        self.iid_num = iid_num
+        self.speed = speed
+        self.iid_prefix = iid_prefix
+        self.pair_off = pair_off
+        self.pair_cnt = pair_cnt
+        self.pair_v1 = pair_v1
+        self.pair_v2 = pair_v2
+
+    def __len__(self) -> int:
+        return self.n
+
+    def invocation(self, i: int) -> Invocation:
+        return self.plan_invocations[int(self.gidx[i])]
+
+    def event(self, i: int) -> CompletedInvocation:
+        """Materialize event i as the `CompletedInvocation` the scalar
+        engine would have delivered (the per-event compatibility shim)."""
+        inv = self.invocation(i)
+        iid = self.iid_prefix + str(int(self.iid_num[i]))
+        cold = bool(self.cold[i])
+        off, cnt = int(self.pair_off[i]), int(self.pair_cnt[i])
+        name = self.combo_bench[int(self.combo[i])]
+        ci = int(self.call[i])
+        pairs = [DuetPair(benchmark=name,
+                          v1_seconds=float(self.pair_v1[off + r]),
+                          v2_seconds=float(self.pair_v2[off + r]),
+                          instance_id=iid, call_index=ci, cold_start=cold)
+                 for r in range(cnt)]
+        out = InvocationOutcome(
+            pairs=pairs, duration_s=float(self.duration_s[i]),
+            ok=bool(self.ok[i]), timed_out=bool(self.timed_out[i]),
+            platform_failure=bool(self.platform_failure[i]),
+            benchmark_failure=bool(self.benchmark_failure[i]))
+        return CompletedInvocation(
+            inv, out, float(self.t_start[i]), float(self.t_end[i]),
+            int(self.attempt[i]),
+            Instance(iid, float(self.speed[i])), delivered=True)
+
+
 class EngineObserver:
     """Scenario hook: consumes results incrementally and may reshape the
     remaining schedule.  All methods are called from the scheduling loop
     (never concurrently); `on_result` delivers completed invocations in
     completion order, never before their (virtual) completion time."""
 
+    # Opt-in to wave-batched delivery (the vectorized engine).  An
+    # eligible observer promises: (a) `extra_invocations` always returns
+    # (); (b) consuming a wave through `on_wave` leaves it in exactly
+    # the state the equivalent `on_result` sequence would; (c)
+    # `peek_skip` is a side-effect-free preview of `should_skip` whose
+    # True answers are *monotone* (once an invocation would be skipped,
+    # it is skipped at every later decision time).  Non-eligible
+    # observers keep the scalar engine (transparent fallback).
+    wave_eligible = False
+
     def should_skip(self, inv: Invocation) -> bool:
         """Consulted right before dispatch; True drops the invocation
         (it is neither executed nor billed)."""
         return False
 
+    def peek_skip(self, inv: Invocation) -> bool:
+        """Pure preview of `should_skip`: same answer, no side effects.
+        The vectorized engine consults this speculatively while
+        composing a wave and replays `should_skip` only for skips it
+        commits."""
+        return False
+
+    def skip_possible(self) -> bool:
+        """False promises `should_skip` never returns True for the rest
+        of the run — the vectorized engine then skips per-invocation
+        consultation entirely.  Conservative default: True."""
+        return True
+
+    def skip_volatile(self, inv: Invocation) -> bool:
+        """False promises this invocation's current `peek_skip` answer
+        cannot change for the rest of the run (a constant False, or a
+        monotone True): the vectorized engine may then consult it beyond
+        the frozen-observer horizon while composing a wave.  True means
+        the answer can still flip with future deliveries (e.g. a
+        budget-capped job that has not been preempted yet), so the lane
+        must stay behind the horizon.  Conservative default: True."""
+        return True
+
     def on_result(self, done: CompletedInvocation) -> None:
         """Called once per invocation with its final attempt (retried
         platform failures are not delivered individually); failures are
         included."""
+
+    def on_wave(self, wave: CompletedWave) -> None:
+        """Batched delivery (vectorized engine, `wave_eligible` only).
+        Events arrive in the exact scalar delivery order; the default
+        shim replays them through `on_result` one at a time."""
+        for i in range(len(wave)):
+            self.on_result(wave.event(i))
 
     def extra_invocations(self) -> Sequence[Invocation]:
         """Drained once per scheduling step; returned invocations join the
@@ -162,15 +286,36 @@ class FanoutObserver(EngineObserver):
     def __init__(self, observers: Sequence[EngineObserver]):
         self.observers = list(observers)
 
+    @property
+    def wave_eligible(self) -> bool:
+        # a composite is only as batchable as its least batchable child
+        return all(getattr(obs, "wave_eligible", False)
+                   for obs in self.observers)
+
     def should_skip(self, inv: Invocation) -> bool:
         # generator, not a list: short-circuits at the first skipper, so
         # children after it are not consulted (and pay no work) for an
         # invocation that is already dropped
         return any(obs.should_skip(inv) for obs in self.observers)
 
+    def peek_skip(self, inv: Invocation) -> bool:
+        return any(obs.peek_skip(inv) for obs in self.observers)
+
+    def skip_possible(self) -> bool:
+        return any(obs.skip_possible() for obs in self.observers)
+
+    def skip_volatile(self, inv: Invocation) -> bool:
+        # a child that can never skip has constant answers
+        return any(obs.skip_possible() and obs.skip_volatile(inv)
+                   for obs in self.observers)
+
     def on_result(self, done: CompletedInvocation) -> None:
         for obs in self.observers:
             obs.on_result(done)
+
+    def on_wave(self, wave: CompletedWave) -> None:
+        for obs in self.observers:
+            obs.on_wave(wave)
 
     def extra_invocations(self) -> Sequence[Invocation]:
         out: List[Invocation] = []

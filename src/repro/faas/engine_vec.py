@@ -88,7 +88,9 @@ def _merge_into(rest: np.ndarray, pos: np.ndarray,
 def _vector_target(backend):
     """(inner simulated backend, outer backend) when the fast path can run
     `backend`, else (None, backend).  Inactive chaos wrappers are exact
-    identities and are unwrapped; active ones delegate to the scalar loop."""
+    identities and are unwrapped; active ones delegate to the scalar loop.
+    A `_JobRouterBackend` (service fleet) qualifies when every routed
+    backend is a plain simulated one sharing the fleet profile."""
     from repro.faas.backends import SimFaaSBackend, VMBackend
     from repro.faas.chaos import ChaosBackend
     inner = backend
@@ -96,9 +98,45 @@ def _vector_target(backend):
         if inner._active:
             return None, backend
         inner = inner.inner
+    if getattr(inner, "is_router", False):
+        if all(type(b) is not VMBackend and isinstance(b, SimFaaSBackend)
+               and b.profile is inner.profile
+               for b in inner.backends.values()):
+            return inner, backend
+        return None, backend
     if isinstance(inner, (SimFaaSBackend, VMBackend)):
         return inner, backend
     return None, backend
+
+
+# Scalar-fallback log: every time `VectorEngine.run` hands a run to the
+# scalar loop it records why, so callers that *explicitly* asked for the
+# fast path (e.g. `repro.cb.cli --engine fast`) can detect and report a
+# combination that silently degraded.
+_FALLBACKS: List[str] = []
+
+
+def _note_fallback(reason: str) -> None:
+    _FALLBACKS.append(reason)
+
+
+def reset_fallback_log() -> None:
+    del _FALLBACKS[:]
+
+
+def get_fallback_log() -> List[str]:
+    return list(_FALLBACKS)
+
+
+def _pool_importable(pool) -> bool:
+    """True when every pooled instance is one the fast path can re-number
+    (engine-spawned "i<N>" ids)."""
+    for heap in (pool._busy, pool._ready):
+        for ent in heap:
+            iid = ent[2].iid
+            if not (iid.startswith("i") and iid[1:].isdigit()):
+                return False
+    return True
 
 
 class PairSeq(_SequenceABC):
@@ -368,7 +406,7 @@ class _VecRun:
     identically."""
 
     def __init__(self, cfg: EngineConfig, target, outer, plan: SuitePlan,
-                 start_s: float):
+                 start_s: float, *, observer=None, warm_pool=None):
         from repro.faas.backends import VMBackend
         self.cfg = cfg
         self.target = target
@@ -376,6 +414,13 @@ class _VecRun:
         self.plan = plan
         self.start_s = start_s
         self.vm = isinstance(target, VMBackend)
+        self.observer = observer
+        self.warm_pool = warm_pool
+        # multi-job mode: `target` is the service `_JobRouterBackend`;
+        # every per-benchmark table becomes per-(job, benchmark) combo and
+        # RNG draws segment per job (each job backend owns a private
+        # stream, re-seeded by the router's begin_run)
+        self.multi = bool(getattr(target, "is_router", False))
 
     # ------------------------------------------------------------ ingest
     def _ingest(self) -> None:
@@ -392,15 +437,29 @@ class _VecRun:
         # dict.fromkeys dedups in C preserving first-appearance order;
         # map(dict.__getitem__, ...) resolves ids without a Python frame
         # per element — together they replace a per-element genexpr.
-        bid_of: Dict[str, int] = {
-            bn: i for i, bn in enumerate(dict.fromkeys(bseq))}
-        self.bid_all = np.fromiter(map(bid_of.__getitem__, bseq),
-                                   np.int64, N)
+        if self.multi:
+            # one id per (job, benchmark) combo: jobs route to distinct
+            # backends, so the same benchmark name can carry different
+            # timing tables (memory maps, start offsets) per job
+            jseq = list(map(attrgetter("job_id"), invs))
+            kseq = list(zip(jseq, bseq))
+            cid_of: Dict[tuple, int] = {
+                kk: i for i, kk in enumerate(dict.fromkeys(kseq))}
+            self.bid_all = np.fromiter(map(cid_of.__getitem__, kseq),
+                                       np.int64, N)
+            combos = list(cid_of)
+            names = [kk[1] for kk in combos]
+        else:
+            bid_of: Dict[str, int] = {
+                bn: i for i, bn in enumerate(dict.fromkeys(bseq))}
+            self.bid_all = np.fromiter(map(bid_of.__getitem__, bseq),
+                                       np.int64, N)
+            combos = None
+            names = list(bid_of)
         pat_of: Dict[tuple, int] = {
             v: i for i, v in enumerate(dict.fromkeys(vseq))}
         self.pid_all = np.fromiter(map(pat_of.__getitem__, vseq),
                                    np.int64, N)
-        names = list(bid_of)
         pats = list(pat_of)
         self.names = names
         self.call_all = np.fromiter(cseq, np.int64, N)
@@ -420,11 +479,51 @@ class _VecRun:
         # Per-benchmark tables, computed with the *same Python-float
         # expressions* the scalar backend evaluates per call.
         B = len(names)
-        wls = [target.workloads[n] for n in names]
+        if self.multi:
+            self.jobs = sorted(target.backends)   # begin_run seeding order
+            jidx_of = {j: i for i, j in enumerate(self.jobs)}
+            self.bes = [target.backends[j] for j in self.jobs]
+            self.cjob = [kk[0] for kk in combos]
+            self.combo_jidx = np.fromiter(
+                (jidx_of[kk[0]] for kk in combos), np.int64, B)
+            bes_c = [target.backends[kk[0]] for kk in combos]
+            wls = [be.workloads[kk[1]]
+                   for be, kk in zip(bes_c, combos)]
+        else:
+            self.cjob = [""] * B
+            wls = [target.workloads[n] for n in names]
         self.bunst = np.array([w.unstable_pct > 0 for w in wls]) \
             if B else np.zeros(0, bool)
         self.any_unst = bool(self.bunst.any())
-        if self.vm:
+        if self.multi:
+            p = target.profile
+            self.bv1 = np.array([w.true_seconds("v1") for w in wls])
+            self.bv2 = np.array([w.true_seconds("v2") for w in wls])
+            self.bsig = np.array([w.run_sigma for w in wls])
+            self.bfs = np.array([w.fs_write for w in wls]) \
+                if B else np.zeros(0, bool)
+            self.bov = np.array([p.cold_start_base_s
+                                 + p.cold_start_per_gb_s * be.image_gb
+                                 + w.setup_seconds
+                                 for be, w in zip(bes_c, wls)])
+            self.bcpu = np.array([be.cpu_factor if be.memory_map is None
+                                  else p.cpu_share(be.memory_for(kk[1]))
+                                  for be, kk in zip(bes_c, combos)])
+            self.bmem_list = [be.memory_for(kk[1])
+                              for be, kk in zip(bes_c, combos)]
+            self.any_memmap = any(be.memory_map is not None
+                                  for be in self.bes)
+            self.bmem = self.bmem_list if self.any_memmap else None
+            self.bdstart = np.array([be.start for be in bes_c])
+            self.amp = p.diurnal_amplitude
+            self.period = p.diurnal_period_s
+            self.diur_start = 0.0          # per-lane bdstart applies instead
+            self.bt = p.benchmark_timeout_s
+            self.ft = p.function_timeout_s
+            self.sig_inst = p.instance_sigma
+            self.rate = p.failure_rate
+            self.seq = self.rate > 0.0
+        elif self.vm:
             c = target.cfg
             self.bv1 = np.array([w.true_seconds("v1", env="vm")
                                  for w in wls])
@@ -475,8 +574,13 @@ class _VecRun:
     def execute(self) -> EngineReport:
         cfg = self.cfg
         self.outer.begin_run(cfg.parallelism)
-        self.rng = self.target._rng
         self._ingest()
+        if self.multi:
+            # grab the job streams *after* begin_run re-seeded them
+            self.rngs = [be._rng for be in self.bes]
+            self.ninst_j = np.zeros(len(self.bes), np.int64)
+        else:
+            self.rng = self.target._rng
         # observability at wave granularity: one span + one bulk metrics
         # flush per wave keeps the vectorized path fast, and everything
         # emitted is read from already-committed arrays (no RNG, no
@@ -502,7 +606,19 @@ class _VecRun:
         else:
             self.pool = _VecPool()
             self.ka = self.target.keep_alive_s
+            if self.warm_pool is not None:
+                self._import_pool(self.warm_pool)
         self.ninst = 0
+        self.skipped = 0
+        if self.observer is not None:
+            # completed events buffered until the virtual clock reaches
+            # them (scalar deliver_due), flushed in (t_end, seq) order
+            self.skipmode = bool(self.observer.skip_possible())
+            self.evq: List[dict] = []
+            self.evn = 0
+            self.ev_min = math.inf
+        else:
+            self.skipmode = False
         self.wall = 0.0
         self.cold_starts = self.timeouts = self.failures = 0
         self.done_n = self.failed_n = self.retries_n = self.hedged = 0
@@ -525,22 +641,166 @@ class _VecRun:
         self.wcap = min(P, 4096)
         while self.cursor < self.N or self.retryq:
             self._wave()
-        return self._report()
+        if self.observer is not None:
+            self._flush_events(math.inf)   # scalar end-of-run drain
+        rep = self._report()
+        if self.warm_pool is not None and not self.vm:
+            self._export_pool(self.warm_pool)
+        return rep
+
+    # ---------------------------------------------------- shared warm pool
+    def _import_pool(self, wp) -> None:
+        """Mirror a shared `WarmPool` into the SoA pool.  Scalar pick
+        order is "idle, unexpired entry with the smallest seq"; loading
+        rows in seq order makes row order reproduce it exactly (ready
+        entries re-enter as busy rows, which is equivalent under the
+        pool's non-decreasing-clock contract)."""
+        ent = [(seq, t, inst) for (t, seq, inst) in wp._busy]
+        ent += [(seq, t, inst) for (seq, t, inst) in wp._ready]
+        if not ent:
+            return
+        ent.sort(key=lambda e: e[0])
+        self.pool.push_batch(
+            np.array([e[1] for e in ent]),
+            np.array([e[2].speed for e in ent]),
+            np.array([int(e[2].iid[1:]) for e in ent], np.int64))
+
+    def _export_pool(self, wp) -> None:
+        """Write surviving instances back, renumbering seq in row order
+        (pick order is preserved, so future acquires behave identically)."""
+        rows = np.flatnonzero(self.pool._alive[:self.pool._n])
+        t = self.pool._t[rows]
+        spd = self.pool._speed[rows]
+        iid = self.pool._iid[rows]
+        busy = [(float(t[x]), x, Instance("i%d" % int(iid[x]),
+                                          float(spd[x])))
+                for x in range(rows.shape[0])]
+        heapq.heapify(busy)
+        wp._busy = busy
+        wp._ready = []
+        wp._seq = len(busy)
+
+    # --------------------------------------------------- observer delivery
+    _EV_FIELDS = ("gidx", "b", "call", "ts", "te", "dur", "att", "ok",
+                  "to", "pf", "bf", "cold", "iid", "spd", "cnt")
+
+    def _buffer_events(self, ns, kacc: int, cnt, v1w, v2w) -> None:
+        te = ns.push[:kacc]
+        chunk = {"gidx": ns.gidx[:kacc], "b": np.asarray(ns.b[:kacc]),
+                 "call": np.asarray(ns.call[:kacc]), "ts": ns.pops[:kacc],
+                 "te": te, "dur": ns.dur[:kacc], "att": ns.att[:kacc],
+                 "ok": ns.okv[:kacc], "to": ns.timedv[:kacc],
+                 "pf": ns.platform[:kacc], "bf": ns.benchfail[:kacc],
+                 "cold": ns.cold[:kacc], "iid": ns.iidnum[:kacc],
+                 "spd": ns.speedw[:kacc], "cnt": cnt,
+                 "pv1": v1w, "pv2": v2w}
+        self.evq.append(chunk)
+        self.evn += kacc
+        m = float(te.min())
+        if m < self.ev_min:
+            self.ev_min = m
+
+    @staticmethod
+    def _gather_pairs(pv1, pv2, off, cnt):
+        tot = int(cnt.sum())
+        if not tot:
+            z = np.zeros(0)
+            return z, z
+        base = np.cumsum(cnt) - cnt
+        pos = np.repeat(off - base, cnt) + np.arange(tot)
+        return pv1[pos], pv2[pos]
+
+    def _flush_events(self, cutoff: float) -> None:
+        """Deliver every buffered completion with t_end <= cutoff as one
+        `CompletedWave`, ordered by (t_end, buffer seq) — exactly the
+        scalar completion heap's drain order.  Cross-flush order is
+        globally consistent: later-buffered events always complete
+        strictly after every already-flushed cutoff."""
+        if not self.evn or self.ev_min > cutoff:
+            return
+        from repro.faas.engine import CompletedWave
+        q = self.evq
+        if len(q) > 1:
+            cat = {f: np.concatenate([c[f] for c in q])
+                   for f in self._EV_FIELDS}
+            pv1 = np.concatenate([c["pv1"] for c in q])
+            pv2 = np.concatenate([c["pv2"] for c in q])
+        else:
+            cat = q[0]
+            pv1, pv2 = cat["pv1"], cat["pv2"]
+        te = cat["te"]
+        due = te <= cutoff
+        di = np.flatnonzero(due)
+        order = di[np.argsort(te[di], kind="stable")]
+        cnt = cat["cnt"]
+        off = np.cumsum(cnt) - cnt
+        scnt = cnt[order]
+        w1, w2 = self._gather_pairs(pv1, pv2, off[order], scnt)
+        wave = CompletedWave(
+            n=int(order.shape[0]), plan_invocations=self.plan.invocations,
+            gidx=cat["gidx"][order], combo=cat["b"][order],
+            combo_bench=self.names, combo_job=self.cjob,
+            call=cat["call"][order], t_start=cat["ts"][order],
+            t_end=te[order], duration_s=cat["dur"][order],
+            attempt=cat["att"][order], ok=cat["ok"][order],
+            timed_out=cat["to"][order],
+            platform_failure=cat["pf"][order],
+            benchmark_failure=cat["bf"][order], cold=cat["cold"][order],
+            iid_num=cat["iid"][order], speed=cat["spd"][order],
+            iid_prefix="vm" if self.vm else "i",
+            pair_off=np.cumsum(scnt) - scnt, pair_cnt=scnt,
+            pair_v1=w1, pair_v2=w2)
+        keep = np.flatnonzero(~due)
+        if keep.shape[0]:
+            rv1, rv2 = self._gather_pairs(pv1, pv2, off[keep], cnt[keep])
+            rem = {f: cat[f][keep] for f in self._EV_FIELDS}
+            rem["pv1"], rem["pv2"] = rv1, rv2
+            self.evq = [rem]
+            self.evn = int(keep.shape[0])
+            self.ev_min = float(rem["te"].min())
+        else:
+            self.evq = []
+            self.evn = 0
+            self.ev_min = math.inf
+        self.observer.on_wave(wave)
 
     # -------------------------------------------------------------- wave
     def _wave(self) -> None:
         ns = self._compose()
+        if ns.W == 0:
+            # the whole scanned front was cancelled work: no dispatches,
+            # just committed skips
+            self._commit_skips(ns, ns.scan_end)
+            self.cursor += ns.scan_end
+            return
         self._fixpoint(ns)
         k = self._validity(ns)
         if self.walk:
             self._walk(ns, k)
             return
         k, retried = self._retry_truncate(ns, k)
-        self._commit_state(ns, k)
+        self._commit_state(ns, k, retried)
         self._tally_fast(ns, k, retried)
-        self.wcap = min(self.cfg.parallelism, max(32, int(k * 1.5) + 8))
+        # track the commit rate closely: every composed-but-uncommitted
+        # lane is drawn, staged, rewound, and re-drawn next wave, so at
+        # low commit rates (dense completion/pop interleaving, e.g. the
+        # multi-tenant fleet in steady state) a high floor multiplies
+        # the speculative waste
+        self.wcap = min(self.cfg.parallelism, max(8, int(k * 1.5) + 4))
 
     def _compose(self):
+        if self.observer is not None and self.skipmode:
+            # scalar deliver_due before the wave's first dispatch: flush
+            # everything completed by the earliest slot's free time, so
+            # the observer's state is current for the skip previews.
+            # Without live skips, delivery never feeds back into
+            # scheduling, so flushes defer to one end-of-run wave
+            # (later-buffered events always complete after every earlier
+            # cutoff, so the concatenated order is unchanged).
+            cutoff = float(self.slot_t.min()) if (self.vm or self.walk) \
+                else float(self.slot_t[0])
+            self._flush_events(cutoff)
+            return self._compose_skip()
         nr = len(self.retryq)
         W = min(self.wcap, nr + (self.N - self.cursor))
         if nr:
@@ -563,10 +823,83 @@ class _VecRun:
             b = self.bid_all[c:c + W]               # contiguous: view
             pidw = self.pid_all[c:c + W]
             call = self.call_all[c:c + W]
+        return self._build_ns(W, nr, gidx, att, b, pidw, call, None, 0, ())
+
+    def _compose_skip(self):
+        """Wave composition with live skip decisions (budget preemption).
+
+        `peek_skip` is consulted speculatively while scanning the queue
+        front; real `should_skip` replays at commit for exactly the
+        skips the committed prefix consumed.  A lane whose preview can
+        still flip with future deliveries (`skip_volatile`) is only
+        composed while no buffered completion is due at its scalar
+        check time st[j] — the observer's state is then frozen up to
+        that horizon, so the preview equals the scalar decision.
+        Non-volatile lanes compose past the horizon: a constant-False
+        answer cannot change, and a True answer is monotone by the
+        wave-eligibility contract.  Trailing cancelled entries past the
+        last lane are safe to consume for the same reason."""
+        obs = self.observer
+        invs = self.plan.invocations
+        st = self.slot_t                  # sorted (elastic, non-walk)
+        P = st.shape[0]
+        bmin = self.ev_min                # inf when the buffer is empty
+        nr = len(self.retryq)
+        cap = min(self.wcap, nr + (self.N - self.cursor))
+        gl: List[int] = []
+        al: List[int] = []
+        qp: List[int] = []
+        skips: List[int] = []
+        j = 0
+        i = 0
+        while i < nr and j < cap and bmin > st[j]:
+            gl.append(self.retryq[i][0])
+            al.append(self.retryq[i][1])
+            qp.append(-1)
+            i += 1
+            j += 1
+        pos = 0
+        scan_end = 0
+        c = self.cursor
+        if i == nr:
+            nq = self.N - c
+            while pos < nq and j < cap:
+                inv = invs[c + pos]
+                if obs.peek_skip(inv):
+                    skips.append(pos)
+                    pos += 1
+                    continue
+                if bmin <= st[j] and obs.skip_volatile(inv):
+                    break
+                gl.append(c + pos)
+                al.append(0)
+                qp.append(pos)
+                pos += 1
+                j += 1
+            while pos < nq and j < P and bmin > st[j] \
+                    and obs.peek_skip(invs[c + pos]):
+                skips.append(pos)
+                pos += 1
+            scan_end = pos
+        W = j
+        if W == 0:
+            return SimpleNamespace(W=0, nr=0, scan_end=scan_end,
+                                   skip_offsets=skips, lane_qpos=None)
+        gidx = np.fromiter(gl, np.int64, W)
+        att = np.fromiter(al, np.int64, W)
+        return self._build_ns(W, i, gidx, att, self.bid_all[gidx],
+                              self.pid_all[gidx], self.call_all[gidx],
+                              np.fromiter(qp, np.int64, W), scan_end,
+                              skips)
+
+    def _build_ns(self, W, nr, gidx, att, b, pidw, call,
+                  lane_qpos, scan_end, skip_offsets):
         ns = SimpleNamespace(
             W=W, nr=nr, gidx=gidx, att=att, b=b, pidw=pidw,
             call=call, Rw=self.PAT_R[pidw],
-            n2w=self.PAT_N2[pidw])
+            n2w=self.PAT_N2[pidw], lane_qpos=lane_qpos,
+            scan_end=scan_end, skip_offsets=skip_offsets,
+            jw=self.combo_jidx[b] if self.multi else None)
         speedw = np.zeros(W)
         if self.vm:
             order = np.lexsort((np.arange(self.slot_t.shape[0]),
@@ -596,6 +929,26 @@ class _VecRun:
             if warm.all():
                 ns.iidnum = self.pool._iid[pick]
                 ns.cold_before = np.zeros(W, np.int64)
+            elif self.multi:
+                # per-job cold ranks: each backend numbers its own
+                # instances, so a lane's id is its job's running count
+                # plus its cold rank among this wave's same-job lanes
+                jw = ns.jw
+                cold64 = ns.cold.astype(np.int64)
+                order = np.argsort(jw, kind="stable")
+                cg = cold64[order]
+                cs = np.cumsum(cg)
+                jo = jw[order]
+                seg_off = np.zeros(W, np.int64)
+                if W > 1:
+                    seg_off[1:] = np.maximum.accumulate(
+                        np.where(jo[1:] != jo[:-1], cs[:-1], 0))
+                cb = np.empty(W, np.int64)
+                cb[order] = cs - seg_off - cg
+                ns.iidnum = np.where(
+                    ns.cold, self.ninst_j[jw] + cb + 1,
+                    self.pool._iid[pick]).astype(np.int64)
+                ns.cold_before = cb
             else:
                 cold_cum = np.cumsum(ns.cold)
                 ns.iidnum = np.where(ns.cold, self.ninst + cold_cum,
@@ -618,13 +971,12 @@ class _VecRun:
         npred = np.where(pw < 0, ns.n2w, np.minimum(pw, ns.n2w))
         norm = ~ns.unst & ~ns.fsl
         npred = np.where(norm, npred, 0)
-        state0 = self.rng.bit_generator.state
-        ns.state0 = state0
+        self._save_states(ns)
         iters = 0
         while True:
             iters += 1
             if iters > 1:                 # already positioned on entry
-                self.rng.bit_generator.state = state0
+                self._restore_states(ns)
             if self.seq:
                 failp, unst_outs = self._draws_seq(ns, npred)
             else:
@@ -647,6 +999,21 @@ class _VecRun:
         if ln.shape[0]:
             self.predtab[ns.b[ln]] = np.where(
                 ns.used[ln] == ns.n2w[ln], -1, ns.used[ln])
+
+    def _save_states(self, ns) -> None:
+        if self.multi:
+            # only the jobs present in this wave consume draws
+            ns.states0 = [(int(j), self.rngs[j].bit_generator.state)
+                          for j in np.unique(ns.jw).tolist()]
+        else:
+            ns.state0 = self.rng.bit_generator.state
+
+    def _restore_states(self, ns) -> None:
+        if self.multi:
+            for j, stt in ns.states0:
+                self.rngs[j].bit_generator.state = stt
+        else:
+            self.rng.bit_generator.state = ns.state0
 
     def _validity(self, ns) -> int:
         """Longest prefix in which no dispatch completes at or before a
@@ -686,8 +1053,16 @@ class _VecRun:
         if self.vm:
             inst = Instance("vm%d" % int(ns.iidnum[u]), float(ns.speedw[u]))
             return target.simulate(inv, inst, t, 0.0), inst.speed
+        if self.multi:
+            # bypass the router: draws must come from the lane's own job
+            # stream, and the counter pin must hit that job's backend
+            target = self.bes[int(ns.jw[u])]
         if ns.cold[u]:
-            target._inst_counter = self.ninst + int(ns.cold_before[u])
+            if self.multi:
+                target._inst_counter = (int(self.ninst_j[int(ns.jw[u])])
+                                        + int(ns.cold_before[u]))
+            else:
+                target._inst_counter = self.ninst + int(ns.cold_before[u])
             inst, ov = target.spawn_instance(inv, t, 0)
             return target.simulate(inv, inst, t, ov), inst.speed
         inst = Instance("i%d" % int(ns.iidnum[u]), float(ns.speedw[u]))
@@ -698,6 +1073,8 @@ class _VecRun:
         cold?1:0 + npred lognormals — one array-sigma lognormal fill per
         segment between unstable lanes is value- and stream-identical to
         the scalar per-call sequence."""
+        if self.multi:
+            return self._draws_fast_multi(ns, npred)
         rng = self.rng
         W = ns.W
         cold = ns.cold
@@ -749,11 +1126,82 @@ class _VecRun:
             Nmat[rows, cols] = vals[nmask]
         return np.zeros(W, bool), unst_outs
 
+    @staticmethod
+    def _fill_run(rng, lanes, cnt, start_of, sig_flat, vals):
+        """One array-sigma lognormal fill for a run of same-job lanes:
+        gather the lanes' draw slices in lane order, draw once, scatter.
+        Single-lane runs (the common case on a many-tenant fleet, where
+        waves interleave jobs almost perfectly) take a contiguous-slice
+        shortcut — each lane's draws are adjacent in the wave layout."""
+        if lanes.shape[0] == 1:
+            u = int(lanes[0])
+            lo = int(start_of[u])
+            hi = lo + int(cnt[u])
+            if hi > lo:
+                vals[lo:hi] = rng.lognormal(0.0, sig_flat[lo:hi])
+            return
+        c = cnt[lanes]
+        tot = int(c.sum())
+        if not tot:
+            return
+        base = np.cumsum(c) - c
+        pos = np.repeat(start_of[lanes] - base, c) + np.arange(tot)
+        vals[pos] = rng.lognormal(0.0, sig_flat[pos])
+
+    def _draws_fast_multi(self, ns, npred):
+        """Fast draws across routed jobs: each job backend owns a private
+        stream, so the scalar's per-dispatch interleaving across jobs is
+        irrelevant — grouping each job's lanes (in lane order, which is
+        that stream's consumption order) replays every stream exactly.
+        Unstable lanes split their job's fill just like the single-job
+        path splits the global one."""
+        W = ns.W
+        cold = ns.cold
+        Nmat = np.zeros((W, ns.n2maxw))
+        ns.Nmat = Nmat
+        cnt = np.where(ns.unst, 0, cold.astype(np.int64) + npred)
+        off = np.zeros(W + 1, np.int64)
+        np.cumsum(cnt, out=off[1:])
+        total = int(off[W])
+        start_of = off[:W]
+        vals = np.empty(total)
+        d_of = np.repeat(np.arange(W), cnt)
+        posa = np.arange(total)
+        iscold = (posa == start_of[d_of]) & cold[d_of]
+        sig_flat = np.where(iscold, self.sig_inst, ns.sigl[d_of])
+        unst_outs: List[Tuple[int, InvocationOutcome]] = []
+        jw = ns.jw
+        order = np.argsort(jw, kind="stable")
+        jo = jw[order]
+        edges = [0] + (np.flatnonzero(np.diff(jo)) + 1).tolist() + [W]
+        for s, e in zip(edges[:-1], edges[1:]):
+            grp = order[s:e]
+            rng = self.rngs[int(jw[grp[0]])]
+            a = 0
+            for gi, u in enumerate(grp.tolist()):
+                if not ns.unst[u]:
+                    continue
+                self._fill_run(rng, grp[a:gi], cnt, start_of, sig_flat,
+                               vals)
+                out, spd = self._sim_direct(ns, u)
+                ns.speedw[u] = spd
+                unst_outs.append((u, out))
+                a = gi + 1
+            self._fill_run(rng, grp[a:], cnt, start_of, sig_flat, vals)
+        if total:
+            cm = cold & ~ns.unst
+            if cm.any():
+                ns.speedw[cm] = vals[start_of[cm]]
+            nmask = ~iscold
+            rows = d_of[nmask]
+            cols = posa[nmask] - (start_of + cold)[rows]
+            Nmat[rows, cols] = vals[nmask]
+        return np.zeros(W, bool), unst_outs
+
     def _draws_seq(self, ns, npred):
         """failure_rate > 0: every dispatch draws a uniform between its
         cold lognormal and its noise vector, so the stream is walked
         per-dispatch (values land in arrays; the stage math stays batched)."""
-        rng = self.rng
         W = ns.W
         Nmat = np.zeros((W, ns.n2maxw))
         ns.Nmat = Nmat
@@ -761,14 +1209,24 @@ class _VecRun:
         unst_outs: List[Tuple[int, InvocationOutcome]] = []
         rate = self.rate
         sig_i = self.sig_inst
-        lognormal = rng.lognormal
-        random = rng.random
+        multi = self.multi
+        if multi:
+            jwl = ns.jw.tolist()
+            rngs = self.rngs
+        else:
+            rng = self.rng
+            lognormal = rng.lognormal
+            random = rng.random
         coldl = ns.cold.tolist()
         unstl = ns.unst.tolist()
         fsll = ns.fsl.tolist()
         sigll = ns.sigl.tolist()
         npl = npred.tolist()
         for j in range(W):
+            if multi:
+                r = rngs[jwl[j]]
+                lognormal = r.lognormal
+                random = r.random
             if unstl[j]:
                 out, spd = self._sim_direct(ns, j)
                 ns.speedw[j] = spd
@@ -809,7 +1267,11 @@ class _VecRun:
         speedw = ns.speedw
         if not vm:
             cpul = self.bcpu[b]
-        amp, period, dstart = self.amp, self.period, self.diur_start
+        amp, period = self.amp, self.period
+        # per-lane diurnal start in multi mode (each job backend carries
+        # its own submission-time offset); elementwise add is the same
+        # binary op the scalar `start + t` performs per call
+        dstart = self.bdstart[b] if self.multi else self.diur_start
         pops, Nmat, n2w = ns.pops, ns.Nmat, ns.n2w
         n2maxw = ns.n2maxw
         isv2w = self.ISV2[ns.pidw, :n2maxw] if n2maxw else None
@@ -917,16 +1379,41 @@ class _VecRun:
 
     # ------------------------------------------------------------- commit
     def _rewind_prefix(self, ns, k: int) -> None:
-        """Reposition the RNG to exactly the committed prefix's
+        """Reposition the RNG(s) to exactly the committed prefix's
         consumption (the wave drew for all W lanes)."""
-        rng = self.rng
-        rng.bit_generator.state = ns.state0
+        self._restore_states(ns)
         used = ns.used_final
         unst = ns.unst
         cold = ns.cold
         if not self.seq:
             cnt = np.where(unst[:k], 0,
                            cold[:k].astype(np.int64) + used[:k])
+            if self.multi:
+                # advance each wave job's stream by its committed lanes'
+                # consumption, in lane order (one ziggurat normal per
+                # lognormal, so standard_normal(seg) lands exactly)
+                jw = ns.jw[:k]
+                order = np.argsort(jw, kind="stable")
+                jo = jw[order]
+                edges = [0] + (np.flatnonzero(np.diff(jo)) + 1).tolist() \
+                    + [k]
+                for s, e in zip(edges[:-1], edges[1:]):
+                    grp = order[s:e]
+                    rng = self.rngs[int(jw[grp[0]])]
+                    a = 0
+                    for gi, u in enumerate(grp.tolist()):
+                        if not unst[u]:
+                            continue
+                        seg = int(cnt[grp[a:gi]].sum())
+                        if seg:
+                            rng.standard_normal(seg)
+                        self._sim_direct(ns, u)
+                        a = gi + 1
+                    seg = int(cnt[grp[a:]].sum())
+                    if seg:
+                        rng.standard_normal(seg)
+                return
+            rng = self.rng
             a = 0
             for u in np.flatnonzero(unst[:k]).tolist():
                 seg = int(cnt[a:u].sum())
@@ -938,9 +1425,18 @@ class _VecRun:
             if seg:
                 rng.standard_normal(seg)
             return
-        lognormal = rng.lognormal
-        random = rng.random
+        if self.multi:
+            jwl = ns.jw.tolist()
+            rngs = self.rngs
+        else:
+            rng = self.rng
+            lognormal = rng.lognormal
+            random = rng.random
         for j in range(k):
+            if self.multi:
+                r = rngs[jwl[j]]
+                lognormal = r.lognormal
+                random = r.random
             if unst[j]:
                 self._sim_direct(ns, j)
                 continue
@@ -953,9 +1449,24 @@ class _VecRun:
             if n:
                 lognormal(0.0, float(ns.sigl[j]), size=n)
 
-    def _commit_state(self, ns, k: int) -> None:
-        """Commit slots / pool / instance counter / queue for the first k
-        dispatches and rewind the RNG if the wave was truncated."""
+    def _commit_skips(self, ns, consumed: int) -> None:
+        """Replay the real (side-effecting) `should_skip` for exactly the
+        cancelled queue entries the committed prefix consumed, in scan
+        order.  Safe because True answers are monotone: a peek that said
+        True during compose still says True at the scalar's check time."""
+        obs = self.observer
+        invs = self.plan.invocations
+        n = 0
+        for p in ns.skip_offsets:
+            if p >= consumed:
+                break
+            obs.should_skip(invs[self.cursor + p])
+            n += 1
+        self.skipped += n
+
+    def _commit_state(self, ns, k: int, retried: bool = False) -> None:
+        """Commit slots / pool / instance counters / queue for the first
+        k dispatches and rewind the RNG(s) if the wave was truncated."""
         if k < ns.W:
             self._rewind_prefix(ns, k)
         push = ns.push
@@ -974,12 +1485,33 @@ class _VecRun:
                                           np.searchsorted(rest, rel), rel)
             ncold = int(np.count_nonzero(ns.cold[:k]))
             self.cold_starts += ncold
-            self.ninst += ncold
-            self.target._inst_counter = self.ninst
+            if self.multi:
+                ck = ns.cold[:k]
+                np.add.at(self.ninst_j, ns.jw[:k][ck], 1)
+            else:
+                self.ninst += ncold
+                self.target._inst_counter = self.ninst
         nr_used = min(ns.nr, k)
         for _ in range(nr_used):
             self.retryq.popleft()
-        self.cursor += k - nr_used
+        qp = ns.lane_qpos
+        if qp is None:
+            self.cursor += k - nr_used
+            return
+        # skip-mode commit: figure out how far the scalar queue scan
+        # advanced — through the last committed lane's entry (plus any
+        # cancelled entries before it), or the whole scanned front when
+        # every composed lane committed
+        if retried:
+            last = int(qp[k - 1])
+            consumed = last + 1 if last >= 0 else 0
+        elif k == ns.W:
+            consumed = ns.scan_end
+        else:
+            nxt = int(qp[k])
+            consumed = nxt if nxt >= 0 else 0
+        self._commit_skips(ns, consumed)
+        self.cursor += consumed
 
     def _obs_wave(self, ns, k: int, extra=None) -> None:
         """Wave-granularity emission over the committed prefix [0, k)."""
@@ -1015,7 +1547,7 @@ class _VecRun:
             kacc = k - 1
         self.wall = max(self.wall, float(ns.push[:k].max()))
         self.billed_chunks.append(ns.dur[:k].copy())
-        if self.bmem is not None:
+        if self.bmem is not None or self.multi:
             self.membid_chunks.append(ns.b[:k].copy())
         if not kacc:
             return
@@ -1027,34 +1559,46 @@ class _VecRun:
         self.failures += int(np.count_nonzero(ns.platform[:kacc]))
         self.failures += int(np.count_nonzero(ns.benchfail[:kacc]))
         bk = ns.b[:kacc]
+        cnt = None
         if nok == kacc:                   # every dispatch succeeded
             self.exec_mask[bk] = True
             Rw = ns.Rw[:kacc]
             if bool((Rw == Rw[0]).all()):
                 R0 = int(Rw[0])
-                self.pv1c.append(ns.V1S[:kacc, :R0].ravel())
-                self.pv2c.append(ns.V2S[:kacc, :R0].ravel())
+                v1w = ns.V1S[:kacc, :R0].ravel()
+                v2w = ns.V2S[:kacc, :R0].ravel()
+                cnt = np.full(kacc, R0, np.int64)
+                self.pv1c.append(v1w)
+                self.pv2c.append(v2w)
                 self.pbidc.append(np.repeat(bk, R0))
                 self.pcallc.append(np.repeat(ns.call[:kacc], R0))
                 self.piidc.append(np.repeat(ns.iidnum[:kacc], R0))
                 self.pcoldc.append(np.repeat(ns.cold[:kacc], R0))
-                return
         else:
             self.exec_mask[bk[o]] = True
             self.fail_mask[bk[(~o) & ~ns.platform[:kacc]]] = True
-        oi = np.flatnonzero(o)
-        if oi.shape[0]:
-            reps = ns.Rw[oi]
-            tot = int(reps.sum())
-            rows = np.repeat(oi, reps)
-            base = np.cumsum(reps) - reps
-            cols = np.arange(tot) - np.repeat(base, reps)
-            self.pv1c.append(ns.V1S[rows, cols])
-            self.pv2c.append(ns.V2S[rows, cols])
-            self.pbidc.append(np.repeat(bk[oi], reps))
-            self.pcallc.append(np.repeat(ns.call[:kacc][oi], reps))
-            self.piidc.append(np.repeat(ns.iidnum[:kacc][oi], reps))
-            self.pcoldc.append(np.repeat(ns.cold[:kacc][oi], reps))
+        if cnt is None:
+            oi = np.flatnonzero(o)
+            cnt = np.zeros(kacc, np.int64)
+            if oi.shape[0]:
+                reps = ns.Rw[oi]
+                cnt[oi] = reps
+                tot = int(reps.sum())
+                rows = np.repeat(oi, reps)
+                base = np.cumsum(reps) - reps
+                cols = np.arange(tot) - np.repeat(base, reps)
+                v1w = ns.V1S[rows, cols]
+                v2w = ns.V2S[rows, cols]
+                self.pv1c.append(v1w)
+                self.pv2c.append(v2w)
+                self.pbidc.append(np.repeat(bk[oi], reps))
+                self.pcallc.append(np.repeat(ns.call[:kacc][oi], reps))
+                self.piidc.append(np.repeat(ns.iidnum[:kacc][oi], reps))
+                self.pcoldc.append(np.repeat(ns.cold[:kacc][oi], reps))
+            else:
+                v1w = v2w = np.zeros(0)
+        if self.observer is not None:
+            self._buffer_events(ns, kacc, cnt, v1w, v2w)
 
     # ---------------------------------------------------------- walk mode
     def _walk(self, ns, kv: int) -> None:
@@ -1253,6 +1797,26 @@ class _VecRun:
         wall = self.wall
         if self.vm:
             cost = self.outer.finalize(billed_list, wall)
+        elif self.multi:
+            # the router's finalize groups billing per job (sorted jid
+            # order) and prices through each job's backend — rebuild its
+            # job tags and per-invocation memory logs aligned with our
+            # billing order, then delegate for bit-identical cost math
+            memb = (np.concatenate(self.membid_chunks)
+                    if self.membid_chunks else np.zeros(0, np.int64))
+            jarr = self.combo_jidx[memb]
+            jl = jarr.tolist()
+            self.target._sim_jobs = [self.jobs[x] for x in jl]
+            if self.any_memmap:
+                bm = self.bmem_list
+                ml = memb.tolist()
+                for jx, be in enumerate(self.bes):
+                    if be.memory_map is not None:
+                        be._sim_mem = [bm[mi] for mi, jj in zip(ml, jl)
+                                       if jj == jx]
+            for jx, be in enumerate(self.bes):
+                be._inst_counter = int(self.ninst_j[jx])
+            cost = self.outer.finalize(billed_list, wall)
         elif self.bmem is not None:
             # finalize()'s per-invocation pricing zips billed with the
             # backend's memory log; rebuild it aligned with our billing
@@ -1312,7 +1876,8 @@ class _VecRun:
             failed_benchmarks=sorted(fl),
             invocations_done=self.done_n,
             invocations_failed=self.failed_n,
-            retries=self.retries_n, hedged=self.hedged)
+            retries=self.retries_n, hedged=self.hedged,
+            skipped=self.skipped)
 
 
 class VectorEngine:
@@ -1330,14 +1895,37 @@ class VectorEngine:
 
     def run(self, plan: SuitePlan, observer=None, *,
             warm_pool=None, start_s: float = 0.0) -> EngineReport:
+        from repro.faas.backends import VMBackend
         target, _outer = _vector_target(self.backend)
-        if (observer is not None or warm_pool is not None
-                or target is None
-                or getattr(self.backend, "realtime", False)):
+        walk = self.cfg.hedge_after_factor > 0
+        vm = isinstance(target, VMBackend)
+        reason = None
+        if target is None:
+            reason = "backend is not vectorizable (active chaos " \
+                     "or a custom backend)"
+        elif getattr(self.backend, "realtime", False):
+            reason = "realtime backend"
+        elif walk and getattr(target, "is_router", False):
+            reason = "hedging on a routed fleet"
+        elif observer is not None:
+            if not getattr(observer, "wave_eligible", False):
+                reason = "observer is not wave-eligible"
+            elif walk:
+                reason = "hedging with an observer"
+            elif vm and observer.skip_possible():
+                reason = "skip-capable observer on a pinned fleet"
+        if reason is None and warm_pool is not None:
+            if vm:
+                reason = "warm pool on a pinned fleet"
+            elif not _pool_importable(warm_pool):
+                reason = "warm pool holds foreign instances"
+        if reason is not None:
+            _note_fallback(reason)
             return self._scalar.run(plan, observer, warm_pool=warm_pool,
                                     start_s=start_s)
-        return _VecRun(self.cfg, target, self.backend, plan,
-                       start_s).execute()
+        return _VecRun(self.cfg, target, self.backend, plan, start_s,
+                       observer=observer,
+                       warm_pool=warm_pool).execute()
 
 
 _DEFAULT_ENGINE = "fast"

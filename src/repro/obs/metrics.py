@@ -59,7 +59,13 @@ class QuantileSketch:
         if not v.size:
             return
         self.count += int(v.size)
-        self.total += float(v.sum())
+        # cumulative sum seeded by the running total replays the exact
+        # sequential float accumulation (np.sum's pairwise reduction
+        # would drift in the last ulp)
+        acc = np.empty(v.size + 1)
+        acc[0] = self.total
+        acc[1:] = v
+        self.total = float(np.cumsum(acc)[-1])
         self.vmin = min(self.vmin, float(v.min()))
         self.vmax = max(self.vmax, float(v.max()))
         big = np.maximum(v, _LO)
@@ -117,6 +123,21 @@ class MetricsRegistry:
     def inc(self, name: str, value: float = 1.0, **labels) -> None:
         k = _key(name, labels)
         self._counters[k] = self._counters.get(k, 0.0) + value
+
+    def inc_seq(self, name: str, values, **labels) -> None:
+        """Bulk counter add (vectorized-engine wave flush), bit-for-bit
+        equal to calling ``inc`` once per value in order: the running
+        float accumulation is replayed with a cumulative sum seeded by
+        the counter's current value."""
+        import numpy as np
+        v = np.asarray(values, float).ravel()
+        if not v.size:
+            return
+        k = _key(name, labels)
+        arr = np.empty(v.size + 1)
+        arr[0] = self._counters.get(k, 0.0)
+        arr[1:] = v
+        self._counters[k] = float(np.cumsum(arr)[-1])
 
     def set_gauge(self, name: str, value: float, **labels) -> None:
         self._gauges[_key(name, labels)] = float(value)

@@ -70,6 +70,24 @@ class ServiceConfig:
     #                                     to its embedded scalar loop — the
     #                                     knob exists so operators can pin
     #                                     "reference" explicitly.
+    analysis_n_boot: object = None      # bootstrap resamples for per-job
+    #                                     change analysis (None = stats
+    #                                     default).  Scale-out deployments
+    #                                     lower it: analysis runs once per
+    #                                     job, so its cost is pure overhead
+    #                                     on the dispatch path.
+    schedule_quantum: int = 1           # invocations dealt to the fleet per
+    #                                     fair-queue item (deficit-round-
+    #                                     robin batching).  1 = per-
+    #                                     invocation WFQ interleave (exact
+    #                                     historical dispatch order); larger
+    #                                     quanta keep each job's lanes in
+    #                                     contiguous blocks so the
+    #                                     vectorized core fills whole waves
+    #                                     from one RNG stream — fairness
+    #                                     holds over windows of ~quantum
+    #                                     estimated seconds instead of per
+    #                                     invocation.
     chaos: object = None                # faas/chaos.py ChaosConfig: wraps
     #                                     every fleet's router in the
     #                                     fault-injection layer (None =
@@ -108,6 +126,11 @@ class _JobExec:
         self.n_done = 0
         self.n_skipped = 0
         self.pairs: List = []
+        self.pchunks: List = []         # wave-path pair columns, turned
+        #                                 into `pairs` by flush_pairs()
+        self.bchunks: List = []         # wave-path (combo, durs) chunks,
+        #                                 folded into bench_inv/bench_billed
+        #                                 by flush_pairs()
         self.executed: set = set()
         self.failed: set = set()
         self.infra_failed: set = set()
@@ -130,6 +153,10 @@ class _JobRouterBackend:
 
     realtime = False
     pinned = False
+    is_router = True        # vectorized engine: SoA job-tag routing
+    #                         (engine_vec qualifies the fleet when every
+    #                         routed backend is a plain simulated one on
+    #                         the fleet profile)
 
     def __init__(self, profile: ProviderProfile):
         self.profile = profile
@@ -246,6 +273,204 @@ class _FleetObserver(EngineObserver):
             if self._rec is not None:
                 self._rec.dump("preemption", ts=done.t_end, context=ctx)
 
+    # ----------------------------------------------- batched delivery
+    # The vectorized engine hands completions over as validity-truncated
+    # waves (`CompletedWave`), already in the scalar completion heap's
+    # drain order.  Everything below replays on_result's effects with
+    # array ops, bit-for-bit: float accumulators use the
+    # cumsum-from-prior trick (sequential-add exact), per-event costs
+    # replicate `ProviderProfile.billed_cost` term by term, and budget
+    # preemption fires at the first crossing event in delivered order.
+    wave_eligible = True
+
+    def peek_skip(self, inv) -> bool:
+        # pure preview: the real `should_skip` (which counts the skip) is
+        # replayed by the engine at commit time
+        return self.jobs[inv.job_id].cancelled
+
+    def skip_possible(self) -> bool:
+        return self.preempt and any(
+            ex.job.budget_usd is not None or ex.cancelled
+            for ex in self.jobs.values())
+
+    def skip_volatile(self, inv) -> bool:
+        # cancellation only ever flips through budget preemption, and
+        # only once (monotone): a lane of a budget-less job answers a
+        # constant False, a cancelled job's lane a monotone True — both
+        # safe to preview past the frozen-observer horizon
+        ex = self.jobs[inv.job_id]
+        return ex.job.budget_usd is not None and not ex.cancelled
+
+    def _build_ctab(self, wave) -> None:
+        """Per-combo lookup tables ((job, benchmark) pairs are fixed for
+        the whole engine run, so this happens once per fleet batch)."""
+        import numpy as np
+        cb, cj = wave.combo_bench, wave.combo_job
+        jids = list(dict.fromkeys(cj))
+        jof = {j: i for i, j in enumerate(jids)}
+        self._jlist = [self.jobs[j] for j in jids]
+        C = len(cb)
+        # memory/cpu-share from the same Python-number calls the scalar
+        # path makes, so the per-event cost factors match bitwise
+        mems = [self.jobs[cj[c]].backend.memory_for(cb[c])
+                for c in range(C)]
+        tens = list(dict.fromkeys(ex.job.tenant for ex in self._jlist))
+        tof = {t: i for i, t in enumerate(tens)}
+        self._ctab = (
+            np.fromiter((jof[j] for j in cj), np.int64, C),
+            np.array([float(m) for m in mems]),
+            np.array([self.profile.cpu_share(m) for m in mems]),
+            np.fromiter((tof[self.jobs[j].job.tenant] for j in cj),
+                        np.int64, C),
+            tens,
+        )
+        self._prefix = wave.iid_prefix
+        self._names = list(cb)
+
+    def on_wave(self, wave) -> None:
+        if wave.combo_job is None:      # not a routed fleet: per-event
+            EngineObserver.on_wave(self, wave)
+            return
+        import numpy as np
+        if len(wave) == 0:
+            return
+        if getattr(self, "_ctab", None) is None:
+            self._build_ctab(wave)
+        cjid, mem_c, share_c, ctc, tens = self._ctab
+        combo = wave.combo
+        durs = wave.duration_s
+        p = self.profile
+        # per-event cost == billed_cost([d], mem): same ops, same order
+        g, m = p.billing_granularity_s, p.min_billed_s
+        rb = durs
+        if g or m:
+            rb = np.maximum(durs, m)
+            if g:
+                rb = np.ceil(rb / g) * g
+        cost_ev = (rb * mem_c[combo] / 1024.0 * p.per_gb_second
+                   + p.per_request)
+        if p.per_ghz_second:
+            cost_ev = cost_ev + (rb * p.cpu_base_ghz * share_c[combo]
+                                 * p.per_ghz_second)
+        jev = cjid[combo]
+        order = np.argsort(jev, kind="stable")
+        cuts = np.flatnonzero(np.diff(jev[order])) + 1
+        for idx in np.split(order, cuts):
+            self._job_wave(self._jlist[int(jev[idx[0]])], wave, idx,
+                           durs, cost_ev)
+        if self._mx is not None:
+            # counter-key first-touch order matches the scalar per-event
+            # path: combos (-> tenant x benchmark keys) in first-event
+            # order, then each tenant's billed seconds in event order
+            cu, first = np.unique(combo, return_index=True)
+            for c in cu[np.argsort(first)].tolist():
+                ex = self._jlist[int(cjid[c])]
+                self._mx.inc("service.invocations",
+                             float(int((combo == c).sum())),
+                             tenant=ex.job.tenant, provider=p.name,
+                             benchmark=wave.combo_bench[c])
+            tev = ctc[combo]
+            tu, tfirst = np.unique(tev, return_index=True)
+            for t in tu[np.argsort(tfirst)].tolist():
+                self._mx.inc_seq("service.billed_s", durs[tev == t],
+                                 tenant=tens[t], provider=p.name)
+
+    def _job_wave(self, ex: "_JobExec", wave, idx, durs, cost_ev) -> None:
+        import numpy as np
+        k = int(idx.shape[0])
+        ex.pending -= k
+        ex.n_done += k
+        te = wave.t_end[idx]
+        ex.start_s = min(ex.start_s, float(wave.t_start[idx].min()))
+        ex.end_s = max(ex.end_s, float(te.max()))
+        d = durs[idx]
+        combo = wave.combo[idx]
+        # per-benchmark billing/counts are only read at job finalization,
+        # so they accumulate as raw chunks and fold once in flush_pairs()
+        ex.bchunks.append((combo, d))
+        arr = np.empty(k + 1)
+        arr[0] = ex.billed_s
+        arr[1:] = d
+        ex.billed_s = float(np.cumsum(arr)[-1])
+        carr = np.empty(k + 1)
+        carr[0] = ex.cost_est
+        carr[1:] = cost_ev[idx]
+        cum = np.cumsum(carr)
+        ok = wave.ok[idx]
+        pf = wave.platform_failure[idx]
+        for c in np.unique(combo[ok]).tolist():
+            ex.executed.add(wave.combo_bench[c])
+        for c in np.unique(combo[pf]).tolist():
+            ex.infra_failed.add(wave.combo_bench[c])
+        for c in np.unique(combo[~ok & ~pf]).tolist():
+            ex.failed.add(wave.combo_bench[c])
+        cnt = wave.pair_cnt[idx]
+        tot = int(cnt.sum())
+        if tot:
+            off = wave.pair_off[idx]
+            base = np.cumsum(cnt) - cnt
+            pos = np.repeat(off - base, cnt) + np.arange(tot)
+            ex.pchunks.append((np.repeat(combo, cnt),
+                               np.repeat(wave.call[idx], cnt),
+                               np.repeat(wave.iid_num[idx], cnt),
+                               np.repeat(wave.cold[idx], cnt),
+                               wave.pair_v1[pos], wave.pair_v2[pos]))
+        budget = ex.job.budget_usd
+        if self.preempt and budget is not None and not ex.cancelled:
+            over = np.flatnonzero(cum[1:] > budget)
+            if over.shape[0]:
+                i0 = int(over[0])
+                ex.cancelled = True
+                ex.preempted = True
+                ts = float(te[i0])
+                ctx = {"job": ex.job.job_id, "tenant": ex.job.tenant,
+                       "cost_est_usd": float(cum[1 + i0]),
+                       "budget_usd": budget}
+                if self._tr is not None:
+                    self._tr.instant("preempt", cat="service", ts=ts,
+                                     pid="tenants", tid=ex.job.tenant,
+                                     args=ctx)
+                if self._mx is not None:
+                    self._mx.inc("service.preemptions",
+                                 tenant=ex.job.tenant,
+                                 provider=self.profile.name)
+                if self._rec is not None:
+                    self._rec.dump("preemption", ts=ts, context=ctx)
+        ex.cost_est = float(cum[-1])
+
+    def flush_pairs(self) -> None:
+        """Turn wave-accumulated pair columns into each job's `pairs`
+        as a lazy array-backed sequence (order matches the per-event
+        path: delivery order, repeat order within an invocation).
+        No-op after a scalar run."""
+        if getattr(self, "_ctab", None) is None:
+            return
+        import numpy as np
+        from repro.faas.engine_vec import PairSeq
+        for ex in self.jobs.values():
+            if ex.bchunks:
+                combo = np.concatenate([c for c, _ in ex.bchunks])
+                d = np.concatenate([dm for _, dm in ex.bchunks])
+                cu, first = np.unique(combo, return_index=True)
+                for c in cu[np.argsort(first)].tolist():
+                    b = self._names[c]
+                    dm = d[combo == c]
+                    ex.bench_inv[b] = (ex.bench_inv.get(b, 0)
+                                       + int(dm.shape[0]))
+                    arr = np.empty(dm.shape[0] + 1)
+                    arr[0] = ex.bench_billed.get(b, 0.0)
+                    arr[1:] = dm
+                    ex.bench_billed[b] = float(np.cumsum(arr)[-1])
+                ex.bchunks = []
+            ch = ex.pchunks
+            if not ch:
+                continue
+            cols = [np.concatenate([c[i] for c in ch]) for i in range(6)]
+            ex.pairs = PairSeq(self._names, self._prefix, cols[0],
+                               cols[1], cols[2], cols[3], cols[4],
+                               cols[5])
+            ex.pchunks = []
+
 
 class _Fleet:
     """One provider fleet: engine + persistent warm pool + fair queue."""
@@ -256,6 +481,7 @@ class _Fleet:
                              "the VM baseline runs standalone")
         self.provider = provider
         self.parallelism = parallelism
+        self.cfg = cfg
         self.profile = PROVIDER_PROFILES[provider]
         self.router = _JobRouterBackend(self.profile)
         backend = self.router
@@ -284,15 +510,25 @@ class _Fleet:
         self.router.add_job(ex.job.job_id, ex.backend)
         self.jobs[ex.job.job_id] = ex
         repeats = ex.job.repeats_per_call
+        quantum = max(1, int(self.cfg.schedule_quantum))
+        group: list = []
+        group_est = 0.0
         for inv in rmit.tag_plan(plan, ex.job.job_id).invocations:
             wl = ex.job.workloads[inv.benchmark]
             est_s = 2.0 * repeats * getattr(wl, "base_seconds", 1.0)
-            self.queue.push(ex.job.tenant, inv, size=est_s,
+            group.append(inv)
+            group_est += est_s
+            if len(group) >= quantum:
+                self.queue.push(ex.job.tenant, group, size=group_est,
+                                weight_scale=ex.job.priority)
+                group, group_est = [], 0.0
+        if group:
+            self.queue.push(ex.job.tenant, group, size=group_est,
                             weight_scale=ex.job.priority)
 
     def run(self, cfg: ServiceConfig) -> List[_JobExec]:
         """Execute everything queued; returns the jobs of this batch."""
-        order = [inv for _, inv in self.queue.drain()]
+        order = [inv for _, grp in self.queue.drain() for inv in grp]
         batch = [ex for ex in self.jobs.values() if ex.result is None]
         if not order:
             return batch
@@ -303,6 +539,7 @@ class _Fleet:
         rep = self.engine.run(plan, observer=observer,
                               warm_pool=self.warm_pool,
                               start_s=self.clock_s)
+        observer.flush_pairs()
         self.clock_s = max(self.clock_s, rep.wall_seconds)
         self.cold_starts += rep.cold_starts
         self.reports.append(rep)
@@ -586,8 +823,13 @@ class BenchmarkService:
     # -------------------------------------------------------------- build
     def _job_result(self, ex: _JobExec) -> JobResult:
         job = ex.job
-        changes = analyze(ex.pairs, seed=job.seed,
-                          min_results=job.min_results)
+        nb = self.cfg.analysis_n_boot
+        if nb is None:
+            changes = analyze(ex.pairs, seed=job.seed,
+                              min_results=job.min_results)
+        else:
+            changes = analyze(ex.pairs, seed=job.seed,
+                              min_results=job.min_results, n_boot=int(nb))
         start = 0.0 if ex.start_s == float("inf") else ex.start_s
         end = max(ex.end_s, start)
         latency = end - ex.enqueue_clock_s

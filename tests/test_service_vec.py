@@ -1,0 +1,203 @@
+"""Vectorized service path: differential conformance matrix.
+
+The service's fast core must be an *indistinguishable* drop-in for the
+reference scheduler: over engines x tenant counts x chaos modes the full
+schedule digest (dispatch order, completion times, bills, delivery
+order) replays bit-for-bit, including under budget preemption, admission
+rejection of infeasible plans, and deficit-round-robin quantum batching.
+Also holds the bulk-ingest observability protocol to the same bar:
+`StreamingAnalyzer.append_many` / `MetricsRegistry.inc_seq` /
+`observe_many` must equal their per-event forms bit-for-bit no matter
+how the stream is chunked into waves.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.experiment import (run_multi_tenant_experiment,
+                                   victoriametrics_like_suite)
+from repro.faas.chaos import moderate_chaos
+from repro.faas.engine_vec import get_fallback_log, reset_fallback_log
+from repro.service import (AdmissionError, BenchmarkService,
+                           DeadlineCostPlanner, Job, PlannerConfig,
+                           ServiceConfig)
+
+
+def _suite(n=10):
+    full = victoriametrics_like_suite()
+    return {k: v for k, v in sorted(full.items())[:2 * n]
+            if not v.fs_write and v.base_seconds < 10.0}
+
+
+def _job(jid, tenant, workloads, **kw):
+    kw.setdefault("n_calls", 5)
+    kw.setdefault("repeats_per_call", 2)
+    kw.setdefault("seed", sum(ord(c) for c in jid) % 1000)
+    return Job(job_id=jid, tenant=tenant, workloads=workloads, **kw)
+
+
+# ------------------------------------------------- engine x tenants x chaos
+@pytest.mark.parametrize("chaos_on", (False, True),
+                         ids=("chaos_off", "chaos_moderate"))
+@pytest.mark.parametrize("n_tenants", (8, 16, 32))
+def test_engine_matrix_digests_equal(n_tenants, chaos_on):
+    """fast/reference produce identical multi-tenant schedule digests at
+    every matrix point; with chaos off the fast core must have taken the
+    vectorized path (no silent scalar fallback), with chaos on it takes
+    the documented scalar fallback and still matches."""
+    chaos = (lambda: moderate_chaos(seed=5)) if chaos_on else (lambda: None)
+    reset_fallback_log()
+    rf = run_multi_tenant_experiment(
+        n_tenants, provider="lambda", n_commits=2, n_calls=5,
+        repeats_per_call=2, seed=91, chaos=chaos(), engine="fast")
+    fallbacks = list(get_fallback_log())
+    rr = run_multi_tenant_experiment(
+        n_tenants, provider="lambda", n_commits=2, n_calls=5,
+        repeats_per_call=2, seed=91, chaos=chaos(), engine="reference")
+    assert rf.digest == rr.digest
+    assert rf.total_invocations == rr.total_invocations
+    assert rf.total_cost_usd == pytest.approx(rr.total_cost_usd)
+    if not chaos_on:
+        assert not fallbacks
+
+
+# ----------------------------------------------------- preemption + quantum
+def _budget_service(engine, quantum=1):
+    wl = _suite(8)
+    svc = BenchmarkService(ServiceConfig(parallelism=10, engine=engine,
+                                         schedule_quantum=quantum))
+    svc.submit(_job("rich", "a", wl, seed=1), provider="lambda")
+    svc.submit(_job("poor", "b", wl, seed=2, budget_usd=0.0005),
+               provider="lambda")
+    svc.submit(_job("mid", "c", wl, seed=3, budget_usd=0.02),
+               provider="lambda")
+    return svc.run()
+
+
+@pytest.mark.parametrize("quantum", (1, 64))
+def test_budget_preemption_differential(quantum):
+    """Budget accounting and mid-flight cancellation replay identically
+    on the vector skip path, at both per-invocation WFQ interleave and
+    batched quantum dispatch — and without scalar fallback."""
+    reset_fallback_log()
+    rep_f = _budget_service("fast", quantum)
+    assert not list(get_fallback_log())
+    rep_r = _budget_service("reference", quantum)
+    assert rep_f.digest() == rep_r.digest()
+    assert rep_f.preempted_jobs == rep_r.preempted_jobs == ["poor"]
+    poor = next(r for r in rep_f.results if r.job_id == "poor")
+    assert poor.status == "preempted" and poor.skipped_invocations > 0
+
+
+def test_quantum_batching_is_engine_invariant():
+    """A quantum > 1 changes the dispatch interleave (jobs' lanes go out
+    in contiguous blocks) but both cores must agree on the new schedule
+    — and quantum=1 must reproduce the historical per-invocation
+    interleave exactly."""
+    wl = _suite(6)
+
+    def run(engine, quantum):
+        svc = BenchmarkService(ServiceConfig(parallelism=12, engine=engine,
+                                             schedule_quantum=quantum))
+        for i in range(4):
+            svc.submit(_job(f"j{i}", f"t{i % 2}", wl, seed=40 + i),
+                       provider="lambda")
+        return svc.run().digest()
+
+    d_base = run("reference", 1)
+    assert run("fast", 1) == d_base
+    assert run("fast", 64) == run("reference", 64)
+
+
+def test_infeasible_plan_rejected_identically():
+    """An impossible deadline/budget ask is rejected at admission under
+    both cores, and the surviving jobs' schedule is unaffected."""
+    wl = _suite(6)
+
+    def run(engine):
+        planner = DeadlineCostPlanner(PlannerConfig(
+            providers=("lambda",), memory_mb=(2048,), parallelism=(10,),
+            repeat_plans=((5, 2),), autotune=False, include_vm=False))
+        svc = BenchmarkService(ServiceConfig(parallelism=10, engine=engine),
+                               planner=planner)
+        svc.submit(_job("ok", "a", wl, seed=4), provider="lambda")
+        with pytest.raises(AdmissionError):
+            svc.submit(_job("doomed", "b", wl, seed=5,
+                            deadline_s=0.001, budget_usd=1e-9))
+        assert svc.rejected and svc.rejected[0][0] == "doomed"
+        return svc.run()
+
+    rep_f, rep_r = run("fast"), run("reference")
+    assert rep_f.digest() == rep_r.digest()
+    assert [r.job_id for r in rep_f.results] == ["ok"]
+
+
+# ------------------------------------------- bulk-ingest chunking invariance
+def _chunks(values, cuts):
+    """Split `values` at the (sorted, deduped) cut offsets."""
+    out, prev = [], 0
+    for c in sorted({min(c, len(values)) for c in cuts}):
+        out.append(values[prev:c])
+        prev = c
+    out.append(values[prev:])
+    return [c for c in out if len(c)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=1e-7, max_value=50.0),
+                min_size=1, max_size=40),
+       st.lists(st.integers(min_value=0, max_value=40),
+                min_size=0, max_size=5))
+def test_append_many_equals_per_event_append(vals, cuts):
+    """StreamingAnalyzer.append_many over arbitrary wave boundaries ends
+    in the same state, bit-for-bit, as add_pair per event — including
+    the bootstrap CIs of the resulting analysis."""
+    from repro.core.results import StreamingAnalyzer
+    from repro.core.duet import DuetPair
+    v1 = np.asarray(vals)
+    v2 = v1 * 1.07 + 0.003
+
+    ref = StreamingAnalyzer(n_boot=80, seed=9, min_results=1)
+    for a, b in zip(v1, v2):
+        ref.add_pair(DuetPair(benchmark="b", v1_seconds=a, v2_seconds=b))
+    bulk = StreamingAnalyzer(n_boot=80, seed=9, min_results=1)
+    i = 0
+    for ch in _chunks(list(range(len(v1))), cuts):
+        ix = np.asarray(ch)
+        bulk.append_many("b", v1[ix], v2[ix])
+        i += len(ch)
+
+    rb, bb = ref._buf["b"], bulk._buf["b"]
+    assert rb.n == bb.n == len(v1)
+    assert np.array_equal(rb.views()[0], bb.views()[0])
+    assert np.array_equal(rb.views()[1], bb.views()[1])
+    a, b = ref.result("b"), bulk.result("b")
+    assert (a is None) == (b is None)
+    if a is not None:
+        assert a == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=1e-7, max_value=1e4),
+                min_size=1, max_size=60),
+       st.lists(st.integers(min_value=0, max_value=60),
+                min_size=0, max_size=6))
+def test_metrics_bulk_equals_per_event(vals, cuts):
+    """inc_seq / observe_many over arbitrary chunkings match per-event
+    inc / observe bit-for-bit (counters replay the sequential float
+    accumulation; sketches land every value in the same bucket)."""
+    from repro.obs.metrics import MetricsRegistry
+    ref, bulk = MetricsRegistry(), MetricsRegistry()
+    for v in vals:
+        ref.inc("billed", v, tenant="t0")
+        ref.observe("latency", v, tenant="t0")
+    for ch in _chunks(vals, cuts):
+        bulk.inc_seq("billed", ch, tenant="t0")
+        bulk.observe_many("latency", ch, tenant="t0")
+    assert bulk.counter_total("billed") == ref.counter_total("billed")
+    hr = ref._hists[("latency", (("tenant", "t0"),))]
+    hb = bulk._hists[("latency", (("tenant", "t0"),))]
+    assert hb.buckets == hr.buckets
+    assert hb.count == hr.count
+    assert hb.total == hr.total
+    assert hb.vmin == hr.vmin and hb.vmax == hr.vmax
