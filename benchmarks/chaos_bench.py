@@ -106,9 +106,31 @@ def main(argv=None) -> int:
                     help="committed BENCH_chaos.json to ratchet against")
     ap.add_argument("--min-naive-drop", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a virtual-time trace of the sweep "
+                         "(chaos fault instants included) and write "
+                         "Chrome trace_event JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="write the metrics registry snapshot "
+                         "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
 
+    obs = None
+    if args.trace or args.metrics_out:
+        sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"))
+        from repro.obs import Observability, set_obs
+        obs = Observability.recording()
+        set_obs(obs)
+
     point = run(args.quick, args.seed)
+    if obs is not None:
+        if args.trace:
+            obs.export_trace(args.trace)
+            print(f"trace: {len(obs.tracer)} events -> {args.trace}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
     print(json.dumps(point, indent=2, sort_keys=True))
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

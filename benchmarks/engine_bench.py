@@ -21,12 +21,15 @@ baseline.  ``--check-baseline`` exits non-zero on either.
 ``--trace-overhead`` instead measures the observability tax on the
 vectorized engine: the same plan is replayed with no observability
 context, with the ``NullTracer`` (tracing compiled in but disabled — the
-default for every production run), and with a full ``RecordingTracer``.
-All three runs must produce bit-identical digests, and the null/off
-ratio is gated at 1.05 — the "instrumentation is free when off"
-contract.  Ratios are measured inside one process so the gate is
-runner-independent; the rows land under an ``obs_overhead`` key merged
-into the baseline JSON without touching the ``sizes`` rows.
+default for every production run), with a full ``RecordingTracer``, and
+with live SLO monitoring armed (recording plus windowed feeds, detector
+banks, and SLO evaluators).  All four runs must produce bit-identical
+digests; the null/off ratio is gated at 1.05 — the "instrumentation is
+free when off" contract — and monitoring/off at 1.10 — watching the
+stream costs at most a dime on the dollar.  Ratios are measured inside
+one process so the gate is runner-independent; the rows land under an
+``obs_overhead`` key merged into the baseline JSON without touching the
+``sizes`` rows.
 
 Usage:
     PYTHONPATH=src python benchmarks/engine_bench.py
@@ -159,6 +162,7 @@ def run_profile(quick: bool, seed: int) -> list:
 
 OVERHEAD_SIZES = (10_000, 100_000)
 NULL_OVERHEAD_LIMIT = 1.05
+MONITORING_OVERHEAD_LIMIT = 1.10
 
 
 def _time_obs_modes(suite, plan, seed: int, reps: int, inner: int = 1):
@@ -185,7 +189,8 @@ def _time_obs_modes(suite, plan, seed: int, reps: int, inner: int = 1):
 
     rec_obs = Observability.recording()
     modes = (("off", None), ("null", Observability.null()),
-             ("recording", rec_obs))
+             ("recording", rec_obs),
+             ("monitoring", Observability.monitoring()))
     best = {m: float("inf") for m, _ in modes}
     reports = {}
     n_recording_runs = 0
@@ -236,7 +241,7 @@ def run_trace_overhead(seed: int) -> list:
         reports, best, events_per_run = _time_obs_modes(
             suite, plan, seed, reps, inner=inner)
         d = _digest(reports["off"])
-        for mode in ("null", "recording"):
+        for mode in ("null", "recording", "monitoring"):
             if _digest(reports[mode]) != d:
                 raise AssertionError(
                     f"obs conformance FAILED at N={n_inv}: {mode} digest "
@@ -247,8 +252,12 @@ def run_trace_overhead(seed: int) -> list:
             "null_us_per_inv": round(best["null"] / n_inv * 1e6, 3),
             "recording_us_per_inv":
                 round(best["recording"] / n_inv * 1e6, 3),
+            "monitoring_us_per_inv":
+                round(best["monitoring"] / n_inv * 1e6, 3),
             "null_ratio": round(best["null"] / best["off"], 4),
             "recording_ratio": round(best["recording"] / best["off"], 4),
+            "monitoring_ratio":
+                round(best["monitoring"] / best["off"], 4),
             "trace_events_per_run": events_per_run,
             "digest": d,
         }
@@ -256,23 +265,36 @@ def run_trace_overhead(seed: int) -> list:
         print(f"  N={n_inv:>9,}  off {row['off_us_per_inv']:7.2f} us/inv  "
               f"null x{row['null_ratio']:.3f}  "
               f"recording x{row['recording_ratio']:.3f}  "
+              f"monitoring x{row['monitoring_ratio']:.3f}  "
               f"({row['trace_events_per_run']} events/run)  [bit-exact]")
     return rows
 
 
-def check_overhead(rows: list, limit: float = NULL_OVERHEAD_LIMIT) -> int:
+def check_overhead(rows: list, limit: float = NULL_OVERHEAD_LIMIT,
+                   mon_limit: float = None) -> int:
     # gate on the largest plan only: at 10^4 a best-of run is ~20 ms and
     # single-digit-percent jitter swamps the effect being measured
+    if mon_limit is None:
+        mon_limit = MONITORING_OVERHEAD_LIMIT
     gated = max(rows, key=lambda r: r["n_invocations"])
+    rc = 0
     if gated["null_ratio"] > limit:
         print(f"null-tracer overhead gate FAILED at "
               f"N={gated['n_invocations']}: ratio {gated['null_ratio']} "
               f"> {limit}", file=sys.stderr)
-        return 1
-    print(f"null-tracer overhead gate OK "
-          f"(x{gated['null_ratio']} <= {limit} at "
-          f"N={gated['n_invocations']}, all modes bit-exact)")
-    return 0
+        rc = 1
+    if gated.get("monitoring_ratio", 0.0) > mon_limit:
+        print(f"monitoring overhead gate FAILED at "
+              f"N={gated['n_invocations']}: ratio "
+              f"{gated['monitoring_ratio']} > {mon_limit}",
+              file=sys.stderr)
+        rc = 1
+    if not rc:
+        print(f"obs overhead gates OK "
+              f"(null x{gated['null_ratio']} <= {limit}, monitoring "
+              f"x{gated.get('monitoring_ratio', '-')} <= {mon_limit} at "
+              f"N={gated['n_invocations']}, all modes bit-exact)")
+    return rc
 
 
 def check_baseline(rows: list, baseline_path: str) -> int:

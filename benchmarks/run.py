@@ -30,6 +30,15 @@ def _write_obs(args, obs) -> None:
     if args.metrics_out:
         obs.export_metrics(args.metrics_out)
         print(f"metrics -> {args.metrics_out}")
+    if obs.monitor is not None:
+        health = obs.health()
+        print(f"slo verdict: {health['verdict']} "
+              f"({len(health['alerts'])} alerts, "
+              f"{len(health['incidents'])} incidents)")
+        if args.health_out:
+            with open(args.health_out, "w") as f:
+                json.dump(health, f, indent=1, sort_keys=True)
+            print(f"health -> {args.health_out}")
 
 
 def main(argv=None) -> None:
@@ -62,6 +71,14 @@ def main(argv=None) -> None:
     ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
                     help="write the metrics registry snapshot "
                          "(render with `python -m repro.obs.report`)")
+    ap.add_argument("--slo", nargs="?", const=True, default=None,
+                    metavar="SLOS.json",
+                    help="arm live SLO monitoring (stock objectives, or a "
+                         "JSON spec file) on top of recording; prints the "
+                         "health verdict at the end")
+    ap.add_argument("--health-out", default=None, metavar="OUT.json",
+                    help="write the machine-readable health verdict "
+                         "(repro.obs.watch schema; requires --slo)")
     args = ap.parse_args(argv)
     strict_fast = args.engine == "fast"    # explicit ask = strict gate
     if args.engine is None:
@@ -71,9 +88,13 @@ def main(argv=None) -> None:
     set_default_engine(args.engine)
 
     obs = None
-    if args.trace or args.metrics_out:
-        from repro.obs import Observability, set_obs
-        obs = Observability.recording()
+    if args.slo or args.trace or args.metrics_out:
+        from repro.obs import Observability, load_slos, set_obs
+        if args.slo:
+            specs = None if args.slo is True else load_slos(args.slo)
+            obs = Observability.monitoring(specs)
+        else:
+            obs = Observability.recording()
         set_obs(obs)
 
     if args.jobs > 0:

@@ -241,7 +241,19 @@ def main(argv=None) -> int:
                          "256-stream table)")
     ap.add_argument("--out", default="BENCH_service.json")
     ap.add_argument("--check-baseline", default=None, metavar="FILE")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a virtual-time trace of the profiled "
+                         "runs and write Chrome trace_event JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
+                    help="write the metrics registry snapshot "
+                         "(render with `python -m repro.obs.report`)")
     args = ap.parse_args(argv)
+
+    obs = None
+    if args.trace or args.metrics_out:
+        from repro.obs import Observability, set_obs
+        obs = Observability.recording()
+        set_obs(obs)
 
     providers = run_profile(args.tenants, args.seed)
     doc = {
@@ -268,6 +280,13 @@ def main(argv=None) -> int:
     print(json.dumps(providers, indent=1, sort_keys=True))
     if scaling_rows is not None:
         print(json.dumps(scaling_rows, indent=1, sort_keys=True))
+    if obs is not None:
+        if args.trace:
+            obs.export_trace(args.trace)
+            print(f"trace: {len(obs.tracer)} events -> {args.trace}")
+        if args.metrics_out:
+            obs.export_metrics(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
     if args.check_baseline:
         rc = check_baseline(providers, args.check_baseline)
         if scaling_rows is not None:

@@ -37,6 +37,7 @@ from repro.cb.registry import SyntheticSuite, get_suite
 
 EXIT_INFEASIBLE = 2
 EXIT_FALLBACK = 3       # `--engine fast` was explicit but the run degraded
+EXIT_BREACH = 4         # `--slo` was armed and an objective breached
 
 
 def _stream_for(args, suite, seed: int):
@@ -177,6 +178,14 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-out", default=None, metavar="OUT.json",
                     help="write the metrics registry snapshot "
                          "(render with `python -m repro.obs.report`)")
+    ap.add_argument("--slo", nargs="?", const=True, default=None,
+                    metavar="SLOS.json",
+                    help="arm live SLO monitoring (stock objectives, or a "
+                         "JSON spec file); prints the health verdict and "
+                         "exits 4 on an SLO breach")
+    ap.add_argument("--health-out", default=None, metavar="OUT.json",
+                    help="write the machine-readable health verdict "
+                         "(repro.obs.watch schema; requires --slo)")
     args = ap.parse_args(argv)
     # `--engine fast` given explicitly arms the strict no-fallback gate;
     # the bare default still prefers the vectorized core but tolerates
@@ -189,9 +198,13 @@ def main(argv=None) -> int:
     set_default_engine(args.engine)
 
     obs = None
-    if args.trace or args.metrics_out:
-        from repro.obs import Observability, set_obs
-        obs = Observability.recording()
+    if args.slo or args.trace or args.metrics_out:
+        from repro.obs import Observability, load_slos, set_obs
+        if args.slo:
+            specs = None if args.slo is True else load_slos(args.slo)
+            obs = Observability.monitoring(specs)
+        else:
+            obs = Observability.recording()
         set_obs(obs)
 
     service_mode = args.jobs > 0 or args.deadline is not None \
@@ -257,6 +270,17 @@ def main(argv=None) -> int:
         if args.metrics_out:
             obs.export_metrics(args.metrics_out)
             print(f"metrics -> {args.metrics_out}")
+        if obs.monitor is not None:
+            health = obs.health()
+            print(f"slo verdict: {health['verdict']} "
+                  f"({len(health['alerts'])} alerts, "
+                  f"{len(health['incidents'])} incidents)", file=sys.stderr)
+            if args.health_out:
+                with open(args.health_out, "w") as f:
+                    json.dump(health, f, indent=1, sort_keys=True)
+                print(f"health -> {args.health_out}", file=sys.stderr)
+            if code == 0 and health["verdict"] == "breach":
+                code = EXIT_BREACH
     return code
 
 

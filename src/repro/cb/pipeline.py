@@ -510,6 +510,15 @@ class Pipeline:
             if n_flag:
                 obs.metrics.inc("cb.flagged", n_flag,
                                 provider=cfg.provider)
+        if obs is not None and obs.monitor is not None:
+            # convergence-by-time SLO: latest CI width per benchmark on
+            # the pipeline's cumulative virtual clock
+            for b in sorted(changes):
+                obs.monitor.job_event(
+                    "ci_width", self._obs_clock, benchmark=b,
+                    provider=cfg.provider,
+                    width_pct=float(changes[b].ci_size))
+            obs.monitor.evaluate(self._obs_clock)
 
         sel = work.sel
         return CommitRun(

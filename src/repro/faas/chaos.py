@@ -90,6 +90,10 @@ class FaultSpec:
     period_s /
     window_s    storm cadence: active `window_s` out of every `period_s`
                 (0 period = always eligible)
+    phase_s     shifts the cadence so the first window opens at
+                `phase_s` instead of t=0 (detector evaluation wants a
+                calm baseline before the incident); 0 = historical
+                behavior, bit-identical
     magnitude   billing multiplier (``billing``) or duplicate count
                 (``duplicate``); unused otherwise
     """
@@ -97,6 +101,7 @@ class FaultSpec:
     rate: float
     period_s: float = 0.0
     window_s: float = 0.0
+    phase_s: float = 0.0
     magnitude: float = 2.0
 
     def __post_init__(self):
@@ -106,7 +111,7 @@ class FaultSpec:
     def in_window(self, t: float) -> bool:
         if self.period_s <= 0.0:
             return True
-        return (t % self.period_s) < self.window_s
+        return ((t - self.phase_s) % self.period_s) < self.window_s
 
     def duty_cycle(self) -> float:
         if self.period_s <= 0.0:
@@ -259,6 +264,11 @@ class ChaosBackend:
         self._bill_mult: List[float] = []
         self._storm_win = -1             # burst detection (observability)
         self._storm_hits = 0
+        # ground truth for detector evaluation: per (fault key, coarse
+        # window) span of injected-fault timestamps.  Pure bookkeeping on
+        # already-decided faults — no RNG, survives begin_run so a whole
+        # scenario accumulates one truth log
+        self._truth: Dict[tuple, List[float]] = {}
 
     # unknown attributes (realtime, pinned, keep_alive_s, profile, ...)
     # resolve on the wrapped backend
@@ -327,7 +337,8 @@ class ChaosBackend:
 
         out = self._apply_regimes(out, inv, instance, t, ikey, rng)
 
-        if out.ok and ZOMBIE in self._rates \
+        spec = self._specs.get(ZOMBIE)
+        if out.ok and spec is not None and spec.in_window(t) \
                 and u[_U_SLOT[ZOMBIE]] < self._rates[ZOMBIE]:
             # the instance dies *after* this successful invocation but
             # stays in the warm pool until someone acquires the corpse
@@ -360,6 +371,17 @@ class ChaosBackend:
         path), so the context is resolved per call — and only *reads*
         already-decided fault state, never an RNG."""
         self.stats[key] = self.stats.get(key, 0) + 1
+        if t is not None:
+            # ground-truth log (for detector precision/recall scoring):
+            # coarse 60 s buckets, merged into incident windows on read
+            w = int(t // 60.0)
+            rec = self._truth.get((key, w))
+            if rec is None:
+                self._truth[(key, w)] = [t, t, 1.0]
+            else:
+                rec[0] = min(rec[0], t)
+                rec[1] = max(rec[1], t)
+                rec[2] += 1.0
         from repro.obs import get_obs
         obs = get_obs()
         if obs is None or not obs.enabled:
@@ -393,6 +415,28 @@ class ChaosBackend:
                     "timeout_storm_burst", ts=t,
                     context={"window": win,
                              "hits": self._storm_hits, **args})
+
+    def ground_truth(self, merge_gap_s: float = 120.0) -> List[dict]:
+        """Injected-fault windows, merged per fault kind: the answer key
+        a detector run is scored against (precision / recall /
+        time-to-detect in benchmarks/obs_bench.py)."""
+        by_kind: Dict[str, List[List[float]]] = {}
+        for (key, _w), (t0, t1, n) in sorted(self._truth.items(),
+                                             key=lambda kv: (kv[0][0],
+                                                             kv[1][0])):
+            spans = by_kind.setdefault(key, [])
+            if spans and t0 - spans[-1][1] <= merge_gap_s:
+                spans[-1][1] = max(spans[-1][1], t1)
+                spans[-1][2] += n
+            else:
+                spans.append([t0, t1, n])
+        out = []
+        for key in sorted(by_kind):
+            for t0, t1, n in by_kind[key]:
+                out.append({"kind": key, "t0": t0, "t1": t1,
+                            "count": int(n)})
+        out.sort(key=lambda r: (r["t0"], r["kind"]))
+        return out
 
     def _inv_rng(self, inv: Invocation) -> np.random.Generator:
         """Per-attempt RNG keyed by the invocation's identity: a pure

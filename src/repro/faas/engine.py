@@ -415,6 +415,11 @@ class ExecutionEngine:
         provider = getattr(getattr(be, "profile", None), "name", None) \
             or type(be).__name__
         lane = f"fleet:{provider}"
+        # active monitoring (SLOs + detectors) rides the same resolve-once
+        # contract: the windowed feed is fetched here, and each dispatch
+        # pays one extra `is not None` branch when monitoring is off
+        mon = _obs.monitor if _obs is not None else None
+        mfeed = mon.engine_feed(provider) if mon is not None else None
 
         pairs: List[DuetPair] = []
         billed: List[float] = []
@@ -484,6 +489,9 @@ class ExecutionEngine:
                     mx.inc("engine.cold_starts", provider=provider)
                 else:
                     mx.inc("engine.warm_hits", provider=provider)
+            if mfeed is not None:
+                mfeed.dispatch(t, out.duration_s, cold, out.ok,
+                               out.timed_out)
             return CompletedInvocation(inv, out, t, t_end, attempt, inst)
 
         # completed invocations are delivered to the observer in virtual
@@ -628,6 +636,10 @@ class ExecutionEngine:
                 mx.set_gauge("engine.cold_start_rate",
                              cold_starts / n_disp, provider=provider)
             mx.inc("engine.cost_usd", cost, provider=provider)
+        if mon is not None:
+            # drain detectors/SLO evaluators up to this run's horizon;
+            # evaluate() is monotone so interleaved fleet runs are safe
+            mon.evaluate(wall)
         return EngineReport(
             pairs=pairs, wall_seconds=wall, billed_seconds=billed,
             cost_dollars=cost, cold_starts=cold_starts, timeouts=timeouts,

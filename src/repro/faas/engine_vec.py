@@ -590,7 +590,12 @@ class _VecRun:
         on = _obs is not None and _obs.enabled
         self._tr = _obs.tracer if on else None
         self._mx = _obs.metrics if on else None
-        if on:
+        # active monitoring: the windowed engine feed is resolved once
+        # here, then each wave bulk-observes into it (same resolve-once
+        # contract as tracer/metrics; off = one `is not None` per wave)
+        self._mon = _obs.monitor if _obs is not None else None
+        self._mfeed = None
+        if on or self._mon is not None:
             prof = getattr(self.target, "profile", None)
             self._provider = getattr(prof, "name", None) \
                 or type(self.target).__name__
@@ -599,6 +604,8 @@ class _VecRun:
             B = len(self.names)
             self._bm_inv = np.zeros(B, np.int64)
             self._bm_billed = np.zeros(B)
+            if self._mon is not None:
+                self._mfeed = self._mon.engine_feed(self._provider)
         P = cfg.parallelism
         self.slot_t = np.full(P, float(self.start_s))
         if self.vm:
@@ -1535,9 +1542,15 @@ class _VecRun:
             self._bm_billed += np.bincount(b, weights=dur, minlength=B)
             self._mx.observe_many("engine.latency_s", dur,
                                   provider=self._provider)
+        if self._mfeed is not None:
+            # whole-wave windowed feed: arrays are in dispatch order, so
+            # the rings accumulate exactly as the scalar per-event path
+            self._mfeed.dispatch_wave(ns.pops[:k], dur, ns.cold[:k],
+                                      ns.okv[:k], ns.timedv[:k])
 
     def _tally_fast(self, ns, k: int, retried: bool) -> None:
-        if self._tr is not None or self._mx is not None:
+        if (self._tr is not None or self._mx is not None
+                or self._mfeed is not None):
             self._obs_wave(ns, k, {"retried": bool(retried)})
         kacc = k
         if retried:
@@ -1627,7 +1640,8 @@ class _VecRun:
                 break
             self._account_one(ns, j)
         self._commit_state(ns, stop)
-        if self._tr is not None or self._mx is not None:
+        if (self._tr is not None or self._mx is not None
+                or self._mfeed is not None):
             self._obs_wave(ns, stop)
         if fire is not None:
             kind, j = fire
@@ -1681,13 +1695,14 @@ class _VecRun:
             out = target.simulate(inv, inst, t, 0.0)
             t_end = t + out.duration_s
             self.slot_t[idx] = t_end
-            return out, t, t_end
+            return out, t, t_end, False
         row = self.pool.acquire_one(t, self.ka)
         if row >= 0:
             spd = float(self.pool._speed[row])
             iid = int(self.pool._iid[row])
             inst = Instance("i%d" % iid, spd)
             ov = 0.0
+            cold = False
         else:
             target._inst_counter = self.ninst
             inst, ov = target.spawn_instance(inv, t, 0)
@@ -1695,11 +1710,12 @@ class _VecRun:
             self.cold_starts += 1
             spd = inst.speed
             iid = self.ninst
+            cold = True
         out = target.simulate(inv, inst, t, ov)
         t_end = t + out.duration_s
         self.slot_t[idx] = t_end
         self.pool.push_one(t_end, spd, iid)
-        return out, t, t_end
+        return out, t, t_end, cold
 
     def _hedge_fire(self, ns, j: int) -> None:
         """Exact replica of the scalar hedge block for lane j, with the
@@ -1711,7 +1727,7 @@ class _VecRun:
         t_end0 = float(ns.push[j])
         dur_j = float(ns.dur[j])
         ok0 = bool(ns.okv[j])
-        alt_out, alt_ts, alt_te = self._dispatch_one(inv)
+        alt_out, alt_ts, alt_te, alt_cold = self._dispatch_one(inv)
         if self._tr is not None:
             self._tr.instant("hedge", cat="engine", ts=alt_ts,
                              pid=self._lane, tid=f"b:{inv.benchmark}",
@@ -1723,6 +1739,9 @@ class _VecRun:
             self._mx.inc("engine.hedges", provider=self._provider)
             self._mx.observe("engine.latency_s", alt_out.duration_s,
                              provider=self._provider)
+        if self._mfeed is not None:
+            self._mfeed.dispatch(alt_ts, alt_out.duration_s, alt_cold,
+                                 alt_out.ok, alt_out.timed_out)
         end_s = t_end0
         alt_billed = alt_out.duration_s
         alt_end = alt_te
@@ -1863,6 +1882,9 @@ class _VecRun:
                              provider=prov)
                 mx.set_gauge("engine.cold_start_rate",
                              self.cold_starts / n_disp, provider=prov)
+        if self._mon is not None:
+            # drain detectors/SLO evaluators up to this run's horizon
+            self._mon.evaluate(wall)
         ex = {self.names[i]
               for i in np.flatnonzero(self.exec_mask).tolist()}
         fl = {self.names[i]

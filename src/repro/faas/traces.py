@@ -107,6 +107,37 @@ class ColdSpikeTrace(TraceModel):
                        multiplier=1.0 + (self.multiplier - 1.0) * intensity)
 
 
+@dataclass(frozen=True)
+class StepTrace(TraceModel):
+    """Deterministic step degradation: between `t0_s` and `t1_s` the
+    platform (or one region of it, when ``region >= 0`` with
+    ``n_regions`` hashing) runs `factor` times slower.  No RNG at all —
+    the ground-truth regime for detector evaluation: the injected
+    incident window is known exactly, so benchmarks/obs_bench.py can
+    score detection latency against it."""
+    factor: float = 2.0
+    t0_s: float = 0.0
+    t1_s: float = 0.0
+    region: int = -1
+    n_regions: int = 4
+
+    def speed_factor(self, t: float, inst_key: int = 0) -> float:
+        if self.factor == 1.0 or not (self.t0_s <= t < self.t1_s):
+            return 1.0
+        if self.region >= 0 and inst_key % self.n_regions != self.region:
+            return 1.0
+        return self.factor
+
+    def mean_factor(self) -> float:
+        # planner-facing long-run mean; a bounded step window washes out
+        # over an unbounded horizon, so price only the in-window share
+        # when the caller's horizon is unknown: stay conservative at 1
+        return 1.0
+
+    def scaled(self, intensity: float) -> "StepTrace":
+        return replace(self, factor=1.0 + (self.factor - 1.0) * intensity)
+
+
 @lru_cache(maxsize=65536)
 def _neighbor_window(seed: int, inst_key: int, epoch: int,
                      burst_prob: float, epoch_s: float, mean_burst_s: float,

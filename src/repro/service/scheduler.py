@@ -93,6 +93,13 @@ class ServiceConfig:
     #                                     fault-injection layer (None =
     #                                     calm; zero intensity is a
     #                                     tested identity)
+    slo: object = None                  # live SLO monitoring (obs/slo.py):
+    #                                     True = stock objectives, a path =
+    #                                     load_slos(path), or a list of
+    #                                     SLOSpec.  Arms an SLOMonitor on
+    #                                     the obs context (creating a
+    #                                     monitoring context if none is
+    #                                     installed); None = no monitoring.
 
 
 @dataclass
@@ -221,6 +228,7 @@ class _FleetObserver(EngineObserver):
         self._tr = obs.tracer if on else None
         self._mx = obs.metrics if on else None
         self._rec = obs.recorder if on else None
+        self._mon = obs.monitor if obs is not None else None
 
     def should_skip(self, inv) -> bool:
         ex = self.jobs[inv.job_id]
@@ -257,6 +265,11 @@ class _FleetObserver(EngineObserver):
             self._mx.inc("service.billed_s", out.duration_s,
                          tenant=ex.job.tenant, provider=self.profile.name)
         budget = ex.job.budget_usd
+        if self._mon is not None and budget:
+            # SLO progress: cost burn fraction at this delivery instant
+            self._mon.job_event("budget", done.t_end, job=ex.job.job_id,
+                                tenant=ex.job.tenant,
+                                frac=ex.cost_est / budget)
         if (self.preempt and budget is not None and not ex.cancelled
                 and ex.cost_est > budget):
             ex.cancelled = True
@@ -272,6 +285,17 @@ class _FleetObserver(EngineObserver):
                              provider=self.profile.name)
             if self._rec is not None:
                 self._rec.dump("preemption", ts=done.t_end, context=ctx)
+            if self._mon is not None:
+                self._mon.job_event("preempted", done.t_end,
+                                    job=ex.job.job_id,
+                                    tenant=ex.job.tenant)
+        if (self._mon is not None and ex.pending == 0
+                and not ex.preempted):
+            # the job's last invocation just delivered: its SLO clock
+            # stops at end_s (the causal delivery instant in run() can
+            # only be later, and deadlines are judged on end_s)
+            self._mon.job_event("delivered", ex.end_s, job=ex.job.job_id,
+                                tenant=ex.job.tenant)
 
     # ----------------------------------------------- batched delivery
     # The vectorized engine hands completions over as validity-truncated
@@ -436,7 +460,23 @@ class _FleetObserver(EngineObserver):
                                  provider=self.profile.name)
                 if self._rec is not None:
                     self._rec.dump("preemption", ts=ts, context=ctx)
+                if self._mon is not None:
+                    self._mon.job_event("preempted", ts,
+                                        job=ex.job.job_id,
+                                        tenant=ex.job.tenant)
         ex.cost_est = float(cum[-1])
+        if self._mon is not None:
+            # SLO progress at wave granularity: one burn sample per
+            # flushed wave, plus the completion event when it empties
+            if budget:
+                self._mon.job_event("budget", float(te[-1]),
+                                    job=ex.job.job_id,
+                                    tenant=ex.job.tenant,
+                                    frac=ex.cost_est / budget)
+            if ex.pending == 0 and not ex.preempted:
+                self._mon.job_event("delivered", ex.end_s,
+                                    job=ex.job.job_id,
+                                    tenant=ex.job.tenant)
 
     def flush_pairs(self) -> None:
         """Turn wave-accumulated pair columns into each job's `pairs`
@@ -619,6 +659,31 @@ class BenchmarkService:
         self._queued_total = 0
         self._queued_tenant: Dict[str, int] = {}
         self.rejected: List[Tuple[str, str]] = []   # (job_id, reason)
+        if self.cfg.slo is not None:
+            self._arm_slo(self.cfg.slo)
+
+    @staticmethod
+    def _arm_slo(slo) -> None:
+        """`ServiceConfig.slo` plumbing: make sure the obs context has an
+        SLOMonitor armed with the requested specs.  An existing monitor
+        wins (the operator already configured one); an existing passive
+        context gains a monitor sharing its registry; no context at all
+        installs a full monitoring bundle."""
+        from repro.obs import (Observability, SLOMonitor, default_slos,
+                               get_obs, load_slos, set_obs)
+        obs = get_obs()
+        if obs is not None and obs.monitor is not None:
+            return
+        if slo is True:
+            specs = default_slos()
+        elif isinstance(slo, str):
+            specs = load_slos(slo)
+        else:
+            specs = list(slo)
+        if obs is None:
+            set_obs(Observability.monitoring(specs))
+        else:
+            obs.monitor = SLOMonitor(specs, metrics=obs.metrics)
 
     # ------------------------------------------------------------- submit
     def submit(self, job: Job, *, provider: str = "lambda",
@@ -712,6 +777,11 @@ class BenchmarkService:
                       "planned": chosen is not None})
             obs.metrics.inc("service.jobs_submitted", tenant=job.tenant,
                             provider=provider)
+        if obs is not None and obs.monitor is not None:
+            obs.monitor.job_event(
+                "submitted", fleet.clock_s, job=job.job_id,
+                tenant=job.tenant, deadline_s=job.deadline_s,
+                budget_usd=job.budget_usd)
         return SubmitReceipt(job_id=job.job_id, provider=provider,
                              memory_mb=mem, parallelism=par,
                              n_invocations=len(suite_plan.invocations),
@@ -808,6 +878,9 @@ class BenchmarkService:
                     mx.set_gauge("service.budget_burn_frac",
                                  tenant_cost.get(tenant, 0.0) / budget,
                                  tenant=tenant)
+        if obs is not None and obs.monitor is not None:
+            obs.monitor.evaluate(
+                max((r.end_s for r in results), default=0.0))
 
         return ServiceReport(
             results=results,

@@ -22,17 +22,21 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
 
 
-@pytest.fixture(params=["null", "recording"])
+@pytest.fixture(params=["null", "recording", "monitoring"])
 def obs_mode(request):
-    """Runs the test under both observability modes.  Golden tests take
-    this fixture to prove the bit-for-bit contract: digests must be
-    identical with a recording tracer attached.  On teardown the
-    recording variant additionally asserts the run produced a non-empty,
+    """Runs the test under all three observability modes.  Golden tests
+    take this fixture to prove the bit-for-bit contract: digests must be
+    identical with a recording tracer attached AND with live SLO
+    monitoring armed (monitors only read already-computed values; they
+    never draw RNG or reorder deliveries).  On teardown the recording
+    variants additionally assert the run produced a non-empty,
     schema-valid Chrome trace (so 'tracing changed nothing' can never
-    pass vacuously because tracing emitted nothing)."""
+    pass vacuously because tracing emitted nothing), and the monitoring
+    variant asserts the health verdict is well-formed."""
     from repro.obs import (Observability, use_obs, validate_chrome_trace)
-    obs = (Observability.null() if request.param == "null"
-           else Observability.recording())
+    obs = {"null": Observability.null,
+           "recording": Observability.recording,
+           "monitoring": Observability.monitoring}[request.param]()
     with use_obs(obs):
         yield obs
     if obs.enabled:
@@ -40,3 +44,7 @@ def obs_mode(request):
         assert len(doc["traceEvents"]) > 0, \
             "recording run emitted no trace events"
         assert validate_chrome_trace(doc) == []
+    if obs.monitor is not None:
+        health = obs.health()
+        assert health["verdict"] in ("healthy", "warn", "breach")
+        assert isinstance(health["slos"], list)

@@ -1,0 +1,234 @@
+"""Live-monitoring contracts: windowed-ring chunking invariance,
+detector drain-cadence invariance, fleet-percentile sketch merging, and
+the golden incident log on a seeded chaos run.
+
+The first two are the properties that make the monitoring layer safe to
+attach anywhere: HOW samples arrive (scalar dispatch loop vs vectorized
+wave flush) and WHEN closed windows are drained (every dispatch vs once
+per run) must never change a single detector state or alert timestamp —
+only the virtual-time series itself may.
+"""
+import json
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.obs.detectors import (DetectorBank, EWMAZScore, RateSpike,
+                                 StaticThreshold, StuckGauge)
+from repro.obs.metrics import MetricsRegistry, QuantileSketch, WindowedRing
+from repro.obs.report import merge_latency_sketches
+
+
+# ------------------------------------------------- windowed-ring bulk path
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=600.0),
+                min_size=1, max_size=80),
+       st.lists(st.floats(min_value=-5.0, max_value=50.0),
+                min_size=1, max_size=80),
+       st.integers(min_value=0, max_value=2**31))
+def test_windowed_ring_chunking_invariance(ts, vs, chunk_seed):
+    """``observe_many`` over arbitrary chunk boundaries is bit-for-bit
+    the sequential ``observe`` loop — the contract that lets the
+    vectorized engine flush whole waves into the same rings the scalar
+    path feeds one dispatch at a time."""
+    n = min(len(ts), len(vs))
+    ts, vs = ts[:n], vs[:n]
+    ref = WindowedRing(window_s=60.0)
+    for t, v in zip(ts, vs):
+        ref.observe(t, v)
+    rng = random.Random(chunk_seed)
+    ring = WindowedRing(window_s=60.0)
+    i = 0
+    while i < n:
+        j = min(n, i + rng.randint(1, n))
+        ring.observe_many(ts[i:j], vs[i:j])
+        i = j
+    assert ring.series() == ref.series()
+
+
+def test_windowed_ring_single_batch_matches_loop():
+    # the degenerate (deterministic) pin of the property above, including
+    # out-of-order timestamps that revisit an earlier window
+    ts = [5.0, 65.0, 10.0, 130.0, 62.0, 61.0]
+    vs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+    ref = WindowedRing(window_s=60.0)
+    for t, v in zip(ts, vs):
+        ref.observe(t, v)
+    ring = WindowedRing(window_s=60.0)
+    ring.observe_many(ts, vs)
+    assert ring.series() == ref.series()
+    assert ring.window_indices() == [0, 1, 2]
+
+
+# -------------------------------------------------- detector determinism
+
+def _fresh_detector(kind):
+    return {
+        "ewma": lambda: EWMAZScore(value="mean", z_on=4.0, z_off=1.5,
+                                   warmup=4),
+        "spike": lambda: RateSpike(ratio=3.0, clear_ratio=1.5,
+                                   min_count=4, warmup=2),
+        "stuck": lambda: StuckGauge(stuck_windows=4),
+        "static": lambda: StaticThreshold(value="mean", threshold=8.0),
+    }[kind]()
+
+
+def _detector_state(det):
+    return {k: v for k, v in vars(det).items()}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=12.0),
+                min_size=8, max_size=50),
+       st.integers(min_value=0, max_value=2**31),
+       st.sampled_from(["ewma", "spike", "stuck", "static"]))
+def test_detector_drain_cadence_invariance(vals, cadence_seed, kind):
+    """Detector state is a pure function of (series, config, virtual
+    time): draining the bank after every sample, at random times, or
+    once at the end produces identical events and identical internal
+    state.  Monitoring cadence can therefore never perturb a verdict."""
+    window_s = 10.0
+    # close with a spike so most detector kinds have something to say
+    samples = [(i * window_s + 1.0, v) for i, v in enumerate(vals)]
+    samples += [(len(vals) * window_s + 1.0, 100.0)]
+    t_end = (len(vals) + 2) * window_s
+
+    def build():
+        ring = WindowedRing(window_s=window_s)
+        return ring, DetectorBank("s", ring, [_fresh_detector(kind)])
+
+    ring_a, bank_a = build()
+    for t, v in samples:
+        ring_a.observe(t, v)
+    events_a = bank_a.drain(t_end)
+
+    rng = random.Random(cadence_seed)
+    ring_b, bank_b = build()
+    events_b = []
+    for t, v in samples:
+        ring_b.observe(t, v)
+        if rng.random() < 0.5:
+            events_b += bank_b.drain(t)
+    events_b += bank_b.drain(t_end)
+
+    assert events_a == events_b
+    assert (_detector_state(bank_a.detectors[0])
+            == _detector_state(bank_b.detectors[0]))
+
+
+def test_drain_only_feeds_closed_windows_once():
+    ring = WindowedRing(window_s=10.0)
+    det = StaticThreshold(value="mean", threshold=5.0)
+    bank = DetectorBank("s", ring, [det])
+    ring.observe(5.0, 9.0)
+    assert bank.drain(9.0) == []          # window [0,10) not closed yet
+    evs = bank.drain(11.0)
+    assert [e["state"] for e in evs] == ["fire"]
+    assert bank.drain(11.0) == []         # never re-fed
+    assert bank.drain(200.0) == []        # empty windows stay silent
+
+
+# -------------------------------------------- fleet percentile merging
+
+def test_report_merges_fleet_percentiles_by_bucket():
+    """Provider p95/p99 are quantiles of the union of every
+    per-(provider,benchmark) series, not a max over per-series
+    percentiles.  99 fast samples on one benchmark + 1 slow sample on
+    another: the fleet p95 is fast; the old max-of-series aggregation
+    reported the slow outlier."""
+    reg = MetricsRegistry()
+    for _ in range(99):
+        reg.observe("engine.latency_s", 0.01, provider="lambda",
+                    benchmark="fast")
+    reg.observe("engine.latency_s", 10.0, provider="lambda",
+                benchmark="slow")
+    snap = reg.snapshot()
+    merged = merge_latency_sketches(snap)
+    union = QuantileSketch()
+    for _ in range(99):
+        union.observe(0.01)
+    union.observe(10.0)
+    assert merged["lambda"]["count"] == 100
+    assert merged["lambda"]["p95"] == union.quantile(0.95)
+    assert merged["lambda"]["p99"] == union.quantile(0.99)
+    assert merged["lambda"]["p95"] < 1.0          # not the 10s outlier
+    # the pre-fix aggregation — max over per-series percentiles — saw the
+    # single slow sample as the whole fleet's p95
+    naive = max(r["p95"] for r in snap["histograms"]
+                if r["name"] == "engine.latency_s")
+    assert naive > 9.0
+    assert merged["lambda"]["p95"] < naive
+
+
+def test_sketch_merge_commutes_with_observation_order():
+    a, b, union = QuantileSketch(), QuantileSketch(), QuantileSketch()
+    for i in range(50):
+        v = 0.001 * (i + 1) ** 2
+        (a if i % 2 else b).observe(v)
+        union.observe(v)
+    a.merge(b)
+    assert a.count == union.count
+    for q in (0.5, 0.9, 0.95, 0.99):
+        assert a.quantile(q) == union.quantile(q)
+
+
+# ------------------------------------------------ golden incident log
+
+@pytest.fixture(scope="module")
+def storm_health():
+    from repro.obs.watch import run_scenario
+    return run_scenario("timeout_storm", seed=0, quick=True)
+
+
+def test_seeded_chaos_run_is_bit_reproducible(storm_health):
+    from repro.obs.watch import run_scenario
+    again = run_scenario("timeout_storm", seed=0, quick=True)
+    for key in ("verdict", "slos", "alerts", "anomalies", "active",
+                "incidents", "ground_truth", "detection"):
+        assert (json.dumps(storm_health[key], sort_keys=True)
+                == json.dumps(again[key], sort_keys=True)), key
+
+
+def test_golden_incident_log_timeout_storm(storm_health):
+    h = storm_health
+    det = h["detection"]
+    assert h["verdict"] == "warn"
+    assert det["recall"] == 1.0
+    assert det["false_alerts"] == 0
+    assert len(h["incidents"]) == 1
+    inc = h["incidents"][0]
+    assert inc["id"] == "inc-001"
+    assert inc["severity"] == "page"
+    assert (inc["t_start"], inc["t_end"]) == (900.0, 1200.0)
+    # root cause names the breaching signal and joins the chaos layer's
+    # fault instants plus the flight-recorder dump as evidence
+    assert "error_rate" in inc["root_cause"]
+    assert "chaos.storm_timeouts" in inc["root_cause"]
+    assert "flight-recorder dump" in inc["root_cause"]
+    assert inc["evidence"]["instants"]
+    assert inc["evidence"]["dumps"]
+    # ground truth comes from the injection log, not scenario labels
+    (gt,) = h["ground_truth"]
+    assert gt["kind"] == "storm_timeouts"
+    assert 900.0 <= gt["t0"] < gt["t1"] <= 1200.0
+    assert gt["count"] > 0
+    # detection lands within half the incident duration, in virtual time
+    (w,) = det["windows"]
+    assert w["detected"] and w["ttd_s"] <= w["duration_s"] / 2.0
+
+
+def test_calm_twin_stays_silent():
+    from repro.obs.watch import run_scenario
+    h = run_scenario("calm", seed=0, quick=True)
+    assert h["verdict"] == "healthy"
+    assert h["detection"]["signals"] == 0
+    assert h["incidents"] == []
+
+
+def test_health_document_is_strict_json(storm_health):
+    # alerts/anomalies carry detector scores; none may be inf/nan or the
+    # health file stops being machine-readable
+    json.loads(json.dumps(storm_health, allow_nan=False))
