@@ -13,6 +13,11 @@ table's rows) followed by a human-readable summary block per table.
 (N concurrent commit-stream tenants on one shared fleet) instead of the
 tables; with ``--engine fast`` given explicitly the run exits non-zero
 if anything forces the vectorized core to degrade to the scalar loop.
+
+Exit codes follow the shared contract in ``repro.cb.cli``: 3 for a
+strict-fast engine fallback, 4 for an armed-SLO breach, and when both
+fire in one run the winner comes from ``EXIT_PRECEDENCE`` (infeasible 2
+beats fallback 3 beats breach 4).
 """
 from __future__ import annotations
 
@@ -21,15 +26,19 @@ import json
 import sys
 
 
-def _write_obs(args, obs) -> None:
+def _write_obs(args, obs):
+    """Export trace/metrics/health; returns the health dict (None when
+    monitoring is not armed) so the caller can fold an SLO breach into
+    the exit code."""
     if obs is None:
-        return
+        return None
     if args.trace:
         obs.export_trace(args.trace)
         print(f"\ntrace: {len(obs.tracer)} events -> {args.trace}")
     if args.metrics_out:
         obs.export_metrics(args.metrics_out)
         print(f"metrics -> {args.metrics_out}")
+    health = None
     if obs.monitor is not None:
         health = obs.health()
         print(f"slo verdict: {health['verdict']} "
@@ -39,6 +48,7 @@ def _write_obs(args, obs) -> None:
             with open(args.health_out, "w") as f:
                 json.dump(health, f, indent=1, sort_keys=True)
             print(f"health -> {args.health_out}")
+    return health
 
 
 def main(argv=None) -> None:
@@ -86,6 +96,10 @@ def main(argv=None) -> None:
 
     from repro.faas.engine_vec import set_default_engine
     set_default_engine(args.engine)
+    # one exit-code contract across both entry points: the precedence
+    # table and resolver live in repro.cb.cli
+    from repro.cb.cli import (EXIT_BREACH, EXIT_FALLBACK,
+                              resolve_exit_code)
 
     obs = None
     if args.slo or args.trace or args.metrics_out:
@@ -108,13 +122,19 @@ def main(argv=None) -> None:
                                         seed=args.seed, engine=args.engine)
         print(json.dumps(asdict(r), sort_keys=True))
         fallbacks = get_fallback_log()
+        fb = 0
         if strict_fast and fallbacks:
             print("--engine fast was requested but the service run "
                   "degraded to the scalar loop:", file=sys.stderr)
             for reason in sorted(set(fallbacks)):
                 print(f"  {reason}", file=sys.stderr)
-            sys.exit(3)
-        _write_obs(args, obs)
+            fb = EXIT_FALLBACK
+        health = _write_obs(args, obs)
+        breach = (EXIT_BREACH if health is not None
+                  and health["verdict"] == "breach" else 0)
+        code = resolve_exit_code(fb, breach)
+        if code:
+            sys.exit(code)
         return
 
     import benchmarks.paper_tables as paper_tables
@@ -158,7 +178,9 @@ def main(argv=None) -> None:
         for k, v in rows.items():
             print(f"    {k:36s} {v}")
 
-    _write_obs(args, obs)
+    health = _write_obs(args, obs)
+    if health is not None and health["verdict"] == "breach":
+        sys.exit(resolve_exit_code(EXIT_BREACH))
 
 
 if __name__ == "__main__":

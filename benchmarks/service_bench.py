@@ -125,7 +125,7 @@ def _run_scaling_once(engine: str, streams: int, seed: int, *,
 def run_scaling_row(streams: int, seed: int, *, n_calls: int = 25,
                     parallelism: int = 4000, quantum: int = 64,
                     n_boot: int = 250, variant: str = "throughput") -> dict:
-    budget_every = 8 if variant == "budget_preempt" else 0
+    budget_every = {"budget_preempt": 8, "preempt_heavy": 1}.get(variant, 0)
     chaos_seed = seed if variant == "chaos" else None
     out = {}
     for engine in ("fast", "reference"):
@@ -163,6 +163,10 @@ def run_scaling(mode: str, seed: int) -> list:
     if mode == "full":
         rows.append(run_scaling_row(256, seed))
         rows.append(run_scaling_row(256, seed, variant="budget_preempt"))
+        # every tenant budget-capped: with the exact budget-crossing
+        # shadow, volatile lanes compose past the delivery horizon, so
+        # even the all-preemptable fleet keeps its vectorized speedup
+        rows.append(run_scaling_row(256, seed, variant="preempt_heavy"))
         rows.append(run_scaling_row(256, seed, variant="chaos"))
         rows.append(run_scaling_row(256, seed, n_calls=130,
                                     variant="full_scale"))
@@ -191,7 +195,12 @@ def check_scaling(rows: list, baseline_path: str) -> list:
             failures.append(
                 f"scaling {key}: fast/reference speedup "
                 f"{row['speedup']} < {SCALING_MIN_SPEEDUP}")
-        if row["variant"] == "budget_preempt" \
+        if row["variant"] == "preempt_heavy" \
+                and row["speedup"] < SCALING_MIN_SPEEDUP:
+            failures.append(
+                f"scaling {key}: preempt-heavy speedup {row['speedup']} "
+                f"< {SCALING_MIN_SPEEDUP} (budget-shadow regression)")
+        if row["variant"] in ("budget_preempt", "preempt_heavy") \
                 and not row["preempted_jobs"]:
             failures.append(
                 f"scaling {key}: no jobs were preempted (budget "

@@ -23,6 +23,12 @@ and names the reason instead of silently falling back:
         --providers lambda --seed 1
     PYTHONPATH=src python -m repro.cb.cli --commits 6 \
         --deadline 900 --budget 0.25 --seed 1
+
+Failure conditions can co-occur (a multi-provider run may hit an
+infeasible plan on one provider, a strict-fast fallback on another, and
+an SLO breach overall); the process exit code is then resolved
+deterministically by `EXIT_PRECEDENCE`: infeasible (2) beats engine
+fallback (3) beats SLO breach (4).
 """
 from __future__ import annotations
 
@@ -39,6 +45,33 @@ EXIT_INFEASIBLE = 2
 EXIT_FALLBACK = 3       # `--engine fast` was explicit but the run degraded
 EXIT_BREACH = 4         # `--slo` was armed and an objective breached
 
+#: Deterministic winner when failure conditions co-occur, strongest
+#: first.  Infeasible (2) outranks everything: the planner refused, so
+#: nothing downstream is meaningful.  Fallback (3) outranks breach (4):
+#: a strict `--engine fast` run that degraded produced its numbers on
+#: the wrong core, so an SLO verdict measured on them is already
+#: suspect.  Both entry points (`repro.cb.cli`, `benchmarks.run`)
+#: resolve through this table from a single return site.
+EXIT_PRECEDENCE = (EXIT_INFEASIBLE, EXIT_FALLBACK, EXIT_BREACH)
+
+
+def resolve_exit_code(*codes: int) -> int:
+    """Collapse co-occurring failure exit codes into one winner.
+
+    Takes any number of per-condition codes (0 = condition absent) and
+    returns the highest-precedence live one per ``EXIT_PRECEDENCE``; 0
+    when none fired.  A non-zero code outside the table is never
+    swallowed — it wins over 0 in argument order — so a future code
+    added to one caller fails loudly instead of vanishing.
+    """
+    live = [c for c in codes if c]
+    if not live:
+        return 0
+    for known in EXIT_PRECEDENCE:
+        if known in live:
+            return known
+    return live[0]
+
 
 def _stream_for(args, suite, seed: int):
     names = suite.benchmark_names()
@@ -52,7 +85,13 @@ def _stream_for(args, suite, seed: int):
 
 
 def _run_service(args, history, providers, modes) -> int:
-    """--jobs/--deadline/--budget: the service path.  Returns exit code."""
+    """--jobs/--deadline/--budget: the service path.
+
+    Returns the resolved exit code.  Every (provider, mode) cell runs
+    even after an earlier cell failed; conditions accumulate and
+    collapse through `resolve_exit_code`, so the winner is fixed by
+    `EXIT_PRECEDENCE`, never by loop iteration order.
+    """
     from repro.service import (AdmissionError, BenchmarkService,
                                DeadlineCostPlanner, PlannerConfig,
                                ServiceConfig)
@@ -62,6 +101,7 @@ def _run_service(args, history, providers, modes) -> int:
         return EXIT_INFEASIBLE
     n_tenants = max(args.jobs, 1)
     planned = args.deadline is not None or args.budget is not None
+    codes = []
     for provider in providers:
         # the planner is constrained to the loop's provider so each
         # summary line answers "what would this provider cost" instead of
@@ -99,7 +139,8 @@ def _run_service(args, history, providers, modes) -> int:
                     pipelines.append((pipe, pending))
             except AdmissionError as exc:
                 print(f"infeasible: {exc}", file=sys.stderr)
-                return EXIT_INFEASIBLE
+                codes.append(EXIT_INFEASIBLE)
+                continue
             from repro.faas.engine_vec import (get_fallback_log,
                                               reset_fallback_log)
             reset_fallback_log()
@@ -110,7 +151,9 @@ def _run_service(args, history, providers, modes) -> int:
                       "to the scalar loop:", file=sys.stderr)
                 for reason in sorted(set(fallbacks)):
                     print(f"  {reason}", file=sys.stderr)
-                return EXIT_FALLBACK
+                # record the condition but still print the summary: the
+                # numbers exist, the exit code says how far to trust them
+                codes.append(EXIT_FALLBACK)
             reports = [p.collect_service(pend) for p, pend in pipelines]
             summary = {
                 "suite": args.suite, "provider": provider, "mode": mode,
@@ -131,7 +174,7 @@ def _run_service(args, history, providers, modes) -> int:
                 summary["planned_provider"] = r0.provider
                 summary["planned_memory_mb"] = r0.memory_mb
             print(json.dumps(summary, sort_keys=True))
-    return 0
+    return resolve_exit_code(*codes)
 
 
 def main(argv=None) -> int:
@@ -279,8 +322,8 @@ def main(argv=None) -> int:
                 with open(args.health_out, "w") as f:
                     json.dump(health, f, indent=1, sort_keys=True)
                 print(f"health -> {args.health_out}", file=sys.stderr)
-            if code == 0 and health["verdict"] == "breach":
-                code = EXIT_BREACH
+            breach = EXIT_BREACH if health["verdict"] == "breach" else 0
+            code = resolve_exit_code(code, breach)
     return code
 
 

@@ -259,6 +259,30 @@ class EngineObserver:
         must stay behind the horizon.  Conservative default: True."""
         return True
 
+    # Exact skip shadow (vectorized engine).  An observer that sets
+    # `skip_exact = True` promises `skip_flip_s` returns the *exact*
+    # earliest delivery instant at which `peek_skip(inv)` would flip to
+    # True given every completion the engine has fed to `skip_shadow`
+    # but not yet delivered (math.inf when no buffered delivery can
+    # flip it).  The engine may then compose a volatile lane past the
+    # frozen-observer horizon whenever the flip provably lands after
+    # the lane's scalar check time.
+    skip_exact = False
+
+    def skip_shadow(self, combo, t_end, duration_s, combo_bench,
+                    combo_job) -> None:
+        """Shadow feed (vectorized engine, `skip_exact` only): the
+        engine hands over every completion chunk it buffers, in buffer
+        order, *before* delivery.  `combo` indexes `combo_bench` /
+        `combo_job`; delivery later follows global (t_end, buffer
+        order)."""
+
+    def skip_flip_s(self, inv: Invocation) -> float:
+        """Exact earliest t_end among shadowed-but-undelivered
+        completions whose delivery flips `peek_skip(inv)` to True;
+        math.inf when none can."""
+        return math.inf
+
     def on_result(self, done: CompletedInvocation) -> None:
         """Called once per invocation with its final attempt (retried
         platform failures are not delivered individually); failures are

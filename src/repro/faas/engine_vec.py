@@ -624,8 +624,17 @@ class _VecRun:
             self.evq: List[dict] = []
             self.evn = 0
             self.ev_min = math.inf
+            # exact-shadow observers mirror buffered completions, so
+            # volatile lanes compose past the delivery horizon whenever
+            # the shadow proves the flip lands after their check time
+            self.shadow = bool(self.skipmode and self.multi
+                               and not self.vm
+                               and not cfg.hedge_after_factor > 0
+                               and getattr(self.observer,
+                                           "skip_exact", False))
         else:
             self.skipmode = False
+            self.shadow = False
         self.wall = 0.0
         self.cold_starts = self.timeouts = self.failures = 0
         self.done_n = self.failed_n = self.retries_n = self.hedged = 0
@@ -706,6 +715,9 @@ class _VecRun:
         m = float(te.min())
         if m < self.ev_min:
             self.ev_min = m
+        if self.shadow:
+            self.observer.skip_shadow(chunk["b"], te, chunk["dur"],
+                                      self.names, self.cjob)
 
     @staticmethod
     def _gather_pairs(pv1, pv2, off, cnt):
@@ -845,7 +857,18 @@ class _VecRun:
         Non-volatile lanes compose past the horizon: a constant-False
         answer cannot change, and a True answer is monotone by the
         wave-eligibility contract.  Trailing cancelled entries past the
-        last lane are safe to consume for the same reason."""
+        last lane are safe to consume for the same reason.
+
+        With an exact-shadow observer (`skip_exact`), a volatile lane
+        also composes past the horizon whenever `skip_flip_s` proves
+        the flip lands strictly after st[j]: buffered deliveries up to
+        st[j] cannot flip it, and completions of lanes composed earlier
+        in this wave cannot land by st[j] inside the committed prefix
+        (`_validity` truncates the wave at the first such crossing), so
+        the False preview equals the scalar decision.  When the flip
+        lands at or before st[j] the wave still breaks: the flip is
+        delivered for real by the next compose-time flush and the entry
+        consumed as an ordinary skip then."""
         obs = self.observer
         invs = self.plan.invocations
         st = self.slot_t                  # sorted (elastic, non-walk)
@@ -876,7 +899,9 @@ class _VecRun:
                     skips.append(pos)
                     pos += 1
                     continue
-                if bmin <= st[j] and obs.skip_volatile(inv):
+                if (bmin <= st[j] and obs.skip_volatile(inv)
+                        and (not self.shadow
+                             or obs.skip_flip_s(inv) <= st[j])):
                     break
                 gl.append(c + pos)
                 al.append(0)

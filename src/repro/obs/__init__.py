@@ -66,7 +66,8 @@ from typing import Optional
 
 from repro.obs.detectors import (DetectorBank, EWMAZScore, RateSpike,
                                  StaticThreshold, StuckGauge)
-from repro.obs.incidents import IncidentLog, render_incidents
+from repro.obs.incidents import (IncidentLog, incident_scope,
+                                 render_incidents)
 from repro.obs.metrics import MetricsRegistry, QuantileSketch, WindowedRing
 from repro.obs.recorder import FlightRecorder
 from repro.obs.slo import SLOMonitor, SLOSpec, default_slos, load_slos
@@ -182,6 +183,7 @@ __all__ = [
     "MetricsRegistry", "NullTracer", "Observability", "QuantileSketch",
     "RateSpike", "RecordingTracer", "SLOMonitor", "SLOSpec",
     "StaticThreshold", "StuckGauge", "WindowedRing", "default_slos",
-    "events_to_chrome", "get_obs", "load_slos", "render_incidents",
+    "events_to_chrome", "get_obs", "incident_scope", "load_slos",
+    "render_incidents",
     "set_obs", "use_obs", "validate_chrome_trace", "write_chrome_trace",
 ]

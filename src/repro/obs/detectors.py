@@ -86,27 +86,47 @@ class EWMAZScore(Detector):
     (z_off < z_on), so a value oscillating around the trigger does not
     flap.  The baseline is frozen while alerting — an incident must not
     teach the detector that broken is normal.
+
+    Release path: while alerting, a *recovery shadow* (an EWMA resumed
+    from the frozen state) keeps tracking the signal.  When the signal
+    sits within ``z_off`` shadow-sigmas for ``settle_windows``
+    consecutive windows — it has settled, whether back at the old
+    normal or at a *new* steady level — hysteresis releases: the clear
+    is emitted and the shadow is adopted as the baseline.  Resuming
+    from the frozen values directly would re-fire immediately on the
+    stale z-score whenever the settled level differs from the
+    pre-incident one, flapping an endless episode per
+    ``settle_windows``; adoption makes a settled step exactly one
+    fire/clear episode.
     """
 
     name = "ewma_z"
 
     def __init__(self, value: str = "mean", alpha: float = 0.3,
                  z_on: float = 4.0, z_off: float = 1.5,
-                 warmup: int = 5, min_sigma: float = 1e-9):
+                 warmup: int = 5, min_sigma: float = 1e-9,
+                 settle_windows: int = 8):
         super().__init__(value)
         if not 0 < alpha <= 1:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         if z_off >= z_on:
             raise ValueError(f"need z_off < z_on, got {z_off} >= {z_on}")
+        if settle_windows < 1:
+            raise ValueError(
+                f"settle_windows must be >= 1, got {settle_windows}")
         self.alpha = alpha
         self.z_on = z_on
         self.z_off = z_off
         self.warmup = warmup
         self.min_sigma = min_sigma
+        self.settle_windows = settle_windows
         self._mean = 0.0
         self._m2 = 0.0        # Welford sum of squared deviations (warmup)
         self._var = 0.0       # EWMA variance (after warmup)
         self._seen = 0
+        self._sh_mean = 0.0   # recovery shadow (tracks while alerting)
+        self._sh_var = 0.0
+        self._settled = 0
 
     def update(self, w: int, window_s: float, agg: Agg) -> Optional[dict]:
         x = _extract(self.value, window_s, agg)
@@ -126,8 +146,31 @@ class EWMAZScore(Detector):
         ev = None
         if not self.alerting and abs(z) >= self.z_on:
             ev = self._event("fire", w, window_s, x, self._mean, z)
+            # seed the recovery shadow from the frozen state: it keeps
+            # updating while the judged baseline stays frozen
+            self._sh_mean, self._sh_var = self._mean, self._var
+            self._settled = 0
         elif self.alerting and abs(z) <= self.z_off:
+            # ordinary release: the signal came back to the old normal
             ev = self._event("clear", w, window_s, x, self._mean, z)
+        elif self.alerting:
+            ssig = max(self.min_sigma, math.sqrt(self._sh_var))
+            sz = (x - self._sh_mean) / ssig
+            self._settled = self._settled + 1 if abs(sz) <= self.z_off \
+                else 0
+            if self._settled >= self.settle_windows:
+                # settled at a new steady level: release and adopt the
+                # shadow, so updates resume from the frozen state's
+                # continuation instead of re-judging against the stale
+                # pre-incident mean (which would re-fire immediately)
+                ev = self._event("clear", w, window_s, x, self._sh_mean,
+                                 sz)
+                self._mean, self._var = self._sh_mean, self._sh_var
+            else:
+                d = x - self._sh_mean
+                self._sh_mean += self.alpha * d
+                self._sh_var = ((1 - self.alpha) * self._sh_var
+                                + self.alpha * d * d)
         if not self.alerting:
             # EWMA tracking; frozen while alerting so the incident does
             # not teach the detector that broken is normal

@@ -97,7 +97,11 @@ class IncidentLog:
         if any(a["state"] == "breach" for a in rows):
             severity = "page"
         evidence = self._evidence(t0, t1, trace_events, dumps)
-        return {"id": f"inc-{idx + 1:03d}",
+        # an incident is *open* while any of its fire intervals is still
+        # waiting for its clear — the re-plan controller defers elastic
+        # admission exactly while this flag is up
+        is_open = any(iv.get("cleared") is False for iv in cluster)
+        return {"id": f"inc-{idx + 1:03d}", "open": is_open,
                 "t_start": t0, "t_end": t1, "severity": severity,
                 "alerts": [a for a in rows if a.get("type") == "slo"],
                 "anomalies": [a for a in rows
@@ -167,6 +171,24 @@ class IncidentLog:
         return out
 
 
+def incident_scope(incident: dict) -> Dict[str, List[str]]:
+    """Entities an incident's clustered signals name, extracted from
+    their labels: ``{"providers": [...], "tenants": [...], "jobs":
+    [...]}`` (sorted, possibly empty).  The re-plan controller uses the
+    provider scope to steer migrations *away* from the incident."""
+    provs, tens, jobs = set(), set(), set()
+    for row in incident.get("alerts", []) + incident.get("anomalies", []):
+        lb = row.get("labels") or {}
+        if lb.get("provider"):
+            provs.add(str(lb["provider"]))
+        if lb.get("tenant"):
+            tens.add(str(lb["tenant"]))
+        if lb.get("job"):
+            jobs.add(str(lb["job"]))
+    return {"providers": sorted(provs), "tenants": sorted(tens),
+            "jobs": sorted(jobs)}
+
+
 def render_incidents(incidents: List[dict]) -> str:
     """Text block for repro.obs.report's incident section."""
     if not incidents:
@@ -185,4 +207,4 @@ def render_incidents(incidents: List[dict]) -> str:
     return "\n".join(lines)
 
 
-__all__ = ["IncidentLog", "render_incidents"]
+__all__ = ["IncidentLog", "incident_scope", "render_incidents"]

@@ -203,6 +203,16 @@ class _DeadlineEval(_Evaluator):
         st = self._jobs.get(job)
         if st is None:
             return []
+        if kind == "deadline_renegotiated":
+            # the re-plan controller agreed new terms with the tenant:
+            # the objective tracks the renegotiated horizon (and re-arms
+            # the at-risk warning for it) instead of hard-breaching the
+            # terms that no longer exist
+            new_dl = float(ev.get("deadline_s") or 0.0)
+            if new_dl > 0:
+                st[1] = new_dl
+                st[3] = False
+            return []
         if kind == "delivered":
             del self._jobs[job]
             elapsed = float(ev["t"]) - st[0]
@@ -612,6 +622,24 @@ class SLOMonitor:
                 self.alerts.append(a)
                 fresh.append(a)
         return fresh
+
+    # --------------------------------------------------------------- feed
+    def alert_feed(self, cursor: Tuple[int, int] = (0, 0)
+                   ) -> Tuple[List[dict], Tuple[int, int]]:
+        """Controller-consumable feed: the alert + anomaly rows recorded
+        since ``cursor``, merged into one chronological stream, plus the
+        new cursor.  Rows are the monitor's own records (not copies) —
+        consumers must treat them as read-only.  The cursor is a plain
+        ``(n_alerts_seen, n_anomalies_seen)`` pair, so feeding is
+        idempotent and independent of *when* the consumer polls: any
+        polling cadence yields the same cumulative stream (the property
+        the online re-planner's determinism rests on)."""
+        a0, n0 = cursor
+        fresh = self.alerts[a0:] + self.anomalies[n0:]
+        fresh.sort(key=lambda r: (r["t"],
+                                  r.get("slo") or r.get("detector") or "",
+                                  r.get("state", "")))
+        return fresh, (len(self.alerts), len(self.anomalies))
 
     # ----------------------------------------------------------- verdict
     def breaches(self) -> List[dict]:

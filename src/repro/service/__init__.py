@@ -17,6 +17,11 @@ layer, stacked on the PR-1 engine and the PR-2 pipeline:
                   onto per-provider engine fleets with shared warm pools,
                   over-budget preemption, and causally ordered result
                   delivery back to each tenant
+    replan.py     online re-planning: the monitoring plane's alert feed
+                  closed-loop into the scheduler — migration off degraded
+                  providers, retry hedging under timeout storms, elastic
+                  admission deferral, deadline renegotiation, and
+                  resumption of preempted jobs from partial progress
 
 Everything is deterministic: the same seed produces identical plans,
 schedules, and bills (golden-digest tested).
@@ -28,6 +33,7 @@ from repro.service.planner import (CandidatePlan, DeadlineCostPlanner,
                                    InfeasiblePlanError, PlannerConfig,
                                    pareto_frontier)
 from repro.service.queue import FairQueue
+from repro.service.replan import ReplanConfig, ReplanController
 from repro.service.scheduler import (BenchmarkService, ServiceConfig,
                                      ServiceReport)
 
@@ -36,5 +42,6 @@ __all__ = [
     "JOB_COMPLETED", "JOB_PREEMPTED", "JOB_QUEUED", "JOB_REJECTED",
     "CandidatePlan", "DeadlineCostPlanner", "InfeasiblePlanError",
     "PlannerConfig", "pareto_frontier", "FairQueue",
+    "ReplanConfig", "ReplanController",
     "BenchmarkService", "ServiceConfig", "ServiceReport",
 ]

@@ -31,8 +31,8 @@ maps it to a non-zero exit code (infeasibility used to be silent).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.autotune import SuiteMemoryPlan, autotune_suite_memory
 from repro.core.rmit import Invocation
@@ -347,6 +347,68 @@ class DeadlineCostPlanner:
                       "deadline_s": deadline_s, "budget_usd": budget_usd,
                       "n_candidates": len(cands)})
             obs.metrics.inc("planner.plans", provider=chosen.provider)
+        return chosen
+
+    # -------------------------------------------------------------- replan
+    def replan(self, workloads: Dict, *,
+               completed: Sequence[str] = (),
+               spent_usd: float = 0.0, elapsed_s: float = 0.0,
+               deadline_s: Optional[float] = None,
+               budget_usd: Optional[float] = None, seed: int = 0,
+               providers: Optional[Sequence[str]] = None,
+               slowdown: Optional[Mapping[str, float]] = None
+               ) -> CandidatePlan:
+        """Incremental re-plan from partial progress.
+
+        Plans only the *remaining* suite (``workloads`` minus
+        ``completed``) against the *remaining* deadline and budget:
+        already-billed cost (``spent_usd``) and elapsed virtual time
+        (``elapsed_s``) are sunk — they shrink the constraints but are
+        not re-optimized.  ``slowdown`` is a per-provider recalibration
+        factor from *measured* behavior (e.g. windowed latency rings
+        during an incident): candidate makespans and costs for provider
+        P are scaled by ``slowdown[P]`` before selection — a first-order
+        correction that keeps the curve caches valid while pricing in
+        live drift.
+
+        Monotonicity carries over from `choose`: scaling is per-provider
+        and constant across a provider's candidates, so a larger
+        remaining deadline still never selects a more expensive plan.
+        Raises `InfeasiblePlanError` when the remaining constraints admit
+        no candidate, and `ValueError` when nothing remains to plan."""
+        remaining = {n: w for n, w in workloads.items()
+                     if n not in set(completed)}
+        if not remaining:
+            raise ValueError("replan with no remaining workloads")
+        rem_deadline = (None if deadline_s is None
+                        else max(0.0, deadline_s - elapsed_s))
+        rem_budget = (None if budget_usd is None
+                      else max(0.0, budget_usd - spent_usd))
+        cands = self.candidates(remaining, seed=seed, providers=providers)
+        if slowdown:
+            cands = [replace(c,
+                             predicted_wall_s=(c.predicted_wall_s
+                                               * slowdown.get(c.provider,
+                                                              1.0)),
+                             predicted_cost_usd=(c.predicted_cost_usd
+                                                 * slowdown.get(c.provider,
+                                                                1.0)))
+                     for c in cands]
+        chosen = self.choose(cands, deadline_s=rem_deadline,
+                             budget_usd=rem_budget)
+        from repro.obs import get_obs
+        obs = get_obs()
+        if obs is not None and obs.enabled:
+            obs.tracer.instant(
+                "replan", cat="planner", ts=elapsed_s, pid="planner",
+                tid="decisions",
+                args={"chosen": chosen.label,
+                      "remaining_benchmarks": len(remaining),
+                      "sunk_usd": spent_usd, "elapsed_s": elapsed_s,
+                      "deadline_s": rem_deadline, "budget_usd": rem_budget,
+                      "slowdown": dict(slowdown or {}),
+                      "n_candidates": len(cands)})
+            obs.metrics.inc("planner.replans", provider=chosen.provider)
         return chosen
 
 

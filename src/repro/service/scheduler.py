@@ -26,7 +26,11 @@ Service-level policies on top of the engine:
     partial results still delivered, marked `preempted`);
   * causally ordered delivery — each tenant receives its JobResults in
     submission order, at virtual times that never precede the results
-    they contain (a tenant's commit N+1 can never land before commit N).
+    they contain (a tenant's commit N+1 can never land before commit N);
+  * online re-planning (replan.py, opt-in via `attach_controller`) —
+    admission-time migration off degraded providers, retry hedging under
+    timeout storms, elastic deferral while incidents are open, deadline
+    renegotiation, and resumption of preempted jobs at round boundaries.
 
 Determinism: same submissions + same seeds => identical dispatch order,
 schedules, bills, and delivery order (`ServiceReport.digest()` is golden-
@@ -35,6 +39,7 @@ tested at 16+ concurrent jobs).
 from __future__ import annotations
 
 import hashlib
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -92,7 +97,12 @@ class ServiceConfig:
     #                                     every fleet's router in the
     #                                     fault-injection layer (None =
     #                                     calm; zero intensity is a
-    #                                     tested identity)
+    #                                     tested identity).  A dict maps
+    #                                     provider name -> ChaosConfig so
+    #                                     an incident can be scoped to
+    #                                     one provider while the others
+    #                                     stay calm (the re-planner's
+    #                                     migration-target scenario).
     slo: object = None                  # live SLO monitoring (obs/slo.py):
     #                                     True = stock objectives, a path =
     #                                     load_slos(path), or a list of
@@ -216,10 +226,22 @@ class _FleetObserver(EngineObserver):
     skipped before dispatch, so they are neither executed nor billed)."""
 
     def __init__(self, jobs: Dict[str, _JobExec], profile: ProviderProfile,
-                 preempt: bool):
+                 preempt: bool, controller=None):
         self.jobs = jobs
         self.profile = profile
         self.preempt = preempt
+        # re-plan hook: the controller gets a read-only pulse at every
+        # delivery boundary (scalar: per event; vectorized: per wave).
+        # Pulses only advance the monitor and the controller's trigger
+        # state — actions are committed at admission / round boundaries,
+        # so an armed controller with no open trigger perturbs nothing.
+        self._ctrl = controller
+        # exact budget shadow (skip_exact): per budget-job pending
+        # completions the engine has buffered but not yet delivered,
+        # each as (t_end, buffer_seq, cost) kept in delivery order
+        self._shadow: Dict[str, List[tuple]] = {}
+        self._shseq = 0
+        self._flip: Dict[str, float] = {}   # memoized skip_flip_s
         # resolved once per batch (one observer per fleet run); emission
         # below only reads values already computed by the engine/backend
         from repro.obs import get_obs
@@ -296,6 +318,8 @@ class _FleetObserver(EngineObserver):
             # only be later, and deadlines are judged on end_s)
             self._mon.job_event("delivered", ex.end_s, job=ex.job.job_id,
                                 tenant=ex.job.tenant)
+        if self._ctrl is not None:
+            self._ctrl.pulse(self.profile.name, done.t_end)
 
     # ----------------------------------------------- batched delivery
     # The vectorized engine hands completions over as validity-truncated
@@ -325,14 +349,14 @@ class _FleetObserver(EngineObserver):
         ex = self.jobs[inv.job_id]
         return ex.job.budget_usd is not None and not ex.cancelled
 
-    def _build_ctab(self, wave) -> None:
+    def _build_ctab(self, cb, cj, iid_prefix) -> None:
         """Per-combo lookup tables ((job, benchmark) pairs are fixed for
         the whole engine run, so this happens once per fleet batch)."""
         import numpy as np
-        cb, cj = wave.combo_bench, wave.combo_job
         jids = list(dict.fromkeys(cj))
         jof = {j: i for i, j in enumerate(jids)}
         self._jlist = [self.jobs[j] for j in jids]
+        self._jids = jids
         C = len(cb)
         # memory/cpu-share from the same Python-number calls the scalar
         # path makes, so the per-event cost factors match bitwise
@@ -348,23 +372,18 @@ class _FleetObserver(EngineObserver):
                         np.int64, C),
             tens,
         )
-        self._prefix = wave.iid_prefix
+        self._budgeted = np.array(
+            [ex.job.budget_usd is not None for ex in self._jlist], bool)
+        self._prefix = iid_prefix
         self._names = list(cb)
 
-    def on_wave(self, wave) -> None:
-        if wave.combo_job is None:      # not a routed fleet: per-event
-            EngineObserver.on_wave(self, wave)
-            return
+    def _cost_ev(self, combo, durs):
+        """Per-event cost == billed_cost([d], mem): same ops, same
+        order (shared by delivery accounting and the budget shadow, so
+        shadowed and delivered costs match bitwise)."""
         import numpy as np
-        if len(wave) == 0:
-            return
-        if getattr(self, "_ctab", None) is None:
-            self._build_ctab(wave)
-        cjid, mem_c, share_c, ctc, tens = self._ctab
-        combo = wave.combo
-        durs = wave.duration_s
+        _, mem_c, share_c, _, _ = self._ctab
         p = self.profile
-        # per-event cost == billed_cost([d], mem): same ops, same order
         g, m = p.billing_granularity_s, p.min_billed_s
         rb = durs
         if g or m:
@@ -376,6 +395,82 @@ class _FleetObserver(EngineObserver):
         if p.per_ghz_second:
             cost_ev = cost_ev + (rb * p.cpu_base_ghz * share_c[combo]
                                  * p.per_ghz_second)
+        return cost_ev
+
+    # ------------------------------------------- exact budget shadow
+    # The vectorized engine buffers completions until the virtual clock
+    # reaches them; until delivery, a budget job's cancellation flip is
+    # invisible to `peek_skip`.  The shadow mirrors those buffered
+    # events' costs so `skip_flip_s` can answer the *exact* delivery
+    # instant of the budget crossing: costs are computed with the same
+    # elementwise ops as delivery accounting, and the running sum walks
+    # pending events in (t_end, buffer order) — exactly the engine's
+    # global flush order restricted to this job — so the crossing index
+    # matches `_job_wave`'s cumsum crossing bit for bit.
+    skip_exact = True
+
+    def skip_shadow(self, combo, t_end, duration_s, combo_bench,
+                    combo_job) -> None:
+        if not self.preempt:
+            return
+        import numpy as np
+        from bisect import insort
+        if getattr(self, "_ctab", None) is None:
+            self._build_ctab(combo_bench, combo_job, "i")
+        cjid = self._ctab[0]
+        jev = cjid[combo]
+        tr = self._budgeted[jev]
+        seq0 = self._shseq
+        self._shseq = seq0 + int(combo.shape[0])
+        if not tr.any():
+            return
+        cost = self._cost_ev(combo, duration_s)
+        for n in np.flatnonzero(tr).tolist():
+            jid = self._jids[int(jev[n])]
+            pend = self._shadow.get(jid)
+            if pend is None:
+                pend = self._shadow[jid] = []
+            # chunks arrive in buffer order but t_end within a chunk is
+            # unsorted; keep per-job pending in delivery order
+            insort(pend, (float(t_end[n]), seq0 + n, float(cost[n])))
+            self._flip.pop(jid, None)
+
+    def skip_flip_s(self, inv) -> float:
+        jid = inv.job_id
+        hit = self._flip.get(jid)
+        if hit is not None:
+            return hit
+        ex = self.jobs[jid]
+        budget = ex.job.budget_usd
+        ts = math.inf
+        pend = self._shadow.get(jid)
+        if pend and budget is not None and not ex.cancelled:
+            # sequential float adds == np.cumsum: the partial sums match
+            # the delivery-time crossing check bitwise
+            c = ex.cost_est
+            for te, _seq, cost in pend:
+                c = c + cost
+                if c > budget:
+                    ts = te
+                    break
+        self._flip[jid] = ts
+        return ts
+
+    def on_wave(self, wave) -> None:
+        if wave.combo_job is None:      # not a routed fleet: per-event
+            EngineObserver.on_wave(self, wave)
+            return
+        import numpy as np
+        if len(wave) == 0:
+            return
+        if getattr(self, "_ctab", None) is None:
+            self._build_ctab(wave.combo_bench, wave.combo_job,
+                             wave.iid_prefix)
+        cjid, mem_c, share_c, ctc, tens = self._ctab
+        combo = wave.combo
+        durs = wave.duration_s
+        p = self.profile
+        cost_ev = self._cost_ev(combo, durs)
         jev = cjid[combo]
         order = np.argsort(jev, kind="stable")
         cuts = np.flatnonzero(np.diff(jev[order])) + 1
@@ -398,10 +493,18 @@ class _FleetObserver(EngineObserver):
             for t in tu[np.argsort(tfirst)].tolist():
                 self._mx.inc_seq("service.billed_s", durs[tev == t],
                                  tenant=tens[t], provider=p.name)
+        if self._ctrl is not None:
+            self._ctrl.pulse(p.name, float(wave.t_end.max()))
 
     def _job_wave(self, ex: "_JobExec", wave, idx, durs, cost_ev) -> None:
         import numpy as np
         k = int(idx.shape[0])
+        pend = self._shadow.get(ex.job.job_id)
+        if pend:
+            # delivery follows global (t_end, buffer order): the wave's
+            # events for this job are exactly the pending prefix
+            del pend[:k]
+            self._flip.pop(ex.job.job_id, None)
         ex.pending -= k
         ex.n_done += k
         te = wave.t_end[idx]
@@ -515,7 +618,8 @@ class _FleetObserver(EngineObserver):
 class _Fleet:
     """One provider fleet: engine + persistent warm pool + fair queue."""
 
-    def __init__(self, provider: str, parallelism: int, cfg: ServiceConfig):
+    def __init__(self, provider: str, parallelism: int, cfg: ServiceConfig,
+                 *, max_retries: Optional[int] = None):
         if provider == VM_PROVIDER:
             raise ValueError("the service schedules elastic FaaS fleets; "
                              "the VM baseline runs standalone")
@@ -525,17 +629,23 @@ class _Fleet:
         self.profile = PROVIDER_PROFILES[provider]
         self.router = _JobRouterBackend(self.profile)
         backend = self.router
-        if cfg.chaos is not None:
+        chaos = cfg.chaos
+        if isinstance(chaos, dict):
+            chaos = chaos.get(provider)     # provider-scoped scenarios
+        self.chaos_backend = None
+        if chaos is not None:
             # chaos wraps the whole fleet: faults hit jobs of every
             # tenant through one shared (seeded) scenario, exactly like
             # a real provider incident; the per-invocation fault RNG is
             # keyed by job id so tenants stay mutually deterministic
             from repro.faas.chaos import ChaosBackend
-            backend = ChaosBackend(self.router, cfg.chaos)
+            backend = self.chaos_backend = ChaosBackend(self.router, chaos)
         from repro.faas.engine_vec import make_engine
+        self.max_retries = (cfg.max_retries if max_retries is None
+                            else max_retries)
         self.engine = make_engine(
             backend, EngineConfig(parallelism=parallelism,
-                                  max_retries=cfg.max_retries),
+                                  max_retries=self.max_retries),
             engine=cfg.engine)
         self.warm_pool = WarmPool()
         self.queue = FairQueue(weights=dict(cfg.tenant_weights))
@@ -566,7 +676,8 @@ class _Fleet:
             self.queue.push(ex.job.tenant, group, size=group_est,
                             weight_scale=ex.job.priority)
 
-    def run(self, cfg: ServiceConfig) -> List[_JobExec]:
+    def run(self, cfg: ServiceConfig,
+            controller=None) -> List[_JobExec]:
         """Execute everything queued; returns the jobs of this batch."""
         order = [inv for _, grp in self.queue.drain() for inv in grp]
         batch = [ex for ex in self.jobs.values() if ex.result is None]
@@ -575,7 +686,8 @@ class _Fleet:
         plan = SuitePlan(invocations=tuple(order), n_calls=0,
                          repeats_per_call=0)
         observer = _FleetObserver(self.jobs, self.profile,
-                                  cfg.preempt_over_budget)
+                                  cfg.preempt_over_budget,
+                                  controller=controller)
         rep = self.engine.run(plan, observer=observer,
                               warm_pool=self.warm_pool,
                               start_s=self.clock_s)
@@ -654,13 +766,24 @@ class BenchmarkService:
                  planner: Optional[DeadlineCostPlanner] = None):
         self.cfg = cfg or ServiceConfig()
         self.planner = planner
-        self._fleets: Dict[Tuple[str, int], _Fleet] = {}
+        self._fleets: Dict[tuple, _Fleet] = {}
         self._submit_seq = 0
         self._queued_total = 0
         self._queued_tenant: Dict[str, int] = {}
         self.rejected: List[Tuple[str, str]] = []   # (job_id, reason)
+        self.controller = None          # online re-planner (replan.py)
         if self.cfg.slo is not None:
             self._arm_slo(self.cfg.slo)
+
+    def attach_controller(self, controller):
+        """Arm an online re-plan controller (service/replan.py): it is
+        consulted at admission (migrate / hedge / defer), pulsed read-only
+        at delivery boundaries, and given the floor at round boundaries
+        (renegotiation + preempted-job resumption).  Returns the bound
+        controller."""
+        self.controller = controller
+        controller.bind(self)
+        return controller
 
     @staticmethod
     def _arm_slo(slo) -> None:
@@ -699,12 +822,50 @@ class BenchmarkService:
         from dataclasses import replace
         cfg = self.cfg
         chosen: Optional[CandidatePlan] = None
+        retries: Optional[int] = None
         try:
             # cheap capacity gate first (don't plan for a full queue) ...
             check_admission(job, cfg.admission,
                             queued_total=self._queued_total,
                             queued_tenant=self._queued_tenant.get(job.tenant,
                                                                   0))
+            # ... then elastic admission: while an incident is open the
+            # controller may steer the job off the sick provider, arm
+            # retry hedging against a timeout storm, or defer it whole
+            if self.controller is not None:
+                d = self.controller.admission(job, provider=provider,
+                                              providers=providers)
+                if d:
+                    if d.get("defer"):
+                        self.controller.hold(
+                            job, reason=d["defer"],
+                            kwargs=dict(provider=provider,
+                                        memory_mb=memory_mb,
+                                        memory_map=memory_map,
+                                        parallelism=parallelism,
+                                        providers=providers))
+                        now = self._clock()
+                        from repro.obs import get_obs
+                        obs = get_obs()
+                        if obs is not None and obs.enabled:
+                            obs.tracer.instant(
+                                "admission_defer", cat="service", ts=now,
+                                pid="tenants", tid=job.tenant,
+                                args={"job": job.job_id,
+                                      "reason": d["defer"]})
+                            obs.metrics.inc("service.deferrals",
+                                            tenant=job.tenant)
+                        if obs is not None and obs.monitor is not None:
+                            obs.monitor.job_event("deferred", now,
+                                                  job=job.job_id,
+                                                  tenant=job.tenant)
+                        return SubmitReceipt(job_id=job.job_id,
+                                             provider="deferred",
+                                             memory_mb=0, parallelism=0,
+                                             n_invocations=0)
+                    provider = d.get("provider", provider)
+                    providers = d.get("providers", providers)
+                    retries = d.get("retries", retries)
             if (self.planner is not None
                     and (job.deadline_s is not None
                          or job.budget_usd is not None)):
@@ -751,7 +912,7 @@ class BenchmarkService:
 
         mem = memory_mb if memory_mb is not None else cfg.memory_mb
         par = parallelism if parallelism is not None else cfg.parallelism
-        fleet = self._fleet(provider, par)
+        fleet = self._fleet(provider, par, max_retries=retries)
         backend = SimFaaSBackend(job.workloads, fleet.profile,
                                  memory_mb=mem, seed=job.seed,
                                  memory_map=memory_map)
@@ -782,25 +943,42 @@ class BenchmarkService:
                 "submitted", fleet.clock_s, job=job.job_id,
                 tenant=job.tenant, deadline_s=job.deadline_s,
                 budget_usd=job.budget_usd)
+        if self.controller is not None:
+            self.controller.note_admitted(job)
         return SubmitReceipt(job_id=job.job_id, provider=provider,
                              memory_mb=mem, parallelism=par,
                              n_invocations=len(suite_plan.invocations),
                              plan=chosen)
 
-    def _fleet(self, provider: str, parallelism: int) -> _Fleet:
-        key = (provider, parallelism)
+    def _fleet(self, provider: str, parallelism: int, *,
+               max_retries: Optional[int] = None) -> _Fleet:
+        # the default key shape is unchanged so historical fleet
+        # iteration order (and every golden digest) is preserved; only
+        # an explicit retry override (controller hedging) extends it
+        key = ((provider, parallelism) if max_retries is None
+               else (provider, parallelism, max_retries))
         if key not in self._fleets:
-            self._fleets[key] = _Fleet(provider, parallelism, self.cfg)
+            self._fleets[key] = _Fleet(provider, parallelism, self.cfg,
+                                       max_retries=max_retries)
         return self._fleets[key]
+
+    def _clock(self) -> float:
+        """The service-wide virtual clock: the furthest fleet clock."""
+        return max((f.clock_s for f in self._fleets.values()), default=0.0)
 
     # ---------------------------------------------------------------- run
     def run(self) -> ServiceReport:
         """Execute every queued job to completion (virtual time), then
         deliver results: per tenant in submission order, at delivery
         times that never precede the underlying completions."""
+        if self.controller is not None:
+            # round boundary, before the drain: renegotiate deadlines of
+            # queued at-risk jobs and release deferred jobs whose
+            # blocking incidents cleared (released jobs join this round)
+            self.controller.before_round(self._clock())
         batch: List[_JobExec] = []
         for key in sorted(self._fleets):
-            batch.extend(self._fleets[key].run(self.cfg))
+            batch.extend(self._fleets[key].run(self.cfg, self.controller))
         for ex in batch:
             ex.result = self._job_result(ex)
             self._queued_total -= 1
@@ -882,7 +1060,7 @@ class BenchmarkService:
             obs.monitor.evaluate(
                 max((r.end_s for r in results), default=0.0))
 
-        return ServiceReport(
+        report = ServiceReport(
             results=results,
             makespan_s=max((r.end_s for r in results), default=0.0),
             total_cost_usd=sum(r.cost_dollars for r in results),
@@ -892,6 +1070,12 @@ class BenchmarkService:
             cold_starts=sum(f.cold_starts for f in self._fleets.values()),
             preempted_jobs=[r.job_id for r in results if r.preempted],
             tenant_billed_s=tenant_billed)
+        if self.controller is not None:
+            # round boundary, after delivery: resume preempted jobs on a
+            # healthier provider under renegotiated terms (the
+            # continuations queue for the next run() call)
+            self.controller.on_round(report, self._clock())
+        return report
 
     # -------------------------------------------------------------- build
     def _job_result(self, ex: _JobExec) -> JobResult:

@@ -131,6 +131,51 @@ def test_drain_only_feeds_closed_windows_once():
     assert bank.drain(200.0) == []        # empty windows stay silent
 
 
+def _feed_ewma(det, vals, start_w=0):
+    out = []
+    for i, v in enumerate(vals):
+        ev = det.update(start_w + i, 10.0, (1, v, v, v))
+        if ev is not None:
+            out.append(ev)
+    return out
+
+
+def test_ewma_step_settling_is_one_episode():
+    """A step that settles at a new steady level must produce exactly
+    one alert episode: one fire at the step, one clear once the signal
+    has demonstrably settled, and silence afterwards — the released
+    baseline resumes from the frozen state's continuation (the adopted
+    recovery shadow), not the stale pre-incident mean, which would
+    re-fire immediately and flap forever."""
+    det = EWMAZScore(value="mean", alpha=0.3, z_on=4.0, z_off=1.5,
+                     warmup=5, settle_windows=4)
+    warm = [1.0, 1.1, 0.9, 1.05, 0.95, 1.0, 1.02, 0.98]
+    events = _feed_ewma(det, warm)
+    assert events == []
+    step = _feed_ewma(det, [5.0] * 40, start_w=len(warm))
+    assert [e["state"] for e in step] == ["fire", "clear"]
+    assert not det.alerting
+    # the new level is the new normal: more steady samples are silent,
+    # and a return toward the *old* level now reads as a fresh anomaly
+    assert _feed_ewma(det, [5.0] * 20, start_w=60) == []
+
+
+def test_ewma_recovery_to_old_level_still_clears_directly():
+    """The ordinary hysteresis release (signal returns within z_off of
+    the frozen baseline) is untouched by the settle path: incident ends,
+    one clear against the original mean, baseline resumes updating."""
+    det = EWMAZScore(value="mean", alpha=0.3, z_on=4.0, z_off=1.5,
+                     warmup=5, settle_windows=8)
+    warm = [1.0, 1.1, 0.9, 1.05, 0.95, 1.0]
+    assert _feed_ewma(det, warm) == []
+    evs = _feed_ewma(det, [6.0, 6.2, 1.0, 1.0], start_w=len(warm))
+    assert [e["state"] for e in evs] == ["fire", "clear"]
+    clear = evs[1]
+    assert clear["baseline"] == pytest.approx(det._mean, rel=0.5)
+    assert not det.alerting
+    assert _feed_ewma(det, [1.0] * 10, start_w=20) == []
+
+
 # -------------------------------------------- fleet percentile merging
 
 def test_report_merges_fleet_percentiles_by_bucket():

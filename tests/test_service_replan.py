@@ -1,0 +1,288 @@
+"""Online re-planning controller: zero-trigger bit-for-bit identity,
+planner re-plan monotonicity, and the closed-loop actions (migrate off
+sick providers, elastic-admission deferral + release, queued-deadline
+renegotiation, preempt-resume under renegotiated terms)."""
+import pytest
+
+from repro.core.experiment import victoriametrics_like_suite
+from repro.faas.chaos import TIMEOUT_STORM, ChaosConfig, FaultSpec
+from repro.obs import Observability, use_obs
+from repro.obs.incidents import incident_scope
+from repro.service import (BenchmarkService, DeadlineCostPlanner,
+                           InfeasiblePlanError, Job, PlannerConfig,
+                           ReplanConfig, ReplanController, ServiceConfig)
+
+
+def _suite(n=6):
+    full = victoriametrics_like_suite()
+    return {k: v for k, v in sorted(full.items())[:2 * n]
+            if not v.fs_write and v.base_seconds < 10.0}
+
+
+def _planner():
+    return DeadlineCostPlanner(PlannerConfig(
+        providers=("lambda", "gcf"), memory_mb=(2048,),
+        parallelism=(8, 16), repeat_plans=((5, 2),), autotune=False,
+        include_vm=False))
+
+
+def _storm(window_s=600.0, phase_s=300.0, rate=0.9, seed=0):
+    return ChaosConfig(intensity=1.0, seed=seed, faults=(
+        FaultSpec(TIMEOUT_STORM, rate=rate, period_s=10_000_000.0,
+                  window_s=window_s, phase_s=phase_s),))
+
+
+def _service(chaos, *, armed, seed=11, engine="fast"):
+    svc = BenchmarkService(
+        ServiceConfig(parallelism=8, seed=seed, engine=engine,
+                      chaos=({"lambda": chaos} if chaos else None)),
+        planner=_planner())
+    ctrl = None
+    if armed:
+        ctrl = svc.attach_controller(ReplanController(ReplanConfig()))
+    return svc, ctrl
+
+
+def _canary(i, wl, *, n_calls=8):
+    return Job(job_id=f"canary-{i}", tenant="canary", workloads=wl,
+               n_calls=n_calls, repeats_per_call=2, seed=100 + i,
+               metadata={"pin": True})
+
+
+def _managed(jid, tenant, wl, **kw):
+    kw.setdefault("n_calls", 5)
+    kw.setdefault("repeats_per_call", 2)
+    kw.setdefault("deadline_s", 4000.0)
+    kw.setdefault("budget_usd", 2.0)
+    return Job(job_id=jid, tenant=tenant, workloads=wl, **kw)
+
+
+def _run_rounds(svc, wl, rounds):
+    digests = []
+    for rnd in range(rounds):
+        svc.submit(_canary(rnd, wl), provider="lambda")
+        for j in range(2):
+            svc.submit(_managed(f"job-{rnd}{j}", f"t{j}", wl,
+                                seed=200 + rnd * 10 + j))
+        digests.append(svc.run().digest())
+    return digests
+
+
+# ------------------------------------------------- zero-trigger identity
+@pytest.mark.parametrize("engine", ["fast", "reference"])
+def test_zero_trigger_identity(engine):
+    """The hard invariant: with the controller armed but nothing firing
+    (zero chaos, calm SLOs) every schedule replays bit-for-bit against
+    the unarmed service — under both scheduler cores.  The controller's
+    event log must also be empty: it watched, it never acted."""
+    wl = _suite(4)
+    rounds = 2
+    with use_obs(Observability.monitoring()):
+        svc, _ = _service(None, armed=False, engine=engine)
+        static = _run_rounds(svc, wl, rounds)
+    with use_obs(Observability.monitoring()):
+        svc, ctrl = _service(None, armed=True, engine=engine)
+        armed = _run_rounds(svc, wl, rounds)
+    assert armed == static
+    assert ctrl.events == []
+    assert ctrl.held == []
+    assert ctrl.summary()["open_triggers"] == []
+
+
+# ----------------------------------------------- replan() monotonicity
+def test_replan_deadline_monotone_in_cost():
+    """Raising the deadline can only relax the constraint set, so the
+    chosen plan's cost must be non-increasing in the deadline — with and
+    without a live slowdown re-pricing."""
+    wl = _suite(6)
+    planner = _planner()
+    for slow in (None, {"lambda": 2.0, "gcf": 1.1}):
+        prev = None
+        for dl in (150.0, 300.0, 600.0, 1200.0, 4000.0):
+            try:
+                c = planner.replan(wl, deadline_s=dl, seed=3,
+                                   slowdown=slow)
+            except InfeasiblePlanError:
+                assert prev is None, \
+                    "feasible at a tighter deadline but not a looser one"
+                continue
+            if prev is not None:
+                assert c.predicted_cost_usd <= prev + 1e-12
+            prev = c.predicted_cost_usd
+
+
+def test_replan_sunk_accounting():
+    """Completed benchmarks and billed cost are sunk: the continuation
+    plan covers only the remaining suite and is judged against the
+    remaining budget/deadline."""
+    wl = _suite(6)
+    planner = _planner()
+    full = planner.replan(wl, deadline_s=4000.0, budget_usd=2.0, seed=3)
+    done = sorted(wl)[:len(wl) // 2]
+    part = planner.replan(wl, completed=done, spent_usd=0.5,
+                          elapsed_s=100.0, deadline_s=4000.0,
+                          budget_usd=2.0, seed=3)
+    assert part.predicted_cost_usd < full.predicted_cost_usd
+    assert part.predicted_wall_s <= full.predicted_wall_s
+    # a budget already spent below the remaining plan's cost is infeasible
+    with pytest.raises(InfeasiblePlanError):
+        planner.replan(wl, completed=done, spent_usd=1.999,
+                       elapsed_s=100.0, budget_usd=2.0, seed=3)
+    with pytest.raises(ValueError):
+        planner.replan(wl, completed=sorted(wl), seed=3)
+
+
+# -------------------------------------------- admission directives (unit)
+def _armed_service_no_obs():
+    """Controller without a monitor: trigger state can be injected
+    directly and `_ingest` stays inert, which isolates the directive
+    logic from the alert plumbing."""
+    svc = BenchmarkService(ServiceConfig(parallelism=8, seed=5),
+                           planner=_planner())
+    ctrl = svc.attach_controller(ReplanController(ReplanConfig()))
+    ctrl._mon = None    # detach any ambient global monitor
+    return svc, ctrl
+
+
+def _open_trigger(ctrl, provider, trigger="provider_degraded"):
+    key = ("error-rate", (("provider", provider),), None)
+    ctrl._open[key] = (trigger, provider)
+
+
+def test_never_migrates_to_sick_provider():
+    """Monotonicity of the steering action: an open trigger on provider
+    A means no migrate directive ever includes A."""
+    wl = _suite(4)
+    svc, ctrl = _armed_service_no_obs()
+    _open_trigger(ctrl, "lambda")
+    d = ctrl.admission(_managed("m", "t", wl), provider="lambda",
+                       providers=("lambda", "gcf"))
+    assert d == {"providers": ("gcf",)}
+    assert "lambda" not in d["providers"]
+    # a pinned canary rides the storm untouched
+    assert ctrl.admission(_canary(0, wl), provider="lambda",
+                          providers=None) is None
+    # no healthy placement at all -> elastic-admission deferral
+    d = ctrl.admission(_managed("m2", "t", wl), provider="lambda",
+                       providers=("lambda",))
+    assert "defer" in d
+
+
+def test_hedge_directive_for_unmanaged_storm_jobs():
+    wl = _suite(4)
+    svc, ctrl = _armed_service_no_obs()
+    _open_trigger(ctrl, "lambda", trigger="timeout_storm")
+    plain = Job(job_id="u", tenant="t", workloads=wl, n_calls=5,
+                repeats_per_call=2, seed=9)
+    d = ctrl.admission(plain, provider="lambda", providers=None)
+    assert d == {"retries": ctrl.cfg.hedge_retries}
+    # healthy provider: untouched
+    assert ctrl.admission(plain, provider="gcf", providers=None) is None
+
+
+def test_deferred_job_released_after_max_rounds():
+    """A held job is resubmitted once its blocking incident clears or
+    after max_defer_rounds — it is never silently dropped."""
+    wl = _suite(4)
+    svc, ctrl = _armed_service_no_obs()
+    _open_trigger(ctrl, "lambda")
+    job = _managed("held", "t", wl, seed=13)
+    d = ctrl.admission(job, provider="lambda", providers=("lambda",))
+    ctrl.hold(job, reason=d["defer"],
+              kwargs=dict(providers=("lambda",)))
+    assert [h.job.job_id for h in ctrl.held] == ["held"]
+    ctrl.before_round(0.0)          # round 1: still blocked
+    assert [h.job.job_id for h in ctrl.held] == ["held"]
+    ctrl.before_round(0.0)          # round 2: forced release
+    assert ctrl.held == []
+    assert any("held" in f.jobs for f in svc._fleets.values())
+    kinds = [e["event"] for e in ctrl.events]
+    assert kinds.count("defer") == 1 and kinds.count("release") == 1
+
+
+def test_queued_deadline_renegotiated_under_slowdown(monkeypatch):
+    """A queued job on a sick fleet whose measured slowdown predicts a
+    deadline miss gets a renegotiated deadline (recorded event) instead
+    of a hard breach."""
+    wl = _suite(4)
+    svc = BenchmarkService(ServiceConfig(parallelism=8, seed=5))
+    ctrl = svc.attach_controller(ReplanController(ReplanConfig()))
+    ctrl._mon = None    # detach any ambient global monitor
+    monkeypatch.setattr(ctrl, "measured_slowdown",
+                        lambda prov: 3.0 if prov == "lambda" else 1.0)
+    svc.submit(Job(job_id="q", tenant="t", workloads=wl, n_calls=5,
+                   repeats_per_call=2, seed=21, deadline_s=100.0),
+               provider="lambda")
+    _open_trigger(ctrl, "lambda")   # incident opens after admission
+    ctrl.before_round(0.0)
+    key = next(k for k in svc._fleets if k[0] == "lambda")
+    got = svc._fleets[key].jobs["q"].job.deadline_s
+    assert got == pytest.approx(ctrl.cfg.margin * 3.0 * 100.0)
+    ev = [e for e in ctrl.events if e["event"] == "deadline_renegotiated"]
+    assert len(ev) == 1
+    assert ev[0]["job"] == "q" and ev[0]["old_deadline_s"] == 100.0
+
+
+# ----------------------------------------------- closed loop integration
+def test_storm_opens_triggers_and_migrates():
+    """Round 1's canary runs through a lambda timeout storm and opens
+    provider-scoped triggers; round 2's managed jobs are steered to the
+    healthy provider — never to the stormy one."""
+    wl = _suite(6)
+    with use_obs(Observability.monitoring()) as obs:
+        svc, ctrl = _service(_storm(window_s=2000.0, phase_s=0.0),
+                             armed=True)
+        svc.submit(_canary(0, wl, n_calls=12), provider="lambda")
+        svc.run()
+        assert "lambda" in ctrl.sick_providers()
+        trig = {e["trigger"] for e in ctrl.events
+                if e["event"] == "trigger_open"}
+        assert trig & {"timeout_storm", "provider_degraded"}
+        # open incidents carry the deferral justification + scope
+        incs = ctrl.open_incidents()
+        assert incs
+        assert "lambda" in incident_scope(incs[0])["providers"]
+        svc.submit(_managed("m1", "t1", wl, seed=31))
+        rep = svc.run()
+        by_id = {r.job_id: r for r in rep.results}
+        assert by_id["m1"].provider == "gcf"
+        assert any(e["event"] == "migrate" for e in ctrl.events)
+        # the alert feed is cumulative: chunked reads == one-shot read
+        mon = obs.monitor
+        full, _ = mon.alert_feed()
+        c = (0, 0)
+        chunks = []
+        for _ in range(3):
+            rows, c = mon.alert_feed(c)
+            chunks.extend(rows)
+        rows, c = mon.alert_feed(c)
+        chunks.extend(rows)
+        assert sorted(map(str, chunks)) == sorted(map(str, full))
+
+
+def test_preempted_job_resumed_on_healthy_provider():
+    """A budget-preempted job is re-planned (sunk cost + completed
+    benchmarks excluded, renegotiated terms) and its continuation runs
+    on a provider without an open trigger — never the sick one."""
+    wl = _suite(6)
+    with use_obs(Observability.monitoring()):
+        svc, ctrl = _service(_storm(window_s=2000.0, phase_s=0.0),
+                             armed=True)
+        svc.submit(_canary(0, wl, n_calls=25), provider="lambda")
+        svc.submit(_managed("tight", "t0", wl, seed=7,
+                            budget_usd=0.016))
+        rep = svc.run()
+        assert "tight" in rep.preempted_jobs
+        resumes = [e for e in ctrl.events if e["event"] == "resume"]
+        assert len(resumes) == 1
+        assert resumes[0]["continuation"] == "tight~r"
+        assert resumes[0]["provider"] not in ctrl.sick_providers()
+        rep2 = svc.run()
+        by_id = {r.job_id: r for r in rep2.results}
+        assert by_id["tight~r"].status == "completed"
+        assert by_id["tight~r"].provider == resumes[0]["provider"]
+        # the continuation covers exactly the benchmarks the original
+        # never finished
+        orig = {r.job_id: r for r in rep.results}["tight"]
+        assert set(by_id["tight~r"].executed_benchmarks).isdisjoint(
+            orig.executed_benchmarks)

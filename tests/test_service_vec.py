@@ -89,6 +89,34 @@ def test_budget_preemption_differential(quantum):
     assert poor.status == "preempted" and poor.skipped_invocations > 0
 
 
+def _preempt_fleet(engine):
+    wl = _suite(6)
+    svc = BenchmarkService(ServiceConfig(parallelism=64, engine=engine,
+                                         schedule_quantum=64))
+    for i in range(96):
+        svc.submit(_job(f"b{i:02d}", f"t{i % 8}", wl, seed=100 + i,
+                        budget_usd=0.0005), provider="lambda")
+    for i in range(32):
+        svc.submit(_job(f"free{i:02d}", f"t{i % 8}", wl, seed=500 + i),
+                   provider="lambda")
+    return svc.run()
+
+
+def test_preempt_heavy_fleet_digests_equal():
+    """96 budget-capped jobs all crossing mid-run: the exact
+    budget-crossing shadow must keep the vector core on the wave path
+    (no scalar fallback) and replay the reference schedule bit-for-bit,
+    preempting exactly the capped jobs."""
+    reset_fallback_log()
+    rep_f = _preempt_fleet("fast")
+    assert not list(get_fallback_log())
+    rep_r = _preempt_fleet("reference")
+    assert rep_f.digest() == rep_r.digest()
+    assert rep_f.preempted_jobs == rep_r.preempted_jobs
+    assert len(rep_f.preempted_jobs) == 96
+    assert all(j.startswith("b") for j in rep_f.preempted_jobs)
+
+
 def test_quantum_batching_is_engine_invariant():
     """A quantum > 1 changes the dispatch interleave (jobs' lanes go out
     in contiguous blocks) but both cores must agree on the new schedule
